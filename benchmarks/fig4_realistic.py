@@ -1,0 +1,83 @@
+"""Paper Figures 4–9 surrogate: 'real dataset' shaped problems.
+
+The container is offline, so CIFAR-100 / SVHN / Dilbert / Guillermo /
+OVA-Lung / WESAD cannot be downloaded. The paper's qualitative claims are
+spectrum-driven, so we reproduce each dataset's (n, d, c) and a matched
+spectral profile (power-law + noise floor, typical of image/RF-feature
+Gram spectra) and run the same solver comparison. This is stated in
+EXPERIMENTS.md — iteration counts and sketch sizes are comparable;
+absolute CPU seconds are not (64-core node in the paper vs 1 core here).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    AdaptiveConfig,
+    adaptive_solve,
+    cg_solve,
+    direct_solve,
+    effective_dimension,
+    from_least_squares,
+)
+from .common import emit, timed
+
+# (name, n, d, c) scaled ~1/8 in n,d to fit the 1-core budget; spectra:
+# power-law exponent fit to typical image-feature Gram decay.
+DATASETS = [
+    ("cifar100-like", 7500, 768, 10, 1.2),
+    ("svhn-like", 12288, 768, 10, 1.0),
+    ("dilbert-like", 2500, 500, 5, 0.8),
+    ("guillermo-like", 5000, 1074, 2, 1.0),
+    ("ova-lung-like", 1545, 1367, 2, 0.6),   # n < d ⇒ dual regime
+    ("wesad-like", 16384, 1250, 2, 1.4),     # RFF features
+]
+
+
+def powerlaw_problem(name, n, d, c, alpha, nu, seed=0):
+    key = jax.random.PRNGKey(seed)
+    kU, kV, ky = jax.random.split(key, 3)
+    r = min(n, d)
+    sv = (jnp.arange(1, r + 1, dtype=jnp.float32) ** (-alpha))
+    sv = sv / sv[0] + 1e-4
+    U, _ = jnp.linalg.qr(jax.random.normal(kU, (n, r)))
+    V, _ = jnp.linalg.qr(jax.random.normal(kV, (d, r)))
+    A = (U * sv[None, :]) @ V.T
+    Y = jax.random.normal(ky, (n, c))
+    return from_least_squares(A, Y, nu), sv
+
+
+def run(nu=1e-2):
+    rows = []
+    for name, n, d, c, alpha in DATASETS:
+        q, sv = powerlaw_problem(name, n, d, c, alpha, nu)
+        d_e = float(effective_dimension(sv, nu))
+        x_star, t_direct = timed(direct_solve, q)
+        err = lambda x: float(jnp.linalg.norm(x - x_star) /
+                              jnp.linalg.norm(x_star))
+        (x_cg, _), t_cg = timed(cg_solve, q, jnp.zeros_like(q.b), 300)
+        res, t_ada = timed(
+            lambda: adaptive_solve(
+                q, AdaptiveConfig(method="pcg", sketch="sjlt",
+                                  max_iters=150, tol=1e-8),
+                key=jax.random.PRNGKey(1),
+            )
+        )
+        rows.append(dict(
+            fig="fig4-9", dataset=name, n=n, d=d, c=c, d_e=round(d_e),
+            direct_s=round(t_direct, 3), cg_s=round(t_cg, 3),
+            cg_err=f"{err(x_cg):.2e}", ada_s=round(t_ada, 3),
+            ada_iters=res.iters, ada_m=res.m_final,
+            ada_err=f"{err(res.x):.2e}",
+            ada_faster_than_direct=t_ada < t_direct,
+        ))
+    for r in rows:
+        emit(r)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

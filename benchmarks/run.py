@@ -1,0 +1,62 @@
+"""Benchmark entry point: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig1,table1,...] [--fast]
+
+Prints CSV-ish rows (``k=v,...``) per benchmark; see each module's
+docstring for the reproduction target it validates.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma list: fig1,table1,table2,table3,fig4,kernels")
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller grids (CI-scale)")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    from . import (fig1_synthetic, fig4_realistic, kernels_bench,
+                   table1_mdelta, table2_complexity, table3_polyak)
+
+    jobs = {
+        "fig1": lambda: fig1_synthetic.run(
+            n=2048 if args.fast else 8192, d=256 if args.fast else 1024,
+            nus=(1e-1, 1e-2) if args.fast else (1e-1, 1e-2, 1e-3),
+        ),
+        "table1": lambda: table1_mdelta.run(
+            n=1024 if args.fast else 4096, d=128 if args.fast else 512,
+        ),
+        "table2": lambda: table2_complexity.run(
+            n=2048 if args.fast else 8192, d=256 if args.fast else 1024,
+        ),
+        "table3": table3_polyak.run,
+        "fig4": fig4_realistic.run,
+        "kernels": kernels_bench.run,
+    }
+    t_all = time.time()
+    failures = []
+    for name, fn in jobs.items():
+        if only and name not in only:
+            continue
+        print(f"\n=== {name} ===", flush=True)
+        t0 = time.time()
+        try:
+            fn()
+        except Exception as e:  # keep the harness going, report at the end
+            failures.append((name, repr(e)))
+            print(f"bench={name},status=ERROR,err={e!r}", flush=True)
+        print(f"bench={name},elapsed_s={time.time()-t0:.1f}", flush=True)
+    print(f"\ntotal_elapsed_s={time.time()-t_all:.1f}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Paper Table 1 / Theorems 5.1–5.2: measured critical sketch sizes vs the
+formulas. For each embedding, find (by doubling) the smallest m with
+median ‖C_S − I‖₂ ≤ √ρ and compare to the theoretical m_δ/ρ — the theory
+is an upper bound, so measured/theory ≤ 1 is the check; the *scaling* in
+d_e (not d) is the paper's point and is verified across two ν values."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import effective_dimension, make_sketch
+from repro.core.effective_dim import (
+    m_delta_gaussian,
+    m_delta_sjlt,
+    m_delta_srht,
+)
+from .common import emit, synthetic_problem
+
+
+def _deviation(q, m, kind, seed):
+    sk = make_sketch(kind, m, q.n, jax.random.PRNGKey(seed))
+    SA = sk.apply(q.A)
+    H = q.A.T @ q.A + (q.nu**2) * jnp.diag(q.lam_diag)
+    H_S = SA.T @ SA + (q.nu**2) * jnp.diag(q.lam_diag)
+    w, V = jnp.linalg.eigh(H)
+    Hmh = (V * (w**-0.5)[None, :]) @ V.T
+    C = Hmh @ H_S @ Hmh
+    return float(jnp.linalg.norm(C - jnp.eye(q.d), 2))
+
+
+def run(n=4096, d=512, rho=0.25, reps=3):
+    # Consistency note: the measured test is ‖C_S−I‖ ≤ √ρ, but Theorem 5.2
+    # guarantees deviation 2√ρ'+ρ' at m = m_δ/ρ'. For the Gaussian bound we
+    # therefore invert 2√ρ'+ρ' = √ρ (s² + 2s − √ρ = 0 ⇒ s = √(1+√ρ) − 1)
+    # so the theory column is an apples-to-apples upper bound; the SRHT and
+    # SJLT rows use the loose O(·) Table-1 forms directly.
+    import math as _m
+    s_g = _m.sqrt(1.0 + _m.sqrt(rho)) - 1.0
+    rho_g = s_g * s_g
+    theory = {
+        "gaussian": lambda de: m_delta_gaussian(de) / rho_g,
+        "srht": lambda de: m_delta_srht(de, n) / rho,
+        "sjlt": lambda de: m_delta_sjlt(de) / rho,
+    }
+    rows = []
+    for nu in [3e-1, 3e-2]:
+        q, sv = synthetic_problem(n, d, nu, decay=0.98)
+        d_e = float(effective_dimension(sv, nu))
+        for kind in ["gaussian", "srht", "sjlt"]:
+            m = 8
+            while m <= n:
+                devs = [_deviation(q, m, kind, s) for s in range(reps)]
+                if float(np.median(devs)) <= np.sqrt(rho):
+                    break
+                m *= 2
+            # doubling resolution: the true critical m lies in (m/2, m],
+            # so the theory upper bound holds iff m/2 ≤ m_theory
+            rows.append(dict(
+                table="table1", kind=kind, nu=nu, d_e=round(d_e, 1),
+                m_measured=m, m_theory=round(theory[kind](d_e)),
+                within_bound=m / 2 <= theory[kind](d_e) * 1.01,
+            ))
+    for r in rows:
+        emit(r)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""Batched serving example: prefill a batch of prompts, then greedy-decode
+continuations with the KV-cache/state machinery (works for every assigned
+arch — attention caches, ring buffers, RG-LRU and RWKV states).
+
+    PYTHONPATH=src python examples/serve_batch.py [--arch rwkv6-3b]
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.serve.step import greedy_generate
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-27b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    from repro.models import init_params
+
+    params = init_params(jax.random.PRNGKey(0), cfg, max_seq=128)
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab
+    )
+    enc = None
+    if cfg.n_enc_layers:
+        enc = jax.random.normal(
+            jax.random.PRNGKey(2), (args.batch, cfg.enc_seq, cfg.d_model)
+        )
+    t0 = time.perf_counter()
+    out = greedy_generate(
+        params, cfg, prompts, args.new_tokens,
+        max_seq=args.prompt_len + args.new_tokens + 1, enc_feats=enc,
+    )
+    dt = time.perf_counter() - t0
+    toks = args.batch * args.new_tokens
+    print(f"arch={cfg.name}  generated {out.shape} in {dt:.2f}s "
+          f"({toks/dt:.1f} tok/s on CPU)")
+    print("sample continuation ids:", out[0, :12].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""End-to-end driver: train a ~100M-parameter qwen2-family model for a few
+hundred steps on the synthetic pipeline, with checkpointing + resume.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+(~100M params: d_model=512, 8 layers, vocab=32k — the full launcher
+machinery: sharding, AdamW, remat, watchdog, preemption handler.)
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro.configs import get_config
+from repro.data.pipeline import SyntheticLM
+from repro.dist.sharding import param_specs
+from repro.ft import CheckpointManager, PreemptionHandler, StragglerWatchdog
+from repro.launch.mesh import make_host_mesh
+from repro.models import init_params
+from repro.train import AdamWConfig, TrainConfig, init_opt_state
+from repro.train.step import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(
+        get_config("qwen2-0.5b"),
+        name="qwen2-100m",
+        n_layers=8,
+        d_model=512,
+        n_heads=8,
+        n_kv_heads=2,
+        head_dim=64,
+        d_ff=2048,
+        vocab=32_768,
+    )
+    print(f"model: {cfg.name}  params={cfg.param_count()/1e6:.0f}M")
+
+    mesh = make_host_mesh()
+    params = init_params(jax.random.PRNGKey(0), cfg, max_seq=args.seq)
+    p_sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(cfg, params, mesh))
+    params = jax.device_put(params, p_sh)
+    opt = init_opt_state(params)
+
+    tcfg = TrainConfig(
+        opt=AdamWConfig(lr=3e-4, warmup_steps=50, total_steps=args.steps),
+        num_microbatches=2,
+        compute_dtype=jnp.bfloat16,
+    )
+    step_fn = jax.jit(make_train_step(cfg, tcfg), donate_argnums=(0, 1))
+    data = SyntheticLM(vocab=cfg.vocab, batch=args.batch, seq_len=args.seq)
+    ckpt = CheckpointManager(args.ckpt_dir, keep=2)
+    wd = StragglerWatchdog()
+
+    start = 0
+    if ckpt.latest_step():
+        (params, opt), extra = ckpt.restore((params, opt))
+        data.restore(extra["data"])
+        start = extra["step"]
+        print(f"resumed at step {start}")
+
+    with mesh, PreemptionHandler() as pre:
+        for step in range(start, args.steps):
+            t0 = time.perf_counter()
+            batch = jax.tree.map(jnp.asarray, next(data))
+            params, opt, m = step_fn(params, opt, batch)
+            wd.record(time.perf_counter() - t0)
+            if (step + 1) % 25 == 0:
+                print(f"step {step+1:4d}  loss={float(m['loss']):.4f}  "
+                      f"lr={float(m['lr']):.2e}  "
+                      f"({time.perf_counter()-t0:.2f}s/step)")
+            if (step + 1) % 100 == 0 or pre.should_stop:
+                ckpt.save(step + 1, (params, opt),
+                          extra={"step": step + 1, "data": data.state()},
+                          blocking=False)
+            if pre.should_stop:
+                break
+    ckpt.wait()
+    print("done; final loss", float(m["loss"]))
+
+
+if __name__ == "__main__":
+    main()

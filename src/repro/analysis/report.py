@@ -1,0 +1,88 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline from the sweep artifacts.
+
+    PYTHONPATH=src python -m repro.analysis.report > EXPERIMENTS_generated.md
+
+The §Dry-run table comes from results/dryrun (the production programs:
+scanned layers, real microbatching — proves compile + memory); §Roofline
+comes from results/dryrun_analysis (unrolled scans, nmb=1 — accurate
+FLOP/byte/collective accounting; see the note in the section header).
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import SHAPES
+from .roofline import analyze_record, markdown_table
+
+
+def dryrun_table(results_dir="results/dryrun") -> str:
+    rows = []
+    for f in sorted(Path(results_dir).glob("*/*.json")):
+        r = json.loads(f.read_text())
+        if r["status"] == "skipped":
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | skipped | — | — "
+                f"| — | {r['reason'][:58]} |"
+            )
+            continue
+        if r["status"] != "ok":
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | ERROR | — | — "
+                f"| — | {r.get('error','')[:58]} |"
+            )
+            continue
+        mem = r["memory"]
+        args_gb = (mem.get("argument_size_in_bytes") or 0) / 2**30
+        temp_gb = (mem.get("temp_size_in_bytes") or 0) / 2**30
+        coll_gb = r["collectives"]["total_bytes"] / 2**30
+        n_coll = sum(v["count"] for v in r["collectives"]["by_op"].values())
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok "
+            f"| {args_gb:.2f} | {temp_gb:.2f} | {coll_gb:.2f} ({n_coll}) "
+            f"| compile {r['compile_s']}s |"
+        )
+    hdr = (
+        "| arch | shape | mesh | status | args GiB/dev | temp GiB/dev | "
+        "collective GiB/dev (#ops) | notes |\n|---|---|---|---|---|---|---|---|\n"
+    )
+    return hdr + "\n".join(rows) + "\n"
+
+
+def roofline_section(results_dir="results/dryrun_analysis") -> str:
+    recs = []
+    for f in sorted(Path(results_dir).glob("single/*.json")):
+        r = analyze_record(json.loads(f.read_text()))
+        if r:
+            recs.append(r)
+    out = [markdown_table(recs)]
+    out.append("\nPer-cell bottleneck sentences:\n")
+    for r in recs:
+        if r.bottleneck == "memory":
+            s = ("increase arithmetic intensity: fuse/avoid activation "
+                 "round-trips, larger per-device microbatch, bf16 cache")
+            if r.step_kind == "decode":
+                s = ("decode is weight/cache-streaming bound — batch more "
+                     "sequences per chip or quantize weights/KV to int8")
+            if "rwkv" in r.arch and r.step_kind != "decode":
+                s = ("the O(T) recurrence streams the 40×64×64 state per "
+                     "token — chunked wkv turns it into MXU matmuls")
+        elif r.bottleneck == "collective":
+            s = ("reduce resharding: co-shard embed/logits with the attention "
+                 "layout; overlap FSDP gathers with compute; int8 grad RS")
+        else:
+            s = "compute-bound — already at the MXU roofline knee"
+        out.append(f"* **{r.arch}/{r.shape}** → {r.bottleneck}-bound; {s}.\n")
+    return "".join(out)
+
+
+def main():
+    print("## §Dry-run (production programs, 16×16 and 2×16×16 meshes)\n")
+    print(dryrun_table())
+    print("\n## §Roofline (single-pod, analysis sweep)\n")
+    print(roofline_section())
+
+
+if __name__ == "__main__":
+    main()

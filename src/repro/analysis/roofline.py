@@ -1,0 +1,177 @@
+"""Roofline analysis from the dry-run artifacts (TPU v5e-class constants).
+
+Per (arch × shape × mesh) cell:
+    compute    = HLO_FLOPs        / (chips · 197e12 FLOP/s bf16)
+    memory     = HLO_bytes        / (chips · 819e9  B/s HBM)
+    collective = collective_bytes / (chips · 50e9   B/s per ICI link)
+
+Conventions (validated against the compiled artifacts):
+* ``cost_analysis()`` on a GSPMD-partitioned executable reports the
+  *per-device* program, so FLOPs/bytes are multiplied by the device count
+  to get cluster totals, then divided back per the formulas — i.e. the
+  terms below use per-device values directly (chips cancels).
+* collective_bytes comes from summing collective op output sizes in the
+  optimized (post-partitioning) HLO — also per-device.
+* MODEL_FLOPS = 6·N·D for training (fwd 2ND + bwd 4ND), 2·N_active·D for
+  inference, with D = global tokens processed by the step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+
+from repro.configs import SHAPES, get_config
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # B/s / chip
+ICI_BW = 50e9            # B/s / link
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    step_kind: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    hlo_flops_total: float
+    useful_ratio: float
+    bottleneck: str
+    step_time_s: float       # max of the three terms (no-overlap bound)
+    roofline_frac: float     # compute_s / step_time_s (MFU-like upper bound)
+    mfu: float               # model_flops / (chips·peak·step_time)
+    per_device_bytes: dict
+
+    def row(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def model_flops_for(arch: str, shape: str) -> float:
+    cfg = get_config(arch)
+    spec = SHAPES[shape]
+    n_active = cfg.active_param_count()
+    n_total = cfg.param_count()
+    if spec.step == "train":
+        tokens = spec.global_batch * spec.seq_len
+        return 6.0 * n_active * tokens
+    if spec.step == "prefill":
+        tokens = spec.global_batch * spec.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * spec.global_batch
+
+
+def scan_corrections(arch: str, shape: str, chips: int) -> tuple[float, float]:
+    """Analytic per-device (flops, bytes) for time-major ``lax.scan`` bodies
+    that XLA's cost model counts once (the layer scans are unrolled in the
+    analysis sweep, but rwkv6's wkv recurrence scans over T and cannot be
+    unrolled at T = 4k–500k). Per step and head: y = Sᵀr (2·hd²), outer
+    k·vᵀ (hd²), decay·S + add (2·hd²) ⇒ ≈5·hd² flops; state RW ⇒ ≈8·hd²
+    bytes (f32). Training doubles for the backward scan. Everything else
+    (attention, MLPs, RG-LRU associative_scan) is fully counted."""
+    cfg = get_config(arch)
+    if "rwkv" not in cfg.pattern:
+        return 0.0, 0.0
+    spec = SHAPES[shape]
+    T = spec.seq_len if spec.step in ("train", "prefill") else 1
+    if T <= 1:
+        return 0.0, 0.0
+    dp = max(chips // 16, 1)  # model=16 on both production meshes
+    b_loc = max(spec.global_batch // dp, 1)
+    H, hd = cfg.n_rwkv_heads, cfg.rwkv_head_dim
+    per_step_flops = 5.0 * hd * hd * H * b_loc
+    per_step_bytes = 8.0 * hd * hd * H * b_loc  # f32 state read+write
+    mult = 2.0 if spec.step == "train" else 1.0  # bwd replays the scan
+    extra_steps = (T - 1) * cfg.n_layers * mult
+    return extra_steps * per_step_flops, extra_steps * per_step_bytes
+
+
+def analyze_record(rec: dict) -> Roofline | None:
+    if rec.get("status") != "ok":
+        return None
+    chips = rec["n_devices"]
+    # prefer the instruction-level dot count (cost_analysis() diverges on
+    # large SPMD modules — see analysis/hloflops.py); keep the larger of
+    # the two (each can only under-count)
+    flops_dev = max(rec.get("hlo_dot_flops") or 0.0, rec["flops"] or 0.0)
+    bytes_dev = rec["bytes_accessed"] or 0.0
+    coll_dev = rec["collectives"]["total_bytes"]
+    cf, cb = scan_corrections(rec["arch"], rec["shape"], chips)
+    flops_dev += cf
+    bytes_dev += cb
+
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    collective_s = coll_dev / ICI_BW
+
+    mf = model_flops_for(rec["arch"], rec["shape"])
+    hlo_total = flops_dev * chips
+    useful = mf / hlo_total if hlo_total else 0.0
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    step_time = max(terms.values())
+    mfu = mf / (chips * PEAK_FLOPS * step_time) if step_time else 0.0
+    return Roofline(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        step_kind=rec.get("step_kind", "?"),
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        model_flops=mf, hlo_flops_total=hlo_total, useful_ratio=useful,
+        bottleneck=bottleneck, step_time_s=step_time,
+        roofline_frac=compute_s / step_time if step_time else 0.0,
+        mfu=mfu,
+        per_device_bytes=rec.get("memory", {}),
+    )
+
+
+def load_all(results_dir: str | Path = "results/dryrun") -> list[Roofline]:
+    out = []
+    for f in sorted(Path(results_dir).glob("*/*.json")):
+        r = analyze_record(json.loads(f.read_text()))
+        if r:
+            out.append(r)
+    return out
+
+
+def markdown_table(rows: list[Roofline]) -> str:
+    hdr = (
+        "| arch | shape | mesh | step | compute (s) | memory (s) | "
+        "collective (s) | bottleneck | useful FLOPs | MFU bound |\n"
+        "|---|---|---|---|---|---|---|---|---|---|\n"
+    )
+    lines = []
+    for r in rows:
+        lines.append(
+            f"| {r.arch} | {r.shape} | {r.mesh} | {r.step_kind} "
+            f"| {r.compute_s:.3e} | {r.memory_s:.3e} | {r.collective_s:.3e} "
+            f"| **{r.bottleneck}** | {r.useful_ratio:.2f} | {r.mfu:.3f} |"
+        )
+    return hdr + "\n".join(lines) + "\n"
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    rows = [r for r in load_all(args.dir) if r.mesh == args.mesh]
+    print(markdown_table(rows))
+    worst = sorted(rows, key=lambda r: r.mfu)[:5]
+    print("\nworst MFU cells:")
+    for r in worst:
+        print(f"  {r.arch}/{r.shape}: mfu={r.mfu:.4f} bn={r.bottleneck}")
+    coll = sorted(rows, key=lambda r: -(r.collective_s / max(r.step_time_s, 1e-30)))[:5]
+    print("most collective-bound:")
+    for r in coll:
+        print(f"  {r.arch}/{r.shape}: coll/step={r.collective_s/r.step_time_s:.2f}")
+
+
+if __name__ == "__main__":
+    main()

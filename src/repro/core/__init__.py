@@ -1,0 +1,50 @@
+"""Core library: the paper's adaptive sketching-based solvers.
+
+Layout:
+  sketches.py       Gaussian / SRHT / SJLT embeddings (+ FWHT reference)
+  precond.py        H_S factorizations (Cholesky primal / Woodbury dual)
+  quadratic.py      problem container (matrix-free H·v, ∇f)
+  solvers.py        IHS / PCG / Polyak-IHS / plain CG
+  adaptive.py       Algorithm 4.1 / 4.2 (host-orchestrated doubling)
+  adaptive_padded.py  beyond-paper single-XLA-program masked adaptivity
+  effective_dim.py  d_e and critical sketch sizes (Table 1 / Thm 5.1)
+  distributed.py    row-sharded A: block sketches + GSPMD solver steps
+"""
+
+from .adaptive import AdaptiveConfig, AdaptiveResult, adaptive_solve, k_max
+from .effective_dim import (
+    effective_dimension,
+    effective_dimension_exact,
+    exp_decay_singular_values,
+    m_delta_gaussian,
+    m_delta_sjlt,
+    m_delta_srht,
+)
+from .precond import SketchedPrecond, factorize
+from .quadratic import Quadratic, direct_solve, from_least_squares
+from .sketches import Sketch, fwht, make_sketch
+from .solvers import cg_solve, newton_solve, run_fixed
+
+__all__ = [
+    "AdaptiveConfig",
+    "AdaptiveResult",
+    "adaptive_solve",
+    "k_max",
+    "effective_dimension",
+    "effective_dimension_exact",
+    "exp_decay_singular_values",
+    "m_delta_gaussian",
+    "m_delta_sjlt",
+    "m_delta_srht",
+    "SketchedPrecond",
+    "factorize",
+    "Quadratic",
+    "direct_solve",
+    "from_least_squares",
+    "Sketch",
+    "fwht",
+    "make_sketch",
+    "cg_solve",
+    "newton_solve",
+    "run_fixed",
+]

@@ -1,0 +1,199 @@
+"""Adaptive sketch-size solvers — Algorithm 4.1 (prototype) / 4.2 (PCG).
+
+The adaptive mechanism needs data-dependent *shape* changes (sketch size
+doubles), which cannot live inside one jitted graph with dynamic shapes.
+Production design (host-orchestrated, bounded compilation):
+
+* The outer while-loop runs on the host. Sketch sizes are powers of two
+  times ``m_init`` so at most ⌈log₂(m_max/m_init)⌉ distinct shapes exist;
+  each (method, m)-shape's step function is jit-compiled once and cached by
+  JAX. The inner per-iteration work (one preconditioner solve + one H·v)
+  is a single jitted call.
+* ``repro.core.adaptive_padded`` offers a beyond-paper alternative that
+  masks rows of a max-size sketch inside ONE compiled graph (fixed shapes,
+  e.g. for serving environments); see that module.
+
+The improvement test is exactly Alg 4.1:   reject  iff
+    δ̃⁺ / δ̃_I  >  c(α,ρ) · φ(ρ)^{t+1−I} ,
+on reject: I ← t, m ← 2m, resample S, re-sketch, re-factorize, restart the
+method at the current iterate x_t.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import solvers
+from .precond import SketchedPrecond, factorize
+from .quadratic import Quadratic
+from .sketches import make_sketch
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptiveConfig:
+    method: str = "pcg"          # "ihs" | "pcg" | "polyak"
+    sketch: str = "sjlt"         # "gaussian" | "srht" | "sjlt"
+    rho: float = 0.5             # Theorem 4.1 assumes ρ ∈ (0, 1/4); the
+                                 # algorithm is valid for any ρ ∈ (0,1) and
+                                 # ρ = 1/2 matches the paper's observed
+                                 # m_final ≈ (1–5)·d_e (smaller ρ demands a
+                                 # faster sustained rate ⇒ larger sketches)
+    m_init: int = 1
+    m_max: int | None = None     # cap; defaults to n (where the sketch is
+                                 # replaced by the exact preconditioner)
+    max_iters: int = 500
+    tol: float = 1e-12           # stop when δ̃_t ≤ tol · δ̃_0 (Remark 4.2 notes
+                                 # the theoretical gap of practical criteria)
+    sjlt_s: int = 1
+    dtype: Any = jnp.float32
+
+
+@dataclasses.dataclass
+class AdaptiveResult:
+    x: jnp.ndarray
+    m_final: int
+    n_doublings: int
+    iters: int
+    m_trace: list            # sketch size after each accepted iteration
+    delta_tilde_trace: list  # δ̃ after each accepted iteration
+    resketch_times: list     # host seconds spent (sketch+factorize) per phase
+    iter_times: list         # host seconds per accepted/rejected iteration
+
+
+# -- jitted phase primitives (cached per (method, m, shapes)) -----------------
+
+@partial(jax.jit, static_argnames=("method",))
+def _init_state(q: Quadratic, P: SketchedPrecond, x: jnp.ndarray, method: str):
+    init_fn, _ = solvers.METHODS[method]
+    return init_fn(q, P, x)
+
+
+@partial(jax.jit, static_argnames=("method", "rho"))
+def _step_state(q: Quadratic, P: SketchedPrecond, st, method: str, rho: float):
+    _, step_fn = solvers.METHODS[method]
+    return step_fn(q, P, st, rho)
+
+
+@partial(jax.jit, static_argnames=("kind", "m", "s"))
+def _sketch_and_factorize(q: Quadratic, key, kind: str, m: int, s: int
+                          ) -> SketchedPrecond:
+    if m >= q.n:
+        # Graceful ceiling: S = I_n makes H_S = H exactly (one-step solve).
+        return factorize(q.A, q.nu, q.lam_diag)
+    sk = make_sketch(kind, m, q.n, key, dtype=q.A.dtype, s=s)
+    SA = sk.apply(q.A)
+    return factorize(SA, q.nu, q.lam_diag)
+
+
+@jax.jit
+def _dtilde_at(P: SketchedPrecond, g: jnp.ndarray):
+    return 0.5 * jnp.sum(g * P.solve(g))
+
+
+def adaptive_solve(
+    q: Quadratic,
+    cfg: AdaptiveConfig = AdaptiveConfig(),
+    x0: jnp.ndarray | None = None,
+    key: jax.Array | None = None,
+) -> AdaptiveResult:
+    """Algorithm 4.1 specialized by cfg.method (4.2 when method == 'pcg')."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    if x0 is None:
+        x0 = jnp.zeros_like(q.b)
+    m_max = cfg.m_max if cfg.m_max is not None else q.n
+    phi, alpha = solvers.rho_to_rate(cfg.method, cfg.rho)
+    c = solvers.c_alpha_rho(alpha, cfg.rho)
+
+    m = max(1, cfg.m_init)
+    key, sub = jax.random.split(key)
+    t_sk = time.perf_counter()
+    P = _sketch_and_factorize(q, sub, cfg.sketch, m, cfg.sjlt_s)
+    P = jax.block_until_ready(P)
+    resketch_times = [time.perf_counter() - t_sk]
+
+    g0 = jax.jit(lambda q, x: q.grad(x))(q, x0)
+
+    st = _init_state(q, P, x0, cfg.method)
+    dtilde_I = float(st.delta_tilde)
+    # Reference for the relative-tolerance stop: δ̃ at x0 under the CURRENT
+    # sketch (re-evaluated on every resketch) — with the m=1 sketch δ̃_{x0}
+    # is inflated by up to (1 + m_δ/m) (Lemma 2.2), which would make the
+    # relative criterion fire far too early.
+    dtilde_0 = dtilde_I
+    t_rel = 0  # t − I, iterations since last restart
+    n_doublings = 0
+    cap_resamples = 0
+    m_trace, dt_trace, iter_times = [m], [dtilde_I], []
+
+    t = 0
+    while t < cfg.max_iters:
+        t_it = time.perf_counter()
+        st_next = _step_state(q, P, st, cfg.method, cfg.rho)
+        dtilde_next = float(jax.block_until_ready(st_next.delta_tilde))
+        iter_times.append(time.perf_counter() - t_it)
+
+        converged = dtilde_next <= cfg.tol * max(dtilde_0, 1e-300)
+        threshold = c * (phi ** (t_rel + 1)) * dtilde_I
+        # A non-finite δ̃⁺ (tiny-m preconditioner blow-up) must be rejected:
+        # NaN compares False against everything, so test finiteness first.
+        reject = (not jnp.isfinite(dtilde_next)) or dtilde_next > threshold
+        if not jnp.isfinite(dtilde_next) and m >= m_max:
+            # Cannot grow further; resample at the cap rather than accept NaNs.
+            if cap_resamples > 3:
+                break
+            cap_resamples += 1
+            key, sub = jax.random.split(key)
+            P = _sketch_and_factorize(q, sub, cfg.sketch, m, cfg.sjlt_s)
+            st = _init_state(q, P, st.x, cfg.method)
+            dtilde_I = float(st.delta_tilde)
+            dtilde_0 = float(_dtilde_at(P, g0))
+            t_rel = 0
+            continue
+        if reject and not converged and m < m_max:
+            # Reject: double the sketch, restart the method at current x.
+            n_doublings += 1
+            m = min(2 * m, m_max)
+            key, sub = jax.random.split(key)
+            t_sk = time.perf_counter()
+            P = _sketch_and_factorize(q, sub, cfg.sketch, m, cfg.sjlt_s)
+            P = jax.block_until_ready(P)
+            resketch_times.append(time.perf_counter() - t_sk)
+            st = _init_state(q, P, st.x, cfg.method)
+            dtilde_I = float(st.delta_tilde)
+            dtilde_0 = float(_dtilde_at(P, g0))
+            t_rel = 0
+            continue
+
+        # Accept.
+        st = st_next
+        t += 1
+        t_rel += 1
+        m_trace.append(m)
+        dt_trace.append(dtilde_next)
+        if converged:
+            break
+
+    return AdaptiveResult(
+        x=st.x,
+        m_final=m,
+        n_doublings=n_doublings,
+        iters=t,
+        m_trace=m_trace,
+        delta_tilde_trace=dt_trace,
+        resketch_times=resketch_times,
+        iter_times=iter_times,
+    )
+
+
+def k_max(m_delta: float, rho: float, m_init: int) -> int:
+    """Theorem 4.1 bound on the number of doublings."""
+    import math
+
+    return max(0, math.ceil(math.log2(max(m_delta / (m_init * rho), 1.0))))

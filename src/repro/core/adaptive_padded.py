@@ -1,0 +1,141 @@
+"""Beyond-paper: fully-jitted adaptive solver with a *padded* sketch.
+
+The paper's Algorithm 4.1 changes the sketch shape at runtime (m doubles),
+which forces either recompilation per size or host orchestration
+(``core.adaptive``). In serving/TPU environments with fixed-shape
+executables, we instead:
+
+* allocate the sketch at a maximum size m_max once;
+* keep an *active-row count* m_t as a traced integer; rows ≥ m_t are masked
+  to zero and the live rows are rescaled by √(m_max/m_t) so the masked
+  sketch has exactly the law of an m_t-row sketch (for Gaussian/SJLT whose
+  rows are i.i.d.);
+* run the whole adaptive loop as one ``lax.while_loop`` — the improvement
+  test, doubling (m_t ← 2·m_t, i.e. unmask more rows) and refactorization
+  are all inside the compiled graph.
+
+Cost trade-off vs the paper: every refactorization pays the m_max-shape
+Gram/Cholesky cost (we cannot shrink shapes in-graph), but there are at
+most log₂(m_max) of them; in exchange there is exactly ONE executable and
+no host round-trips — the right trade on real TPU pods where launch
+latency and recompiles dominate at small m. Recorded in EXPERIMENTS.md.
+
+Gaussian sketch only (i.i.d. rows ⇒ masking = subsampling). IHS inner
+update (the test thresholds follow Thm 3.2: φ(ρ)=ρ, α=1).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .quadratic import Quadratic
+from .solvers import c_alpha_rho
+
+
+class PaddedState(NamedTuple):
+    x: jnp.ndarray
+    m: jnp.ndarray            # active rows (traced int32)
+    t_rel: jnp.ndarray        # iterations since last restart
+    dtilde_I: jnp.ndarray     # δ̃ at last restart
+    dtilde: jnp.ndarray       # current δ̃
+    chol: jnp.ndarray         # (d, d) Cholesky of H_S (primal form)
+    iters: jnp.ndarray        # accepted iterations
+    doublings: jnp.ndarray
+
+
+def _masked_factorize(q: Quadratic, S: jnp.ndarray, m: jnp.ndarray):
+    """Cholesky of H_S for the m-row masked/rescaled sketch (fixed shapes)."""
+    m_max = S.shape[0]
+    mask = (jnp.arange(m_max) < m).astype(S.dtype)
+    scale = jnp.sqrt(jnp.asarray(m_max, S.dtype) / jnp.maximum(m, 1).astype(S.dtype))
+    SA = (S * (mask * scale)[:, None]) @ q.A
+    H_S = SA.T @ SA + jnp.diag((q.nu**2) * q.lam_diag)
+    return jnp.linalg.cholesky(H_S)
+
+
+def _chol_solve(chol, z):
+    y = jax.scipy.linalg.solve_triangular(chol, z, lower=True)
+    return jax.scipy.linalg.solve_triangular(chol.T, y, lower=False)
+
+
+@partial(jax.jit, static_argnames=("m_max", "max_iters", "rho"))
+def padded_adaptive_solve(
+    q: Quadratic,
+    key: jax.Array,
+    *,
+    m_max: int,
+    max_iters: int = 100,
+    rho: float = 0.5,
+    tol: float = 1e-10,
+):
+    """One-executable adaptive IHS. Returns (x, stats dict)."""
+    d = q.d
+    S = jax.random.normal(key, (m_max, q.n), dtype=q.A.dtype) / jnp.sqrt(
+        jnp.asarray(m_max, q.A.dtype)
+    )
+    phi, alpha = rho, 1.0
+    c = c_alpha_rho(alpha, rho)
+    mu = 1.0 - rho
+
+    x0 = jnp.zeros_like(q.b)
+    m0 = jnp.asarray(1, jnp.int32)
+    chol0 = _masked_factorize(q, S, m0)
+    g0 = q.grad(x0)
+    dt0 = 0.5 * jnp.sum(g0 * _chol_solve(chol0, g0))
+
+    init = PaddedState(
+        x=x0, m=m0, t_rel=jnp.asarray(0, jnp.int32), dtilde_I=dt0, dtilde=dt0,
+        chol=chol0, iters=jnp.asarray(0, jnp.int32),
+        doublings=jnp.asarray(0, jnp.int32),
+    )
+    dt_ref = dt0  # reference for the relative stop (updated on resketch)
+
+    def cond(carry):
+        st, dt_ref = carry
+        return (st.iters < max_iters) & (st.dtilde > tol * dt_ref)
+
+    def body(carry):
+        st, dt_ref = carry
+        g = q.grad(st.x)
+        x_new = st.x - mu * _chol_solve(st.chol, g)
+        g_new = q.grad(x_new)
+        dt_new = 0.5 * jnp.sum(g_new * _chol_solve(st.chol, g_new))
+        threshold = c * (phi ** (st.t_rel + 1).astype(q.A.dtype)) * st.dtilde_I
+        reject = jnp.logical_or(~jnp.isfinite(dt_new), dt_new > threshold)
+        reject = jnp.logical_and(reject, st.m < m_max)
+
+        def do_reject(_):
+            m2 = jnp.minimum(st.m * 2, m_max)
+            chol2 = _masked_factorize(q, S, m2)
+            dt_I = 0.5 * jnp.sum(g * _chol_solve(chol2, g))
+            g00 = q.grad(jnp.zeros_like(st.x))
+            ref2 = 0.5 * jnp.sum(g00 * _chol_solve(chol2, g00))
+            return (
+                PaddedState(
+                    x=st.x, m=m2, t_rel=jnp.asarray(0, jnp.int32),
+                    dtilde_I=dt_I, dtilde=dt_I, chol=chol2, iters=st.iters,
+                    doublings=st.doublings + 1,
+                ),
+                ref2,
+            )
+
+        def do_accept(_):
+            return (
+                PaddedState(
+                    x=x_new, m=st.m, t_rel=st.t_rel + 1, dtilde_I=st.dtilde_I,
+                    dtilde=dt_new, chol=st.chol, iters=st.iters + 1,
+                    doublings=st.doublings,
+                ),
+                dt_ref,
+            )
+
+        return jax.lax.cond(reject, do_reject, do_accept, None)
+
+    st, _ = jax.lax.while_loop(cond, body, (init, dt_ref))
+    stats = {"m_final": st.m, "iters": st.iters, "doublings": st.doublings,
+             "dtilde": st.dtilde}
+    return st.x, stats

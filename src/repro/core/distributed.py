@@ -1,0 +1,123 @@
+"""Distributed (row-sharded) quadratic problems and block sketches.
+
+Layout: A ∈ R^{n×d} is row-sharded over the mesh's data axes (the layout
+backbone activations already have under DP), x/b replicated. Then:
+
+* H·v      = AᵀA v + ν²Λv  — local matmuls + one psum(d) over data axes.
+* sketch   = S·A with *independent per-shard randomness* (block sketching):
+             SA = Σ_k S_k A_k — local sketch + one psum(m×d). For the SRHT
+             this is the block-SRHT (per-shard sign diagonal + FWHT, global
+             row budget split across shards); embedding properties hold up
+             to constants (DESIGN.md §5).
+* factorization / iterations — replicated (m, d ≪ n).
+
+Two execution paths, same math:
+
+1. **GSPMD path** (production): jit the plain ``Quadratic`` ops with
+   ``in_shardings`` placing A as P(data_axes, None); XLA inserts the
+   collectives. Used by the dry-run and the large-scale configs.
+2. **shard_map path** (explicit collectives): used where we want manual
+   control of the reduction placement — the sketch+Gram hot path — and by
+   the multi-device tests.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .precond import factorize
+from .quadratic import Quadratic
+from .sketches import make_sketch
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    """All mesh axes used for data parallelism (everything but 'model')."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def shard_quadratic(q: Quadratic, mesh: Mesh) -> Quadratic:
+    """Place A row-sharded over the data axes, everything else replicated."""
+    da = data_axes(mesh)
+    a_sh = NamedSharding(mesh, P(da, None))
+    rep = NamedSharding(mesh, P())
+    return Quadratic(
+        A=jax.device_put(q.A, a_sh),
+        b=jax.device_put(q.b, rep),
+        nu=jax.device_put(q.nu, rep),
+        lam_diag=jax.device_put(q.lam_diag, rep),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Explicit shard_map path for the sketch + factorize hot path
+# ---------------------------------------------------------------------------
+
+def block_sketch_gram(
+    A: jnp.ndarray,
+    key: jax.Array,
+    kind: str,
+    m: int,
+    mesh: Mesh,
+    *,
+    s: int = 1,
+):
+    """Compute SA = Σ_k S_k A_k with per-shard randomness, under shard_map.
+
+    Returns the replicated (m, d) sketched matrix. The per-shard sketch uses
+    ``jax.random.fold_in(key, shard_index)`` so shards are independent, and
+    the row budget m is kept global (each shard contributes to all m rows —
+    this is summing sketches, not concatenating).
+    """
+    da = data_axes(mesh)
+    n_shards = 1
+    for a in da:
+        n_shards *= mesh.shape[a]
+    n = A.shape[0]
+    if n % n_shards:
+        raise ValueError(f"n={n} not divisible by {n_shards} data shards")
+
+    def local_sketch(A_blk: jnp.ndarray) -> jnp.ndarray:
+        idx = jax.lax.axis_index(da)
+        k = jax.random.fold_in(key, idx)
+        sk = make_sketch(kind, m, A_blk.shape[0], k, dtype=A_blk.dtype, s=s)
+        partial_SA = sk.apply(A_blk) / jnp.sqrt(
+            jnp.asarray(n_shards, A_blk.dtype)
+        )
+        return jax.lax.psum(partial_SA, axis_name=da)
+
+    fn = jax.shard_map(
+        local_sketch,
+        mesh=mesh,
+        in_specs=P(da, None),
+        out_specs=P(),
+        check_vma=False,
+    )
+    return fn(A)
+
+
+def distributed_sketch_and_factorize(
+    q: Quadratic, key: jax.Array, kind: str, m: int, mesh: Mesh, *, s: int = 1
+):
+    """Block sketch + replicated factorization of H_S."""
+    SA = block_sketch_gram(q.A, key, kind, m, mesh, s=s)
+    return factorize(SA, q.nu, q.lam_diag)
+
+
+# ---------------------------------------------------------------------------
+# GSPMD shardings (used by dryrun / launch): jit the plain Quadratic ops with
+# these and XLA inserts the data-axis collectives.
+# ---------------------------------------------------------------------------
+
+def quadratic_shardings(mesh: Mesh) -> Quadratic:
+    """Sharding pytree matching Quadratic: A row-sharded, rest replicated."""
+    da = data_axes(mesh)
+    return Quadratic(
+        A=NamedSharding(mesh, P(da, None)),
+        b=NamedSharding(mesh, P()),
+        nu=NamedSharding(mesh, P()),
+        lam_diag=NamedSharding(mesh, P()),
+    )

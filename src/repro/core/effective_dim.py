@@ -1,0 +1,62 @@
+"""Effective dimension and critical sketch sizes (paper §1, §2.2, §5).
+
+d_e = tr(Aν)/‖Aν‖₂ with Aν = AᵀA(AᵀA + ν²Λ)⁻¹. For Λ = I and singular
+values σ_i of A:   d_e = Σ σ_i²/(σ_i²+ν²) · (σ_1²+ν²)/σ_1².
+
+Also the critical-sketch-size formulas of Table 1 / Theorem 5.1 used to
+*predict* (not run) the adaptive controller, and by the benchmarks.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def effective_dimension(singular_values: jnp.ndarray, nu: float) -> jnp.ndarray:
+    """d_e from the σ_i of A (Λ = I_d)."""
+    s2 = singular_values**2
+    ratios = s2 / (s2 + nu**2)
+    return jnp.sum(ratios) / jnp.max(ratios)
+
+def effective_dimension_exact(A: jnp.ndarray, nu: float, lam_diag=None) -> float:
+    """d_e by direct eigen-decomposition (testing / small problems only)."""
+    d = A.shape[1]
+    lam = jnp.ones((d,), A.dtype) if lam_diag is None else lam_diag
+    G = A.T @ A
+    M = G @ jnp.linalg.inv(G + (nu**2) * jnp.diag(lam))
+    eig = jnp.linalg.eigvalsh(0.5 * (M + M.T))
+    return float(jnp.sum(eig) / jnp.max(eig))
+
+
+# -- Critical sketch sizes (Table 1 / Thm 5.1), with explicit constants -------
+
+def m_delta_srht(d_e: float, n: int, delta: float = 0.1) -> float:
+    """Theorem 5.1:  m_δ = 16 log(16 d_e/δ) (√d_e + √(8 log(2n/δ)))²."""
+    d_e = max(d_e, 1.0)
+    return 16.0 * math.log(16.0 * d_e / delta) * (
+        math.sqrt(d_e) + math.sqrt(8.0 * math.log(2.0 * n / delta))
+    ) ** 2
+
+
+def m_delta_gaussian(d_e: float, delta: float = 0.1) -> float:
+    """Theorem 5.2:  m_δ = (√d_e + √(8 log(16/δ)))²."""
+    return (math.sqrt(max(d_e, 1.0)) + math.sqrt(8.0 * math.log(16.0 / delta))) ** 2
+
+
+def m_delta_sjlt(d_e: float, delta: float = 0.1) -> float:
+    """Table 1: O(d_e²/δ) — constant taken as 1 (paper leaves it implicit)."""
+    return max(d_e, 1.0) ** 2 / delta
+
+
+M_DELTA = {
+    "srht": lambda d_e, n, delta: m_delta_srht(d_e, n, delta),
+    "gaussian": lambda d_e, n, delta: m_delta_gaussian(d_e, delta),
+    "sjlt": lambda d_e, n, delta: m_delta_sjlt(d_e, delta),
+}
+
+
+def exp_decay_singular_values(d: int, rate: float = 0.995) -> jnp.ndarray:
+    """σ_j = rate^j, the paper's synthetic spectrum (§6)."""
+    return rate ** jnp.arange(1, d + 1, dtype=jnp.float32)

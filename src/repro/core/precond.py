@@ -1,0 +1,90 @@
+"""Factorizations of the sketched Hessian H_S = (SA)ᵀ(SA) + ν²Λ (paper §4.1.1).
+
+Two regimes, chosen exactly as in the paper:
+
+* m ≥ d  (primal): form H_S ∈ R^{d×d}, Cholesky in O(d³); solves O(d²).
+* m < d  (dual / Woodbury): form W_S = SAΛ⁻¹(SA)ᵀ + ν²I_m ∈ R^{m×m},
+  Cholesky in O(m³); solves O(md) via
+      v = Λ⁻¹/ν² · (I_d − (SA)ᵀ W_S⁻¹ SA Λ⁻¹) z .
+
+The factorization object is a pytree so it can be closed over / donated in
+jitted solver loops.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.linalg import cho_factor, cho_solve
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SketchedPrecond:
+    """Cached factorization of H_S; solves  H_S v = z  in O(min(m,d)·d)."""
+
+    mode: str               # "primal" | "dual"
+    chol: jnp.ndarray       # (d,d) or (m,m) lower Cholesky factor
+    SA: jnp.ndarray | None  # (m,d), kept only in dual mode
+    nu2: jnp.ndarray        # scalar ν²
+    lam_diag: jnp.ndarray   # (d,) diagonal of Λ
+
+    def tree_flatten(self):
+        return (self.chol, self.SA, self.nu2, self.lam_diag), (self.mode,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        chol, SA, nu2, lam = children
+        return cls(mode=aux[0], chol=chol, SA=SA, nu2=nu2, lam_diag=lam)
+
+    def solve(self, z: jnp.ndarray) -> jnp.ndarray:
+        """Solve H_S v = z. Supports vector (d,) or matrix (d,c) RHS."""
+        squeeze = z.ndim == 1
+        if squeeze:
+            z = z[:, None]
+        if self.mode == "primal":
+            v = cho_solve((self.chol, True), z)
+        else:
+            SA, nu2 = self.SA, self.nu2
+            lam_inv = 1.0 / self.lam_diag
+            zi = lam_inv[:, None] * z                      # Λ⁻¹ z
+            w = cho_solve((self.chol, True), SA @ zi)      # W_S⁻¹ SA Λ⁻¹ z
+            v = (zi - lam_inv[:, None] * (SA.T @ w)) / nu2
+        return v[:, 0] if squeeze else v
+
+
+def factorize(
+    SA: jnp.ndarray,
+    nu: float | jnp.ndarray,
+    lam_diag: jnp.ndarray,
+    *,
+    jitter: float = 0.0,
+) -> SketchedPrecond:
+    """Factorize H_S given the sketched matrix SA ∈ R^{m×d}."""
+    m, d = SA.shape
+    nu2 = jnp.asarray(nu, SA.dtype) ** 2
+    if m >= d:
+        H_S = SA.T @ SA + jnp.diag(nu2 * lam_diag)
+        if jitter:
+            H_S = H_S + jitter * jnp.eye(d, dtype=SA.dtype)
+        chol, _ = cho_factor(H_S, lower=True)
+        return SketchedPrecond(
+            mode="primal", chol=chol, SA=None, nu2=nu2, lam_diag=lam_diag
+        )
+    lam_inv = 1.0 / lam_diag
+    W_S = (SA * lam_inv[None, :]) @ SA.T + nu2 * jnp.eye(m, dtype=SA.dtype)
+    if jitter:
+        W_S = W_S + jitter * jnp.eye(m, dtype=SA.dtype)
+    chol, _ = cho_factor(W_S, lower=True)
+    return SketchedPrecond(
+        mode="dual", chol=chol, SA=SA, nu2=nu2, lam_diag=lam_diag
+    )
+
+
+def factorization_cost_flops(m: int, n: int, d: int) -> float:
+    """Flops to form + factorize H_S (paper §4.1.1), excluding the sketch."""
+    if m >= d:
+        return 2.0 * m * d * d + d**3 / 3.0
+    return 2.0 * m * m * d + m**3 / 3.0

@@ -1,0 +1,76 @@
+"""Problem container for  min_x ½⟨x, Hx⟩ − bᵀx,  H = AᵀA + ν²Λ  (paper (1.1)).
+
+``Quadratic`` is matrix-free: it exposes Hv, ∇f, f, and the sketch of A.
+It supports matrix right-hand sides B ∈ R^{d×c} (multi-class heads — the
+paper's experiments use one-hot label matrices).
+
+A distributed (row-sharded) variant lives in ``repro.core.distributed``; this
+module is the single-device semantics both share.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Quadratic:
+    A: jnp.ndarray          # (n, d) data matrix
+    b: jnp.ndarray          # (d,) or (d, c) linear term (= Aᵀy for LS)
+    nu: jnp.ndarray         # scalar regularization ν
+    lam_diag: jnp.ndarray   # (d,) diagonal of Λ ⪰ I
+
+    def tree_flatten(self):
+        return (self.A, self.b, self.nu, self.lam_diag), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    # -- dimensions --------------------------------------------------------
+    @property
+    def n(self) -> int:
+        return self.A.shape[0]
+
+    @property
+    def d(self) -> int:
+        return self.A.shape[1]
+
+    # -- operator ----------------------------------------------------------
+    def hvp(self, v: jnp.ndarray) -> jnp.ndarray:
+        """H v = AᵀA v + ν²Λ v  in O(nd) (never forms H)."""
+        lam = self.lam_diag
+        if v.ndim == 1:
+            return self.A.T @ (self.A @ v) + (self.nu**2) * lam * v
+        return self.A.T @ (self.A @ v) + (self.nu**2) * lam[:, None] * v
+
+    def grad(self, x: jnp.ndarray) -> jnp.ndarray:
+        return self.hvp(x) - self.b
+
+    def value(self, x: jnp.ndarray) -> jnp.ndarray:
+        return 0.5 * jnp.sum(x * self.hvp(x)) - jnp.sum(self.b * x)
+
+    def error(self, x: jnp.ndarray, x_star: jnp.ndarray) -> jnp.ndarray:
+        """δ_x = ½‖x − x*‖²_H (summed over columns for matrix RHS)."""
+        dx = x - x_star
+        return 0.5 * jnp.sum(dx * self.hvp(dx))
+
+
+def from_least_squares(A, y, nu, lam_diag=None) -> Quadratic:
+    """Ridge regression  min ½‖Ax − y‖² + ν²/2 ‖Λ^{1/2}x‖²  as (1.1)."""
+    A = jnp.asarray(A)
+    y = jnp.asarray(y)
+    if lam_diag is None:
+        lam_diag = jnp.ones((A.shape[1],), A.dtype)
+    return Quadratic(A=A, b=A.T @ y, nu=jnp.asarray(nu, A.dtype), lam_diag=lam_diag)
+
+
+def direct_solve(q: Quadratic) -> jnp.ndarray:
+    """Baseline: dense Cholesky factor-and-solve, O(nd²+d³) (paper baseline)."""
+    H = q.A.T @ q.A + jnp.diag((q.nu**2) * q.lam_diag)
+    chol, _ = jax.scipy.linalg.cho_factor(H, lower=True)
+    return jax.scipy.linalg.cho_solve((chol, True), q.b)

@@ -1,0 +1,248 @@
+"""Random embeddings (sketches) for the adaptive preconditioner.
+
+Implements the three families used in the paper (§2.1):
+
+* Gaussian embeddings — i.i.d. N(0, 1/m) entries.
+* SRHT  — subsampled randomized Hadamard transform  S = R·H·E, with the
+  FWHT computed by the Pallas kernel (``repro.kernels.fwht``) on TPU and a
+  pure-jnp oracle elsewhere.
+* SJLT  — sparse Johnson-Lindenstrauss transform with ``s`` non-zeros per
+  column (default s=1, the paper's choice), lowered to a one-hot MXU matmul
+  on TPU (see DESIGN.md §3).
+
+All sketches expose a single functional entry point::
+
+    sketch = make_sketch(kind, m, n, key, s=...)
+    SA = sketch.apply(A)          # (m, d) — works under shard_map with A
+                                  # row-sharded; callers psum over 'data'.
+
+Sketch application is linear, so for a row-sharded A = [A_1; ...; A_K] the
+global sketch is the sum of per-shard partial sketches with *independent*
+per-shard randomness (block sketching) — see ``distributed.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+SketchKind = Literal["gaussian", "srht", "sjlt"]
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, (n - 1).bit_length())
+
+
+# ---------------------------------------------------------------------------
+# FWHT (pure-jnp reference used on CPU; Pallas kernel used on TPU via ops.py)
+# ---------------------------------------------------------------------------
+
+def fwht(x: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    """Unnormalized fast Walsh–Hadamard transform along ``axis``.
+
+    Length along ``axis`` must be a power of two. O(n log n) butterflies
+    expressed as reshapes so XLA fuses them; used as the reference
+    implementation and the CPU execution path.
+    """
+    x = jnp.moveaxis(x, axis, -1)
+    n = x.shape[-1]
+    if n & (n - 1):
+        raise ValueError(f"FWHT length must be a power of 2, got {n}")
+    orig_shape = x.shape
+    h = 1
+    while h < n:
+        x = x.reshape(orig_shape[:-1] + (n // (2 * h), 2, h))
+        a = x[..., 0, :]
+        b = x[..., 1, :]
+        x = jnp.concatenate([a + b, a - b], axis=-1)
+        x = x.reshape(orig_shape)
+        h *= 2
+    return jnp.moveaxis(x, -1, axis)
+
+
+# ---------------------------------------------------------------------------
+# Sketch container
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Sketch:
+    """A sampled random embedding S ∈ R^{m×n}, applied matrix-free."""
+
+    kind: str
+    m: int
+    n: int
+    # Gaussian: dense (m, n). SRHT: signs (n,), rows (m,). SJLT: rows (s, n),
+    # signs (s, n).
+    data: dict
+
+    def tree_flatten(self):
+        return (self.data,), (self.kind, self.m, self.n)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        kind, m, n = aux
+        return cls(kind=kind, m=m, n=n, data=children[0])
+
+    # -- application ------------------------------------------------------
+    def apply(self, A: jnp.ndarray) -> jnp.ndarray:
+        """Compute S @ A for A of shape (n, d) (or (n,) vector)."""
+        squeeze = A.ndim == 1
+        if squeeze:
+            A = A[:, None]
+        out = _APPLY[self.kind](self, A)
+        return out[:, 0] if squeeze else out
+
+    def apply_t(self, Y: jnp.ndarray) -> jnp.ndarray:
+        """Compute S.T @ Y for Y of shape (m, d)."""
+        squeeze = Y.ndim == 1
+        if squeeze:
+            Y = Y[:, None]
+        out = _APPLY_T[self.kind](self, Y)
+        return out[:, 0] if squeeze else out
+
+    def dense(self) -> jnp.ndarray:
+        """Materialize S (testing only)."""
+        return self.apply(jnp.eye(self.n)).reshape(self.m, self.n)
+
+
+# -- Gaussian ---------------------------------------------------------------
+
+def _gaussian_sample(key, m, n, dtype) -> dict:
+    S = jax.random.normal(key, (m, n), dtype=dtype) / jnp.sqrt(
+        jnp.asarray(m, dtype)
+    )
+    return {"S": S}
+
+
+def _gaussian_apply(sk: Sketch, A):
+    return sk.data["S"] @ A
+
+
+def _gaussian_apply_t(sk: Sketch, Y):
+    return sk.data["S"].T @ Y
+
+
+# -- SRHT ---------------------------------------------------------------------
+
+def _srht_sample(key, m, n, dtype) -> dict:
+    k_sign, k_rows = jax.random.split(key)
+    n_pad = _next_pow2(n)
+    signs = jax.random.rademacher(k_sign, (n,), dtype=dtype)
+    # Sample m rows of H without replacement; in the block-sketch regime a
+    # shard may have m > n_pad local rows — fall back to with-replacement
+    # (still an unbiased isometry in expectation).
+    rows = jax.random.choice(k_rows, n_pad, shape=(m,), replace=m > n_pad)
+    return {"signs": signs, "rows": rows}
+
+
+def _srht_apply(sk: Sketch, A):
+    n_pad = _next_pow2(sk.n)
+    X = A * sk.data["signs"][:, None]
+    if n_pad != sk.n:
+        X = jnp.pad(X, ((0, n_pad - sk.n), (0, 0)))
+    HX = fwht(X, axis=0) / jnp.sqrt(jnp.asarray(n_pad, X.dtype))
+    sub = HX[sk.data["rows"], :]
+    return sub * jnp.sqrt(jnp.asarray(n_pad / sk.m, X.dtype))
+
+
+def _srht_apply_t(sk: Sketch, Y):
+    n_pad = _next_pow2(sk.n)
+    Z = jnp.zeros((n_pad, Y.shape[1]), Y.dtype)
+    Z = Z.at[sk.data["rows"], :].set(Y)
+    HZ = fwht(Z, axis=0) / jnp.sqrt(jnp.asarray(n_pad, Y.dtype))
+    HZ = HZ[: sk.n, :]
+    return HZ * sk.data["signs"][:, None] * jnp.sqrt(
+        jnp.asarray(n_pad / sk.m, Y.dtype)
+    )
+
+
+# -- SJLT ---------------------------------------------------------------------
+
+def _sjlt_sample(key, m, n, dtype, s: int = 1) -> dict:
+    k_rows, k_sign = jax.random.split(key)
+    # For each column of S (each of the n data rows), choose s target rows
+    # without replacement within the column. Sampling "without replacement"
+    # per column for small s: use independent uniforms for s=1; for s>1 take
+    # top-s of random keys (Gumbel trick) which is O(n·m)-free.
+    if s == 1:
+        rows = jax.random.randint(k_rows, (1, n), 0, m)
+    else:
+        g = jax.random.uniform(k_rows, (n, m))
+        rows = jnp.argsort(g, axis=1)[:, :s].T  # (s, n)
+    signs = jax.random.rademacher(k_sign, (s, n), dtype=dtype) / jnp.sqrt(
+        jnp.asarray(s, dtype)
+    )
+    return {"rows": rows, "signs": signs}
+
+
+def _sjlt_apply(sk: Sketch, A):
+    # SA[r, :] = sum_{i: row(i)=r} sign(i) * A[i, :]  — a segment-sum. On TPU
+    # the kernels/sjlt.py Pallas kernel lowers this to one-hot MXU matmuls;
+    # here we use jnp segment_sum (efficient gather/scatter on CPU, and the
+    # oracle for the kernel).
+    rows, signs = sk.data["rows"], sk.data["signs"]
+    out = jnp.zeros((sk.m, A.shape[1]), A.dtype)
+    for j in range(rows.shape[0]):  # s is a small static constant
+        out = out + jax.ops.segment_sum(
+            A * signs[j][:, None], rows[j], num_segments=sk.m
+        )
+    return out
+
+
+def _sjlt_apply_t(sk: Sketch, Y):
+    rows, signs = sk.data["rows"], sk.data["signs"]
+    out = jnp.zeros((sk.n, Y.shape[1]), Y.dtype)
+    for j in range(rows.shape[0]):
+        out = out + signs[j][:, None] * Y[rows[j], :]
+    return out
+
+
+_SAMPLERS = {
+    "gaussian": _gaussian_sample,
+    "srht": _srht_sample,
+    "sjlt": _sjlt_sample,
+}
+_APPLY = {
+    "gaussian": _gaussian_apply,
+    "srht": _srht_apply,
+    "sjlt": _sjlt_apply,
+}
+_APPLY_T = {
+    "gaussian": _gaussian_apply_t,
+    "srht": _srht_apply_t,
+    "sjlt": _sjlt_apply_t,
+}
+
+
+def make_sketch(
+    kind: SketchKind,
+    m: int,
+    n: int,
+    key: jax.Array,
+    *,
+    dtype=jnp.float32,
+    s: int = 1,
+) -> Sketch:
+    if kind not in _SAMPLERS:
+        raise ValueError(f"unknown sketch kind {kind!r}")
+    kwargs = {"s": s} if kind == "sjlt" else {}
+    data = _SAMPLERS[kind](key, m, n, dtype, **kwargs)
+    return Sketch(kind=kind, m=m, n=n, data=data)
+
+
+def sketch_cost_flops(kind: SketchKind, m: int, n: int, d: int, s: int = 1) -> float:
+    """Sketching cost model used by the complexity benchmarks (Table 2)."""
+    if kind == "gaussian":
+        return 2.0 * m * n * d
+    if kind == "srht":
+        n_pad = _next_pow2(n)
+        return 2.0 * n_pad * math.log2(max(2, n_pad)) * d
+    if kind == "sjlt":
+        return 2.0 * s * n * d
+    raise ValueError(kind)

@@ -1,0 +1,222 @@
+"""Preconditioned first-order methods (paper §1, §3).
+
+All methods are instances of Definition 2.3:
+    x_{t+1} ∈ x_0 + H_S⁻¹ · span{∇f(x_0), …, ∇f(x_t)} .
+
+* IHS        — x⁺ = x − μ H_S⁻¹ ∇f(x), μ = 1−ρ; (ρ, ρ, 1)-linear (Thm 3.2).
+* PCG        — optimal (Thm 3.3); (ρ, (1−√(1−ρ))/(1+√(1−ρ)), 4)-linear.
+* Polyak-IHS — heavy-ball (Appendix A); asymptotically matches PCG.
+* CG         — unpreconditioned baseline.
+
+Each solver is expressed as an immutable state + a ``step`` function so the
+adaptive controller (core/adaptive.py) can drive any of them, and as a
+convenience ``run`` loop (lax.while_loop, fully jittable) for fixed sketches.
+
+Every step also returns the approximate Newton decrement
+δ̃ = ½ ∇fᵀ H_S⁻¹ ∇f (eq. 2.3), which is free given the preconditioner solve.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .precond import SketchedPrecond
+from .quadratic import Quadratic
+
+
+def rho_to_rate(method: str, rho: float) -> tuple[float, float]:
+    """(φ(ρ), α) for Condition 2.4 per method."""
+    if method == "ihs":
+        return rho, 1.0
+    if method in ("pcg", "polyak"):
+        r = (1.0 - math.sqrt(1.0 - rho)) / (1.0 + math.sqrt(1.0 - rho))
+        return r, 4.0
+    raise ValueError(method)
+
+
+def c_alpha_rho(alpha: float, rho: float) -> float:
+    """c(α,ρ) = (1+√ρ)/(1−√ρ) · α (paper §1.1 notation)."""
+    return (1.0 + math.sqrt(rho)) / (1.0 - math.sqrt(rho)) * alpha
+
+
+# ---------------------------------------------------------------------------
+# IHS
+# ---------------------------------------------------------------------------
+
+class IHSState(NamedTuple):
+    x: jnp.ndarray
+    grad: jnp.ndarray
+    delta_tilde: jnp.ndarray  # scalar δ̃ at x
+
+
+def ihs_init(q: Quadratic, P: SketchedPrecond, x0: jnp.ndarray) -> IHSState:
+    g = q.grad(x0)
+    return IHSState(x=x0, grad=g, delta_tilde=0.5 * jnp.sum(g * P.solve(g)))
+
+
+def ihs_step(q: Quadratic, P: SketchedPrecond, st: IHSState, rho: float) -> IHSState:
+    mu = 1.0 - rho
+    x = st.x - mu * P.solve(st.grad)
+    g = q.grad(x)
+    return IHSState(x=x, grad=g, delta_tilde=0.5 * jnp.sum(g * P.solve(g)))
+
+
+# ---------------------------------------------------------------------------
+# Polyak-IHS (heavy-ball, Appendix A): μ_ρ = 2(1−ρ)/(1+√(1−ρ)),
+# β_ρ = (1−√(1−ρ))/(1+√(1−ρ)).
+# ---------------------------------------------------------------------------
+
+class PolyakState(NamedTuple):
+    x: jnp.ndarray
+    x_prev: jnp.ndarray
+    grad: jnp.ndarray
+    delta_tilde: jnp.ndarray
+
+
+def polyak_init(q: Quadratic, P: SketchedPrecond, x0: jnp.ndarray) -> PolyakState:
+    g = q.grad(x0)
+    return PolyakState(
+        x=x0, x_prev=x0, grad=g, delta_tilde=0.5 * jnp.sum(g * P.solve(g))
+    )
+
+
+def polyak_step(
+    q: Quadratic, P: SketchedPrecond, st: PolyakState, rho: float
+) -> PolyakState:
+    sq = math.sqrt(1.0 - rho)
+    mu = 2.0 * (1.0 - rho) / (1.0 + sq)
+    beta = (1.0 - sq) / (1.0 + sq)
+    x = st.x - mu * P.solve(st.grad) + beta * (st.x - st.x_prev)
+    g = q.grad(x)
+    return PolyakState(
+        x=x, x_prev=st.x, grad=g, delta_tilde=0.5 * jnp.sum(g * P.solve(g))
+    )
+
+
+# ---------------------------------------------------------------------------
+# PCG (paper eq. 1.5 / Algorithm 4.2 inner loop)
+# ---------------------------------------------------------------------------
+
+class PCGState(NamedTuple):
+    x: jnp.ndarray
+    r: jnp.ndarray        # residual  b − Hx  (= −∇f)
+    r_tilde: jnp.ndarray  # H_S⁻¹ r
+    p: jnp.ndarray        # search direction
+    delta_tilde: jnp.ndarray  # ½ rᵀ r̃  (δ̃ of eq. 2.3 up to the ½)
+
+
+def pcg_init(q: Quadratic, P: SketchedPrecond, x0: jnp.ndarray) -> PCGState:
+    r = q.b - q.hvp(x0)
+    rt = P.solve(r)
+    return PCGState(x=x0, r=r, r_tilde=rt, p=rt,
+                    delta_tilde=0.5 * jnp.sum(r * rt))
+
+
+def pcg_step(q: Quadratic, P: SketchedPrecond, st: PCGState, rho: float = 0.0
+             ) -> PCGState:
+    Hp = q.hvp(st.p)
+    denom = jnp.sum(st.p * Hp)
+    # Guard: at exact convergence p → 0; keep alpha finite.
+    alpha = jnp.where(denom > 0, 2.0 * st.delta_tilde / jnp.where(denom > 0, denom, 1.0), 0.0)
+    x = st.x + alpha * st.p
+    r = st.r - alpha * Hp
+    rt = P.solve(r)
+    dt_new = 0.5 * jnp.sum(r * rt)
+    beta = jnp.where(st.delta_tilde > 0, dt_new / jnp.where(st.delta_tilde > 0, st.delta_tilde, 1.0), 0.0)
+    p = rt + beta * st.p
+    return PCGState(x=x, r=r, r_tilde=rt, p=p, delta_tilde=dt_new)
+
+
+# ---------------------------------------------------------------------------
+# Plain CG baseline (no preconditioner)
+# ---------------------------------------------------------------------------
+
+def cg_solve(q: Quadratic, x0: jnp.ndarray, iters: int, tol: float = 0.0):
+    """Standard CG on Hx = b; returns (x, per-iteration ‖r‖² trace)."""
+
+    r0 = q.b - q.hvp(x0)
+
+    def body(carry, _):
+        x, r, p, rs = carry
+        Hp = q.hvp(p)
+        denom = jnp.sum(p * Hp)
+        alpha = jnp.where(denom > 0, rs / jnp.where(denom > 0, denom, 1.0), 0.0)
+        x = x + alpha * p
+        r = r - alpha * Hp
+        rs_new = jnp.sum(r * r)
+        beta = jnp.where(rs > 0, rs_new / jnp.where(rs > 0, rs, 1.0), 0.0)
+        p = r + beta * p
+        return (x, r, p, rs_new), rs_new
+
+    init = (x0, r0, r0, jnp.sum(r0 * r0))
+    (x, _, _, _), trace = jax.lax.scan(body, init, None, length=iters)
+    return x, trace
+
+
+# ---------------------------------------------------------------------------
+# Generic fixed-sketch runner
+# ---------------------------------------------------------------------------
+
+METHODS = {
+    "ihs": (ihs_init, ihs_step),
+    "pcg": (pcg_init, pcg_step),
+    "polyak": (polyak_init, polyak_step),
+}
+
+
+@partial(jax.jit, static_argnames=("method", "iters", "rho"))
+def run_fixed(
+    q: Quadratic,
+    P: SketchedPrecond,
+    x0: jnp.ndarray,
+    *,
+    method: str = "pcg",
+    iters: int = 20,
+    rho: float = 1.0 / 8.0,
+):
+    """Run ``iters`` steps with a fixed preconditioner; returns (x, δ̃-trace)."""
+    init_fn, step_fn = METHODS[method]
+    st = init_fn(q, P, x0)
+
+    def body(st, _):
+        st = step_fn(q, P, st, rho)
+        return st, st.delta_tilde
+
+    st, trace = jax.lax.scan(body, st, None, length=iters)
+    return st.x, trace
+
+
+# ---------------------------------------------------------------------------
+# Newton / Gauss-Newton entry point (paper §1: "classical instances of
+# Newton linear systems")
+# ---------------------------------------------------------------------------
+
+def newton_solve(J: jnp.ndarray, grad: jnp.ndarray, nu: float, *,
+                 method: str = "pcg", sketch: str = "sjlt",
+                 max_iters: int = 100, tol: float = 1e-10,
+                 key: jax.Array | None = None):
+    """Solve the (damped) Gauss-Newton system (JᵀJ + ν²I) δ = −grad with the
+    adaptive sketching solver. J is the residual Jacobian / GN factor
+    (n × d, e.g. from jax.jacfwd or stacked per-example JVPs); returns the
+    Newton step δ."""
+    from .adaptive import AdaptiveConfig, adaptive_solve
+    from .quadratic import Quadratic
+
+    d = J.shape[1]
+    q = Quadratic(
+        A=J, b=-grad, nu=jnp.asarray(nu, J.dtype),
+        lam_diag=jnp.ones((d,), J.dtype),
+    )
+    res = adaptive_solve(
+        q,
+        AdaptiveConfig(method=method, sketch=sketch, max_iters=max_iters,
+                       tol=tol),
+        key=key,
+    )
+    return res.x, res

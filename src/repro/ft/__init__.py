@@ -1,0 +1,8 @@
+from .checkpoint import CheckpointManager
+from .resilience import (
+    ElasticPlan,
+    PreemptionHandler,
+    StragglerWatchdog,
+    plan_elastic,
+    run_with_restarts,
+)

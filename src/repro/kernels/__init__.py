@@ -1,0 +1,1 @@
+"""Pallas TPU kernels: fwht (SRHT core), sjlt (one-hot MXU sketch)."""

@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: Fast Walsh–Hadamard transform (the SRHT hot spot).
+
+The paper's SRHT sketch S·A = √(n/m)·R·H·E·A is dominated by the FWHT
+H·(E·A) over the n-dimension of A (cost O(n·d·log n)). On CPU/GPU this is a
+recursive butterfly; TPU-native design (DESIGN.md §3):
+
+* A is processed in column tiles: a (n, bc) tile of the sign-flipped matrix
+  lives in VMEM (BlockSpec over the d axis), padded so n is a power of two.
+* All log₂(n) butterfly stages run *inside one kernel invocation* on the
+  VPU via reshape/concat butterflies — no HBM round-trips between stages
+  (a CPU implementation is memory-bound precisely because each stage
+  streams n·d elements; fusing stages in VMEM turns log n passes into one).
+* For n too large for VMEM, the radix split H_n = (H_a ⊗ I_b)·(I_a ⊗ H_b)
+  in ``ops.fwht_large`` runs two kernel passes with a transpose between,
+  each pass transforming a VMEM-resident axis.
+
+Grid: (d / bc,) — one program per column tile; row axis is not tiled
+(the butterfly couples all n rows).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fwht_kernel(x_ref, o_ref, *, n: int):
+    """One column tile: x_ref (n, bc) in VMEM; all stages in-register."""
+    x = x_ref[...]
+    h = 1
+    while h < n:
+        x = x.reshape(n // (2 * h), 2, h, x.shape[-1])
+        a = x[:, 0]
+        b = x[:, 1]
+        x = jnp.concatenate([a + b, a - b], axis=1)
+        h *= 2
+    o_ref[...] = x.reshape(n, x.shape[-1])
+
+
+def fwht_pallas(
+    x: jnp.ndarray,
+    *,
+    block_cols: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Unnormalized FWHT along axis 0 of x (n, d); n must be a power of 2.
+
+    VMEM budget: n · block_cols · 4 bytes (f32) ≤ ~8 MiB ⇒ block_cols 128
+    handles n ≤ 16384; use ``ops.fwht_large`` beyond that.
+    """
+    n, d = x.shape
+    if n & (n - 1):
+        raise ValueError(f"n={n} must be a power of 2")
+    bc = min(block_cols, d)
+    pad = (-d) % bc
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+    dp = x.shape[1]
+
+    out = pl.pallas_call(
+        functools.partial(_fwht_kernel, n=n),
+        grid=(dp // bc,),
+        in_specs=[pl.BlockSpec((n, bc), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((n, bc), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((n, dp), x.dtype),
+        interpret=interpret,
+    )(x)
+    return out[:, :d] if pad else out

@@ -1,0 +1,90 @@
+"""jit'd public wrappers for the Pallas kernels, with CPU fallbacks.
+
+On TPU the kernels run compiled; on CPU (this container) they run in
+``interpret=True`` mode, which executes the kernel body step-by-step for
+correctness validation. ``use_pallas=None`` auto-selects by backend.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .fwht import fwht_pallas
+from .sjlt import sjlt_pallas
+
+_FWHT_VMEM_MAX_N = 16_384  # n · 128 cols · 4 B ≈ 8 MiB
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def fwht(x: jnp.ndarray, *, use_pallas: bool | None = None,
+         interpret: bool | None = None) -> jnp.ndarray:
+    """Unnormalized FWHT along axis 0 (n power of two)."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if interpret is None:
+        interpret = not _on_tpu()
+    n = x.shape[0]
+    if not use_pallas:
+        return ref.fwht_ref(x)
+    if n <= _FWHT_VMEM_MAX_N:
+        return fwht_pallas(x, interpret=interpret)
+    return fwht_large(x, interpret=interpret)
+
+
+def fwht_large(x: jnp.ndarray, *, interpret: bool = False) -> jnp.ndarray:
+    """Two-pass radix-split FWHT for n > VMEM capacity:
+    H_n = (H_a ⊗ I_b) (I_a ⊗ H_b) with n = a·b — pass 1 transforms the
+    b axis of each (b, ·) panel; the transpose re-tiles; pass 2 transforms
+    the a axis. Each pass is a VMEM-resident Pallas call."""
+    n, d = x.shape
+    lg = n.bit_length() - 1
+    lb = min(lg, _FWHT_VMEM_MAX_N.bit_length() - 1)
+    a, b = 1 << (lg - lb), 1 << lb
+    # pass 1: I_a ⊗ H_b — reshape to (a, b, d), FWHT over b per slab
+    y = x.reshape(a, b, d)
+    y = jax.vmap(lambda s: fwht_pallas(s, interpret=interpret))(y)
+    if a > 1:
+        # pass 2: H_a ⊗ I_b — FWHT over the a axis: fold (b·d) into columns
+        y = y.reshape(a, b * d)
+        y = fwht_pallas(y, interpret=interpret)
+        y = y.reshape(a, b, d)
+    return y.reshape(n, d)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "use_pallas", "interpret"))
+def sjlt_apply(A: jnp.ndarray, rows: jnp.ndarray, signs: jnp.ndarray, m: int,
+               *, use_pallas: bool | None = None,
+               interpret: bool | None = None) -> jnp.ndarray:
+    """S @ A for an s=1 SJLT given per-row targets/signs."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if interpret is None:
+        interpret = not _on_tpu()
+    if not use_pallas:
+        return ref.sjlt_ref(A, rows, signs, m)
+    return sjlt_pallas(A, rows, signs, m, interpret=interpret)
+
+
+def srht_sketch(A: jnp.ndarray, key: jax.Array, m: int, *,
+                use_pallas: bool | None = None,
+                interpret: bool | None = None) -> jnp.ndarray:
+    """Full SRHT sketch √(n_pad/m)·R·H·E·A using the FWHT kernel."""
+    n, d = A.shape
+    n_pad = 1 << max(0, (n - 1).bit_length())
+    k_sign, k_rows = jax.random.split(key)
+    signs = jax.random.rademacher(k_sign, (n,), dtype=A.dtype)
+    X = A * signs[:, None]
+    if n_pad != n:
+        X = jnp.pad(X, ((0, n_pad - n), (0, 0)))
+    HX = fwht(X, use_pallas=use_pallas, interpret=interpret)
+    rows = jax.random.choice(k_rows, n_pad, shape=(m,), replace=m > n_pad)
+    return HX[rows] * jnp.asarray(math.sqrt(1.0 / m), A.dtype)

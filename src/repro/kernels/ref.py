@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for the Pallas kernels (shape/dtype-sweep allclose)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fwht_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Unnormalized FWHT along axis 0. x: (n, d), n a power of two."""
+    n, d = x.shape
+    if n & (n - 1):
+        raise ValueError("n must be a power of 2")
+    h = 1
+    while h < n:
+        x = x.reshape(n // (2 * h), 2, h, d)
+        a, b = x[:, 0], x[:, 1]
+        x = jnp.concatenate([a + b, a - b], axis=1)
+        h *= 2
+    return x.reshape(n, d)
+
+
+def sjlt_ref(A: jnp.ndarray, rows: jnp.ndarray, signs: jnp.ndarray, m: int
+             ) -> jnp.ndarray:
+    """Segment-sum oracle for the SJLT kernel."""
+    return jax.ops.segment_sum(A * signs[:, None], rows, num_segments=m)
+
+
+def hadamard_dense(n: int) -> jnp.ndarray:
+    """Dense Hadamard matrix (tiny-n ground truth)."""
+    H = jnp.ones((1, 1), jnp.float32)
+    while H.shape[0] < n:
+        H = jnp.block([[H, H], [H, -H]])
+    return H

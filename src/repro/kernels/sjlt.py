@@ -1,0 +1,83 @@
+"""Pallas TPU kernel: SJLT sketch as one-hot MXU matmuls.
+
+The SJLT applies S (one signed non-zero per column) to A: a segment-sum
+    (SA)[r, :] = Σ_{i : row(i)=r} sign(i) · A[i, :].
+On CPU/GPU this is a scatter-add; scatters are hostile to the TPU (serialized
+through the scalar unit). TPU adaptation (DESIGN.md §3): per row-block of A,
+build the signed one-hot dispatch matrix on the fly from (rows, signs) via
+``broadcasted_iota`` comparison and contract it with the A tile on the MXU:
+
+    out += OneHot(rows_blk)ᵀ_signed (m × br) @ A_blk (br × d).
+
+The grid walks row blocks sequentially; the output block is revisited
+(index_map constant) and accumulated in place — the standard Pallas
+accumulator pattern. Dense systolic work replaces data-dependent scatter:
+bandwidth-bound instead of latency-bound.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sjlt_kernel(rows_ref, signs_ref, a_ref, o_ref, *, m: int):
+    i = pl.program_id(0)
+    rows = rows_ref[...]            # (br,) int32 target row per A-row
+    signs = signs_ref[...]          # (br,) ±1/√s
+    a = a_ref[...]                  # (br, bd)
+    br = a.shape[0]
+    # signed one-hot dispatch (m, br) built in VMEM
+    row_ids = jax.lax.broadcasted_iota(jnp.int32, (m, br), 0)
+    onehot = jnp.where(row_ids == rows[None, :], signs[None, :], 0.0).astype(
+        a.dtype
+    )
+    acc = jnp.dot(onehot, a, preferred_element_type=jnp.float32)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = acc.astype(o_ref.dtype)
+
+    @pl.when(i > 0)
+    def _acc():
+        o_ref[...] = (o_ref[...].astype(jnp.float32) + acc).astype(o_ref.dtype)
+
+
+def sjlt_pallas(
+    A: jnp.ndarray,
+    rows: jnp.ndarray,
+    signs: jnp.ndarray,
+    m: int,
+    *,
+    block_rows: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """S @ A for an s=1 SJLT. A: (n, d); rows/signs: (n,). Returns (m, d).
+
+    VMEM per step: br·d (A tile) + m·br (one-hot) + m·d (accumulator);
+    with br=256, m≤2048, d-tile = full d this targets ≤ ~8 MiB for d ≤ 4k.
+    """
+    n, d = A.shape
+    if n % block_rows:
+        pad = (-n) % block_rows
+        A = jnp.pad(A, ((0, pad), (0, 0)))
+        rows = jnp.pad(rows, (0, pad), constant_values=m)  # m = out of range
+        signs = jnp.pad(signs, (0, pad))
+        n = A.shape[0]
+    grid = (n // block_rows,)
+    out = pl.pallas_call(
+        functools.partial(_sjlt_kernel, m=m),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((m, d), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d), A.dtype),
+        interpret=interpret,
+    )(rows.astype(jnp.int32), signs.astype(A.dtype), A)
+    return out

@@ -1,0 +1,176 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+MUST be the process entry point (the XLA flag above is read at first jax
+init). For each cell it records memory_analysis(), cost_analysis(), and the
+collective-bytes sum parsed from the optimized HLO — incrementally to
+results/dryrun/<mesh>/<arch>__<shape>.json so interrupted runs resume.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun [--arch A] [--shape S]
+      [--mesh single|multi|both] [--out results/dryrun]
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import ARCHS, ALIASES, SHAPES, get_config, skip_reason
+from repro.launch.mesh import make_production_mesh
+from repro.analysis.collectives import collective_bytes_from_hlo
+from repro.analysis.hloflops import dot_flops_from_hlo
+
+
+def run_cell(arch: str, shape: str, mesh_name: str, out_dir: Path,
+             force: bool = False, scan_unroll: bool = False,
+             force_nmb=None, cfg_overrides=None, tag: str = "",
+             fsdp: bool = True, ce_chunks: int = 0) -> dict:
+    from repro.launch.specs import cell_specs
+
+    out_file = out_dir / mesh_name / f"{arch}__{shape}{tag}.json"
+    out_file.parent.mkdir(parents=True, exist_ok=True)
+    if out_file.exists() and not force:
+        rec = json.loads(out_file.read_text())
+        if rec.get("status") in ("ok", "skipped"):
+            print(f"[cached] {mesh_name}/{arch}/{shape}: {rec['status']}")
+            return rec
+
+    cfg = get_config(arch)
+    reason = skip_reason(cfg, shape)
+    rec = {
+        "arch": arch, "shape": shape, "mesh": mesh_name,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    }
+    if reason:
+        rec.update(status="skipped", reason=reason)
+        out_file.write_text(json.dumps(rec, indent=2))
+        print(f"[skip]   {mesh_name}/{arch}/{shape}: {reason}")
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    t0 = time.time()
+    try:
+        with mesh:
+            cell = cell_specs(arch, shape, mesh, scan_unroll=scan_unroll,
+                              force_nmb=force_nmb,
+                              cfg_overrides=cfg_overrides, fsdp=fsdp,
+                              ce_chunks=ce_chunks)
+            jitted = jax.jit(
+                cell.fn,
+                in_shardings=cell.in_shardings,
+                out_shardings=cell.out_shardings,
+                donate_argnums=cell.donate,
+            )
+            lowered = jitted.lower(*cell.args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+            coll = collective_bytes_from_hlo(hlo)
+            rec.update(
+                status="ok",
+                step_kind=cell.step_kind,
+                lower_s=round(t_lower, 1),
+                compile_s=round(t_compile, 1),
+                memory={
+                    k: getattr(mem, k, None)
+                    for k in (
+                        "argument_size_in_bytes",
+                        "output_size_in_bytes",
+                        "temp_size_in_bytes",
+                        "generated_code_size_in_bytes",
+                    )
+                },
+                flops=cost.get("flops"),
+                hlo_dot_flops=dot_flops_from_hlo(hlo),
+                bytes_accessed=cost.get("bytes accessed"),
+                collectives=coll,
+                n_devices=mesh.size,
+            )
+    except Exception as e:  # record failures — they are bugs to fix
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+    out_file.write_text(json.dumps(rec, indent=2))
+    status = rec["status"]
+    extra = (
+        f"compile={rec.get('compile_s')}s flops={rec.get('flops'):.3g}"
+        if status == "ok" else rec.get("error", "")[:200]
+    )
+    print(f"[{status:5s}] {mesh_name}/{arch}/{shape}: {extra}", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape (default: all)")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--unroll", action="store_true",
+                    help="unroll layer/microbatch scans so cost_analysis "
+                         "counts every iteration (analysis sweep)")
+    ap.add_argument("--override", default="",
+                    help="comma k=v ModelConfig overrides (perf variants); "
+                         "adds '-<k>' result-file tag")
+    ap.add_argument("--ce-chunks", type=int, default=0,
+                    help="blocked cross-entropy chunk count (perf variant)")
+    ap.add_argument("--no-fsdp", action="store_true",
+                    help="TP-only param sharding (perf variant; tags file)")
+    ap.add_argument("--nmb1", action="store_true",
+                    help="force num_microbatches=1 (same total FLOPs; "
+                         "bounds analysis-compile time — see EXPERIMENTS.md)")
+    args = ap.parse_args()
+
+    assert len(jax.devices()) == 512, (
+        "dry-run must own jax init (512 host devices); do not import jax "
+        "before this module"
+    )
+    out_dir = Path(args.out)
+    archs = [args.arch] if args.arch else list(ALIASES)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": ["single"], "multi": ["multi"],
+              "both": ["single", "multi"]}[args.mesh]
+    n_ok = n_skip = n_err = 0
+    for mesh_name in meshes:
+        for arch in archs:
+            for shape in shapes:
+                overrides = None
+                tag = ""
+                if args.override:
+                    overrides = {}
+                    for kv in args.override.split(","):
+                        k, v = kv.split("=")
+                        overrides[k] = (v == "1" or v == "true") if v in (
+                            "0", "1", "true", "false") else (
+                            int(v) if v.isdigit() else v)
+                        tag += f"-{k.replace('_','')}"
+                if args.no_fsdp:
+                    tag += "-nofsdp"
+                if args.ce_chunks:
+                    tag += f"-ce{args.ce_chunks}"
+                rec = run_cell(arch, shape, mesh_name, out_dir, args.force,
+                               scan_unroll=args.unroll,
+                               force_nmb=1 if args.nmb1 else None,
+                               cfg_overrides=overrides, tag=tag,
+                               fsdp=not args.no_fsdp,
+                               ce_chunks=args.ce_chunks)
+                n_ok += rec["status"] == "ok"
+                n_skip += rec["status"] == "skipped"
+                n_err += rec["status"] == "error"
+    print(f"\ndone: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    raise SystemExit(1 if n_err else 0)
+
+
+if __name__ == "__main__":
+    main()

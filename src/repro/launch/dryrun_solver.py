@@ -1,0 +1,206 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Dry-run of the paper's solver itself at production scale (the cell
+'most representative of the paper's technique' for §Perf).
+
+Workload: distributed ridge-probe head fit —
+    A  = backbone features, n = 2²¹ tokens × d = 8192 (row-sharded on data)
+    B  = AᵀY for a c = 1024 vocab-slice readout (replicated)
+    one adaptive *phase*: sketch (SJLT, m = 16384) → factorize H_S →
+    10 PCG iterations — the whole phase as ONE jitted program.
+
+Variants (selected with --variant, all must compile on both meshes):
+  baseline   SJLT via segment-sum scatter, A row-sharded over data only —
+             the paper's algorithm verbatim (model axis idle, as a faithful
+             port of the single-node layout would leave it)
+  2d         beyond-paper: A sharded (data × model) — every A-pass contracts
+             a model-sharded d with one psum; 16× less per-device compute
+  2d-bf16    2d + bf16 A-matvecs with f32 reductions (PCG is self-correcting;
+             §Perf records the convergence check)
+  flat       beyond-paper: n row-sharded over the FLATTENED mesh (256-way),
+             d unsharded — PCG state (d×c) is small, so each iteration's
+             only collective is the 33 MB AᵀAv partial-sum all-reduce
+  flat-bf16  flat + bf16 matvecs
+  gaussian   dense Gaussian sketch (bandwidth-maximal reference point)
+
+Writes results/dryrun[_analysis]/<mesh>/solver__ridge[-variant].json in the
+same record format as the arch cells.
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.analysis.collectives import collective_bytes_from_hlo
+from repro.analysis.hloflops import dot_flops_from_hlo
+from repro.launch.mesh import make_production_mesh
+
+N_TOKENS = 1 << 21
+D_FEAT = 8192
+N_CLASSES = 1024
+M_SKETCH = 16384
+NU = 1e-1
+PCG_ITERS = 10
+
+
+def _pcg_iters(A, b, P_solve, x0, iters, unroll, matvec_dtype=jnp.float32):
+    """Matrix-RHS PCG on H = AᵀA + ν²I with preconditioner solve P_solve."""
+    nu2 = jnp.asarray(NU * NU, jnp.float32)
+
+    def hvp(v):
+        Am = A.astype(matvec_dtype)
+        av = (Am @ v.astype(matvec_dtype)).astype(jnp.float32)
+        return (Am.T @ av.astype(matvec_dtype)).astype(jnp.float32) + nu2 * v
+
+    r0 = b - hvp(x0)
+    rt0 = P_solve(r0)
+    dt0 = jnp.sum(r0 * rt0)
+
+    def body(carry, _):
+        x, r, rt, p, dt = carry
+        Hp = hvp(p)
+        alpha = dt / jnp.maximum(jnp.sum(p * Hp), 1e-30)
+        x = x + alpha * p
+        r = r - alpha * Hp
+        rt = P_solve(r)
+        dt_new = jnp.sum(r * rt)
+        beta = dt_new / jnp.maximum(dt, 1e-30)
+        p = rt + beta * p
+        return (x, r, rt, p, dt_new), dt_new
+
+    init = (x0, r0, rt0, rt0, dt0)
+    (x, *_), trace = jax.lax.scan(body, init, None, length=iters,
+                                  unroll=iters if unroll else 1)
+    return x, trace
+
+
+def make_step(variant: str, mesh, unroll: bool):
+    data_axes = tuple(a for a in mesh.axis_names if a != "model")
+
+    def sketch_baseline(A, rows, signs):
+        # paper's SJLT as a global segment-sum (GSPMD partitions the scatter)
+        return jax.ops.segment_sum(A * signs[:, None], rows,
+                                   num_segments=M_SKETCH)
+
+    def sketch_gaussian(A, key):
+        S = jax.random.normal(key, (M_SKETCH, N_TOKENS), jnp.bfloat16)
+        return (S @ A.astype(jnp.bfloat16)).astype(jnp.float32) / jnp.sqrt(
+            jnp.asarray(M_SKETCH, jnp.float32)
+        )
+
+    def step(A, B, rows, signs, key):
+        if variant == "gaussian":
+            SA = sketch_gaussian(A, key)
+        else:
+            SA = sketch_baseline(A, rows, signs)
+        nu2 = jnp.asarray(NU * NU, jnp.float32)
+        H_S = SA.T @ SA + nu2 * jnp.eye(D_FEAT, dtype=jnp.float32)
+        chol = jnp.linalg.cholesky(H_S)
+
+        def P_solve(z):
+            y = jax.scipy.linalg.solve_triangular(chol, z, lower=True)
+            return jax.scipy.linalg.solve_triangular(chol.T, y, lower=False)
+
+        x0 = jnp.zeros((D_FEAT, N_CLASSES), jnp.float32)
+        mv_dtype = (jnp.bfloat16 if variant.endswith("bf16")
+                    else jnp.float32)
+        x, trace = _pcg_iters(A, B, P_solve, x0, PCG_ITERS, unroll,
+                              matvec_dtype=mv_dtype)
+        return x, trace[-1]
+
+    return step
+
+
+def run(variant: str, mesh_name: str, out_dir: Path, unroll: bool):
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    data_axes = tuple(a for a in mesh.axis_names if a != "model")
+    rec = {"arch": f"solver-ridge-{variant}", "shape": "probe_2m_8k",
+           "mesh": mesh_name, "params": D_FEAT * N_CLASSES,
+           "active_params": D_FEAT * N_CLASSES}
+    t0 = time.time()
+    try:
+        with mesh:
+            step = make_step(variant, mesh, unroll)
+            if variant.startswith("2d"):
+                a_spec = P(data_axes, "model")
+                v_spec = P(data_axes)
+            elif variant.startswith("flat"):
+                all_axes = data_axes + ("model",)
+                a_spec = P(all_axes, None)
+                v_spec = P(all_axes)
+            else:
+                a_spec = P(data_axes, None)
+                v_spec = P(data_axes)
+            a_sh = NamedSharding(mesh, a_spec)
+            v_sh = NamedSharding(mesh, v_spec)
+            rep = NamedSharding(mesh, P())
+            sds = jax.ShapeDtypeStruct
+            args = (
+                sds((N_TOKENS, D_FEAT), jnp.float32),
+                sds((D_FEAT, N_CLASSES), jnp.float32),
+                sds((N_TOKENS,), jnp.int32),
+                sds((N_TOKENS,), jnp.float32),
+                sds((2,), jnp.uint32),
+            )
+            jitted = jax.jit(
+                step,
+                in_shardings=(a_sh, rep, v_sh, v_sh, rep),
+                out_shardings=(rep, rep),
+            )
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+            coll = collective_bytes_from_hlo(hlo)
+            hdf = dot_flops_from_hlo(hlo)
+            rec.update(
+                status="ok", step_kind="solver",
+                lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+                memory={k: getattr(mem, k, None) for k in (
+                    "argument_size_in_bytes", "output_size_in_bytes",
+                    "temp_size_in_bytes", "generated_code_size_in_bytes")},
+                flops=cost.get("flops"),
+                hlo_dot_flops=hdf,
+                bytes_accessed=cost.get("bytes accessed"),
+                collectives=coll, n_devices=mesh.size,
+            )
+    except Exception as e:
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+    out = out_dir / mesh_name / f"solver__ridge-{variant}.json"
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(rec, indent=2))
+    msg = (f"compile={rec.get('compile_s')}s flops={rec.get('flops'):.3g} "
+           f"coll={rec['collectives']['total_bytes']/2**30:.2f}GiB"
+           if rec["status"] == "ok" else rec.get("error", "")[:200])
+    print(f"[{rec['status']:5s}] {mesh_name}/solver-{variant}: {msg}",
+          flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--variant", default="baseline",
+                    choices=["baseline", "2d", "2d-bf16", "flat",
+                             "flat-bf16", "gaussian"])
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--unroll", action="store_true")
+    args = ap.parse_args()
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    for m in meshes:
+        run(args.variant, m, Path(args.out), args.unroll)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Batched serving launcher: load (or init) a model, prefill a batch of
+prompts, stream greedy continuations. CPU-scale here; the pod launch uses
+the same decode_step under the production mesh (see launch/dryrun.py
+decode cells for the compiled configuration).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-3b --reduced
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.ft import CheckpointManager
+from repro.models import init_params
+from repro.serve.step import greedy_generate
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--ckpt-dir", default="",
+                    help="restore params from a training checkpoint")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    max_seq = args.prompt_len + args.new_tokens + 1
+    params = init_params(jax.random.PRNGKey(0), cfg, max_seq=max_seq)
+    if args.ckpt_dir:
+        mgr = CheckpointManager(args.ckpt_dir)
+        (params, _), _ = mgr.restore((params, None))
+
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab
+    )
+    enc = None
+    if cfg.n_enc_layers:
+        enc = jax.random.normal(
+            jax.random.PRNGKey(2), (args.batch, cfg.enc_seq, cfg.d_model)
+        )
+    t0 = time.perf_counter()
+    out = greedy_generate(params, cfg, prompts, args.new_tokens,
+                          max_seq=max_seq, enc_feats=enc)
+    dt = time.perf_counter() - t0
+    print(f"{cfg.name}: {args.batch}×{args.new_tokens} tokens in {dt:.2f}s "
+          f"({args.batch*args.new_tokens/dt:.1f} tok/s)")
+    print("ids:", out[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

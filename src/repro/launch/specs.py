@@ -1,0 +1,167 @@
+"""ShapeDtypeStruct stand-ins for every dry-run cell (no device allocation).
+
+``cell_specs(arch, shape)`` returns everything the dry-run needs to lower a
+cell: the step kind, abstract inputs, and their NamedShardings for a given
+mesh. Parameters/optimizer/caches are derived with ``jax.eval_shape`` over
+the real init functions, so the dry-run lowers the exact production program.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.dist.sharding import (
+    batch_axes,
+    cache_specs,
+    input_specs_for,
+    param_specs,
+)
+from repro.models import init_cache, init_params
+from repro.models.config import ModelConfig
+from repro.serve.step import decode_step, prefill_step
+from repro.train.optimizer import AdamWConfig, init_opt_state
+from repro.train.step import TrainConfig, make_train_step
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def microbatches_for(cfg: ModelConfig, global_batch: int) -> int:
+    """Keep per-microbatch logits + activations bounded: target a global
+    microbatch of 32 sequences for wide models, 64 otherwise."""
+    target = 32 if cfg.d_model >= 3584 or cfg.n_experts else 64
+    nmb = max(1, global_batch // target)
+    while global_batch % nmb:
+        nmb -= 1
+    return nmb
+
+
+@dataclasses.dataclass
+class CellSpec:
+    arch: str
+    shape: str
+    step_kind: str                  # train | prefill | decode
+    fn: Callable                    # jit-able (positional pytree args)
+    args: tuple                     # ShapeDtypeStructs
+    in_shardings: tuple
+    out_shardings: Any
+    donate: tuple = ()
+
+
+def params_dtype_struct(cfg: ModelConfig, max_seq: int, dtype=None):
+    tree = jax.eval_shape(
+        lambda: init_params(jax.random.PRNGKey(0), cfg, max_seq=max_seq)
+    )
+    if dtype is not None:
+        tree = jax.tree.map(lambda s: _sds(s.shape, dtype), tree)
+    return tree
+
+
+def cell_specs(arch: str, shape_name: str, mesh: Mesh,
+               *, scan_unroll: bool = False,
+               force_nmb: int | None = None,
+               cfg_overrides: dict | None = None,
+               fsdp: bool = True, ce_chunks: int = 0) -> CellSpec:
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    shp = SHAPES[shape_name]
+    B, S = shp.global_batch, shp.seq_len
+    dp = batch_axes(mesh)
+    ns = lambda spec: NamedSharding(mesh, spec)
+    tok_sh = ns(input_specs_for(mesh, B))
+
+    if shp.step == "train":
+        max_seq = S if cfg.pos_embedding == "learned" else 4096
+        p_shapes = params_dtype_struct(cfg, max_seq)
+        opt_shapes = jax.eval_shape(init_opt_state, p_shapes)
+        p_spec = param_specs(cfg, p_shapes, mesh, fsdp=fsdp)
+        p_sh = jax.tree.map(ns, p_spec)
+        opt_sh = type(opt_shapes)(
+            mu=jax.tree.map(ns, p_spec),
+            nu=jax.tree.map(ns, p_spec),
+            step=ns(P()),
+        )
+        batch = {
+            "tokens": _sds((B, S), jnp.int32),
+            "labels": _sds((B, S), jnp.int32),
+            "mask": _sds((B, S), jnp.float32),
+        }
+        batch_sh = {"tokens": tok_sh, "labels": tok_sh, "mask": tok_sh}
+        if cfg.n_enc_layers:
+            batch["enc_feats"] = _sds((B, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+            batch_sh["enc_feats"] = ns(P(*input_specs_for(mesh, B), None))
+        tcfg = TrainConfig(
+            opt=AdamWConfig(),
+            num_microbatches=force_nmb or microbatches_for(cfg, B),
+            scan_unroll=scan_unroll,
+            ce_chunks=ce_chunks,
+        )
+        fn = make_train_step(cfg, tcfg)
+        metrics_sh = {k: ns(P()) for k in
+                      ("loss", "ce", "grad_norm", "lr")}
+        return CellSpec(
+            arch=arch, shape=shape_name, step_kind="train", fn=fn,
+            args=(p_shapes, opt_shapes, batch),
+            in_shardings=(p_sh, opt_sh, batch_sh),
+            out_shardings=(p_sh, opt_sh, metrics_sh),
+            donate=(0, 1),
+        )
+
+    # ---- inference cells: params in bf16, TP-sharded ----
+    max_seq = S
+    p_shapes = params_dtype_struct(cfg, max_seq, dtype=jnp.bfloat16)
+    p_spec = param_specs(cfg, p_shapes, mesh, fsdp=False)
+    p_sh = jax.tree.map(ns, p_spec)
+    cache_shapes = jax.eval_shape(
+        lambda: init_cache(cfg, B, max_seq, dtype=jnp.bfloat16)
+    )
+    c_spec = cache_specs(cfg, cache_shapes, mesh)
+    c_sh = jax.tree.map(ns, c_spec)
+    logits_sh = ns(input_specs_for(mesh, B))
+
+    if shp.step == "prefill":
+        def fn(params, tokens, cache, enc_feats=None):
+            return prefill_step(
+                params, cfg, tokens, cache, enc_feats=enc_feats,
+                scan_unroll=scan_unroll,
+            )
+
+        args = [p_shapes, _sds((B, S), jnp.int32), cache_shapes]
+        in_sh = [p_sh, tok_sh, c_sh]
+        if cfg.n_enc_layers:
+            args.append(_sds((B, cfg.enc_seq, cfg.d_model), jnp.bfloat16))
+            in_sh.append(ns(P(*input_specs_for(mesh, B), None)))
+        return CellSpec(
+            arch=arch, shape=shape_name, step_kind="prefill",
+            fn=fn, args=tuple(args), in_shardings=tuple(in_sh),
+            out_shardings=(logits_sh, c_sh),
+            donate=(2,),
+        )
+
+    # decode: one new token against a seq_len cache
+    def dfn(params, token, cache, cache_pos):
+        return decode_step(params, cfg, token, cache, cache_pos,
+                           scan_unroll=scan_unroll)
+
+    args = (
+        p_shapes,
+        _sds((B, 1), jnp.int32),
+        cache_shapes,
+        _sds((), jnp.int32),
+    )
+    in_sh = (p_sh, tok_sh, c_sh, ns(P()))
+    return CellSpec(
+        arch=arch, shape=shape_name, step_kind="decode",
+        fn=dfn, args=args, in_shardings=in_sh,
+        out_shardings=(logits_sh, c_sh),
+        donate=(2,),
+    )

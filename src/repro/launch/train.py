@@ -1,0 +1,112 @@
+"""End-to-end training launcher (CPU-scale on this container; same code
+path the pod launch uses, minus the device count).
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b \
+        --steps 200 --reduced --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+
+Wires together: config → params → mesh + shardings → data pipeline →
+train_step → checkpoint manager + straggler watchdog + preemption handler,
+with auto-resume from the latest committed checkpoint.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.data.pipeline import SyntheticLM
+from repro.dist.sharding import input_specs_for, param_specs
+from repro.ft import CheckpointManager, PreemptionHandler, StragglerWatchdog
+from repro.launch.mesh import make_host_mesh
+from repro.models import init_params
+from repro.train import AdamWConfig, TrainConfig, init_opt_state
+from repro.train.step import make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--save-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--compute-dtype", default="float32")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    mesh = make_host_mesh()
+    print(f"arch={cfg.name} params={cfg.param_count()/1e6:.1f}M "
+          f"mesh={dict(mesh.shape)}")
+
+    tcfg = TrainConfig(
+        opt=AdamWConfig(lr=args.lr, warmup_steps=20, total_steps=args.steps),
+        num_microbatches=args.microbatches,
+        compute_dtype=jnp.dtype(args.compute_dtype),
+        remat=True,
+    )
+    params = init_params(jax.random.PRNGKey(0), cfg, max_seq=args.seq)
+    opt_state = init_opt_state(params)
+    p_sh = jax.tree.map(
+        lambda s: NamedSharding(mesh, s), param_specs(cfg, params, mesh)
+    )
+    params = jax.device_put(params, p_sh)
+    data = SyntheticLM(vocab=cfg.vocab, batch=args.batch, seq_len=args.seq)
+
+    step_fn = jax.jit(make_train_step(cfg, tcfg), donate_argnums=(0, 1))
+
+    ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    start = 0
+    if ckpt and ckpt.latest_step() is not None:
+        (params, opt_state), extra = ckpt.restore((params, opt_state))
+        data.restore(extra["data"])
+        start = extra["step"]
+        print(f"resumed from step {start}")
+
+    watchdog = StragglerWatchdog()
+    with mesh, PreemptionHandler() as preempt:
+        t0 = time.perf_counter()
+        for step in range(start, args.steps):
+            batch = jax.tree.map(jnp.asarray, next(data))
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            dt = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            watchdog.record(dt)
+            if (step + 1) % args.log_every == 0:
+                m = jax.tree.map(float, metrics)
+                print(f"step {step+1:5d} loss={m['loss']:.4f} "
+                      f"ce={m['ce']:.4f} gnorm={m['grad_norm']:.3f} "
+                      f"lr={m['lr']:.2e} dt={dt*1e3:.0f}ms")
+            if ckpt and (step + 1) % args.save_every == 0:
+                ckpt.save(step + 1, (params, opt_state),
+                          extra={"step": step + 1, "data": data.state()},
+                          blocking=False)
+            if preempt.should_stop:
+                print("preemption requested — checkpointing and exiting")
+                if ckpt:
+                    ckpt.wait()
+                    ckpt.save(step + 1, (params, opt_state),
+                              extra={"step": step + 1, "data": data.state()})
+                return
+        if ckpt:
+            ckpt.wait()
+            ckpt.save(args.steps, (params, opt_state),
+                      extra={"step": args.steps, "data": data.state()})
+    if watchdog.flagged:
+        print("straggler hosts flagged:", watchdog.flagged)
+    print("training complete")
+
+
+if __name__ == "__main__":
+    main()

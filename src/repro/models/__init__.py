@@ -1,0 +1,19 @@
+"""Architecture zoo: pure-functional JAX models for the 10 assigned archs."""
+
+from .config import ModelConfig
+from .transformer import (
+    build_cross_cache,
+    encode,
+    forward,
+    init_cache,
+    init_params,
+)
+
+__all__ = [
+    "ModelConfig",
+    "forward",
+    "init_params",
+    "init_cache",
+    "encode",
+    "build_cross_cache",
+]

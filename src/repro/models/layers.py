@@ -1,0 +1,534 @@
+"""Layer implementations for the architecture zoo (pure functional JAX).
+
+Conventions:
+* params are nested dicts of jnp arrays; init_* returns params, apply takes
+  (params, cfg, x, ...) and never mutates.
+* activations x are (B, S, D). Decode passes S=1 plus a cache.
+* compute happens in ``x.dtype`` (callers cast to bf16); norms/softmax in f32.
+* caches are dicts per layer kind; see each block's docstring.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig, MOE_KINDS, WINDOWED_KINDS
+
+
+# ---------------------------------------------------------------------------
+# Norms, embeddings, positional encodings
+# ---------------------------------------------------------------------------
+
+def init_rms_norm(d: int) -> dict:
+    return {"scale": jnp.zeros((d,), jnp.float32)}
+
+
+def rms_norm(p: dict, x: jnp.ndarray, eps: float) -> jnp.ndarray:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * (1.0 + p["scale"])
+    return y.astype(dtype)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding. x: (B, S, H, hd); positions: (B, S) or (S,)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freq  # (B,S,half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def softcap(logits: jnp.ndarray, cap: float) -> jnp.ndarray:
+    if cap and cap > 0:
+        return cap * jnp.tanh(logits / cap)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA; full-causal / sliding-window / bidirectional / cross)
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False) -> dict:
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    scale_q = 1.0 / math.sqrt(d)
+    p = {
+        "wq": jax.random.normal(ks[0], (d, H, hd), jnp.float32) * scale_q,
+        "wk": jax.random.normal(ks[1], (d, KV, hd), jnp.float32) * scale_q,
+        "wv": jax.random.normal(ks[2], (d, KV, hd), jnp.float32) * scale_q,
+        "wo": jax.random.normal(ks[3], (H, hd, d), jnp.float32)
+        * (1.0 / math.sqrt(H * hd)),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((H, hd), jnp.float32)
+        p["bk"] = jnp.zeros((KV, hd), jnp.float32)
+        p["bv"] = jnp.zeros((KV, hd), jnp.float32)
+    return p
+
+
+def _qkv(p, cfg, x, x_kv=None):
+    dt = x.dtype
+    x_kv = x if x_kv is None else x_kv
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x_kv, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x_kv, p["wv"].astype(dt))
+    if "bq" in p:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    return q, k, v
+
+
+def _attend(q, k, v, cfg: ModelConfig, mask_bias) -> jnp.ndarray:
+    """q: (B,Sq,H,hd); k/v: (B,Skv,KV,hd); mask_bias: (B or 1, Sq, Skv)."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd)
+    logits = jnp.einsum("bqkgd,btkd->bkgqt", qg, k) / math.sqrt(hd)
+    logits = softcap(logits.astype(jnp.float32), cfg.attn_softcap)
+    logits = logits + mask_bias[:, None, None, :, :]
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqt,btkd->bqkgd", w, v)
+    return out.reshape(B, Sq, H, hd)
+
+
+def causal_mask_bias(
+    sq: int, skv: int, *, offset: int = 0, window: int = 0,
+    bidirectional: bool = False, dtype=jnp.float32,
+) -> jnp.ndarray:
+    """Additive (1, Sq, Skv) mask. offset = absolute position of query 0
+    minus position of key 0 (for caches). window>0 = sliding window."""
+    qpos = jnp.arange(sq)[:, None] + offset
+    kpos = jnp.arange(skv)[None, :]
+    ok = jnp.ones((sq, skv), bool) if bidirectional else (kpos <= qpos)
+    if window and window > 0:
+        ok = ok & (kpos > qpos - window)
+    neg = jnp.asarray(jnp.finfo(jnp.float32).min, jnp.float32)
+    return jnp.where(ok, 0.0, neg)[None].astype(dtype)
+
+
+def attention(
+    p: dict,
+    cfg: ModelConfig,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    *,
+    kind: str,
+    cache: Optional[dict] = None,
+    cache_pos: Optional[jnp.ndarray] = None,
+    enc_out: Optional[jnp.ndarray] = None,
+):
+    """Self- or cross-attention. Returns (out, new_cache).
+
+    cache (self-attn): {"k","v"}: (B, S_cache, KV, hd); cache_pos: scalar
+    int32, number of valid cached tokens (also the absolute position of the
+    incoming token for full caches; for windowed caches the cache is a ring
+    buffer and cache_pos is the absolute position).
+    """
+    window = cfg.window if kind in WINDOWED_KINDS else 0
+    bidir = kind == "enc"
+    if enc_out is not None:
+        # cross attention (no mask, no rope)
+        q, k, v = _qkv(p, cfg, x, x_kv=enc_out)
+        bias = jnp.zeros((1, x.shape[1], enc_out.shape[1]), jnp.float32)
+        out = _attend(q, k, v, cfg, bias)
+        dt = x.dtype
+        return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt)), None
+
+    q, k, v = _qkv(p, cfg, x)
+    if cfg.pos_embedding == "rope":
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    if cfg.seq_shard_attn and x.shape[1] > 1:
+        # Sequence-parallel attention: shard queries over 'model' (kv stays
+        # replicated) — softmax over keys remains device-local; used when
+        # n_heads % TP ≠ 0 would otherwise replicate the whole attention.
+        from jax.sharding import PartitionSpec as _P
+        q = jax.lax.with_sharding_constraint(
+            q, _P(None, "model", None, None))
+
+    new_cache = None
+    if cache is not None:
+        S_cache = cache["k"].shape[1]
+        Sq = x.shape[1]
+        neg = jnp.asarray(jnp.finfo(jnp.float32).min, jnp.float32)
+        if window and window > 0 and S_cache == window:
+            if Sq == 1:
+                # Decode into a ring buffer: slot i holds the most recent
+                # absolute position p ≤ cache_pos with p ≡ i (mod window).
+                slot = cache_pos % window
+                ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+                cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+                kabs = cache_pos - ((slot - jnp.arange(window)) % window)
+                bias = jnp.where(kabs >= 0, 0.0, neg)[None, None, :]
+                out = _attend(q, ck, cv, cfg, bias)
+            else:
+                # Prefill from an empty cache (cache_pos = 0, Sq ≥ window):
+                # attend directly, then store the last `window` tokens at
+                # their ring slots (slot of abs pos p is p % window).
+                bias = causal_mask_bias(Sq, Sq, window=window)
+                out = _attend(q, k, v, cfg, bias)
+                ck = jnp.roll(k[:, -window:], Sq % window, axis=1)
+                cv = jnp.roll(v[:, -window:], Sq % window, axis=1)
+            new_cache = {"k": ck, "v": cv}
+        else:
+            ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, cache_pos, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, cache_pos, 0, 0))
+            kpos = jnp.arange(S_cache)[None, :]
+            qpos = cache_pos + jnp.arange(Sq)[:, None]
+            ok = kpos <= qpos
+            if window and window > 0:
+                ok = ok & (kpos > qpos - window)
+            bias = jnp.where(ok, 0.0, neg)[None]
+            out = _attend(q, ck, cv, cfg, bias)
+            new_cache = {"k": ck, "v": cv}
+    else:
+        bias = causal_mask_bias(
+            x.shape[1], x.shape[1], window=window, bidirectional=bidir
+        )
+        out = _attend(q, k, v, cfg, bias)
+
+    dt = x.dtype
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+    return y, new_cache
+
+
+def cross_attention_cached(p, cfg, x, cache):
+    """Decode-time cross-attention against precomputed enc K/V."""
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    bias = jnp.zeros((1, x.shape[1], cache["ck"].shape[1]), jnp.float32)
+    out = _attend(q, cache["ck"], cache["cv"], cfg, bias)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP (SwiGLU or GELU)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    s_in = 1.0 / math.sqrt(d)
+    s_out = 1.0 / math.sqrt(f)
+    p = {
+        "wi": jax.random.normal(ks[0], (d, f), jnp.float32) * s_in,
+        "wo": jax.random.normal(ks[2], (f, d), jnp.float32) * s_out,
+    }
+    if cfg.mlp_act == "swiglu":
+        p["wg"] = jax.random.normal(ks[1], (d, f), jnp.float32) * s_in
+    return p
+
+
+def mlp(p: dict, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    dt = x.dtype
+    h = x @ p["wi"].astype(dt)
+    if "wg" in p:
+        h = jax.nn.silu(x @ p["wg"].astype(dt)) * h
+    else:
+        h = jax.nn.gelu(h)
+    return h @ p["wo"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# MoE MLP — group-capacity dispatch via one-hot einsums (Mesh-TF style).
+# Groups bound the dispatch tensor to O(T_g² · k · cf); group size 512.
+# ---------------------------------------------------------------------------
+
+MOE_GROUP = 512
+
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    d, E, f = cfg.d_model, cfg.n_experts, cfg.d_expert_eff
+    ks = jax.random.split(key, 5)
+    s_in = 1.0 / math.sqrt(d)
+    s_out = 1.0 / math.sqrt(f)
+    p = {
+        "router": jax.random.normal(ks[0], (d, E), jnp.float32) * s_in,
+        "wi": jax.random.normal(ks[1], (E, d, f), jnp.float32) * s_in,
+        "wg": jax.random.normal(ks[2], (E, d, f), jnp.float32) * s_in,
+        "wo": jax.random.normal(ks[3], (E, f, d), jnp.float32) * s_out,
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(ks[4], cfg, d_ff=cfg.n_shared_experts * f)
+    return p
+
+
+def moe(p: dict, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, S, D). Top-k routing with per-group capacity; dropped tokens
+    pass through the residual only (standard capacity-drop semantics)."""
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    dt = x.dtype
+    g_sz = min(MOE_GROUP, S)
+    G = (B * S) // g_sz
+    xg = x.reshape(G, g_sz, D)
+    C = max(1, int(math.ceil(k * g_sz * cfg.capacity_factor / E)))
+
+    logits = (xg.astype(jnp.float32)) @ p["router"]  # (G, T, E) in f32
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)  # (G, T, k)
+    # renormalize the top-k gates (mixtral/qwen practice)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # Positions within each expert queue, per top-k slot, priority by k-slot.
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)  # (G,T,k,E)
+    flat = onehot.transpose(0, 2, 1, 3).reshape(G, k * g_sz, E)
+    pos = jnp.cumsum(flat, axis=1) - flat  # (G, k·T, E) position per entry
+    pos = pos.reshape(G, k, g_sz, E).transpose(0, 2, 1, 3)  # (G,T,k,E)
+    in_cap = (pos < C).astype(jnp.float32) * onehot
+    pos_cap = jnp.clip(jnp.sum(pos * onehot, axis=-1), 0, C - 1)  # (G,T,k)
+    slot_oh = jax.nn.one_hot(pos_cap, C, dtype=jnp.float32)  # (G,T,k,C)
+
+    # dispatch/combine: (G, T, E, C)
+    dispatch = jnp.einsum("gtke,gtkc->gtec", in_cap, slot_oh)
+    combine = jnp.einsum(
+        "gtke,gtkc,gtk->gtec", in_cap, slot_oh, gate_vals
+    )
+
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch.astype(dt), xg)  # (G,E,C,D)
+    h = jnp.einsum("gecd,edf->gecf", xe, p["wi"].astype(dt))
+    hg = jnp.einsum("gecd,edf->gecf", xe, p["wg"].astype(dt))
+    h = jax.nn.silu(hg) * h
+    ye = jnp.einsum("gecf,efd->gecd", h, p["wo"].astype(dt))
+    y = jnp.einsum("gecd,gtec->gtd", ye, combine.astype(dt))
+    y = y.reshape(B, S, D)
+    if "shared" in p:
+        y = y + mlp(p["shared"], cfg, x)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Griffin / RecurrentGemma RG-LRU recurrent block
+# cache: {"h": (B, W), "conv": (B, conv_width-1, W)}
+# ---------------------------------------------------------------------------
+
+RG_LRU_HEADS = 16  # Griffin uses block-diagonal gate matrices
+
+
+def init_rnn(key, cfg: ModelConfig) -> dict:
+    d, w = cfg.d_model, cfg.rnn_width_eff
+    nh = RG_LRU_HEADS if w % RG_LRU_HEADS == 0 else 1
+    wh = w // nh
+    ks = jax.random.split(key, 7)
+    s = 1.0 / math.sqrt(d)
+    # a_param initialized so decay a ≈ 0.9–0.999 (Griffin init)
+    c = 8.0
+    lam = jax.random.uniform(ks[4], (w,), jnp.float32, 0.9, 0.999)
+    a_param = jnp.log(jnp.expm1((-jnp.log(lam)) / c))  # softplus⁻¹
+    return {
+        "wx": jax.random.normal(ks[0], (d, w), jnp.float32) * s,
+        "wgate": jax.random.normal(ks[1], (d, w), jnp.float32) * s,
+        "conv": jax.random.normal(ks[2], (cfg.conv_width, w), jnp.float32)
+        * (1.0 / math.sqrt(cfg.conv_width)),
+        # block-diagonal input/recurrence gates (Griffin): (heads, wh, wh)
+        "w_in_gate": jax.random.normal(ks[3], (nh, wh, wh), jnp.float32)
+        * (1.0 / math.sqrt(wh)),
+        "w_a_gate": jax.random.normal(ks[5], (nh, wh, wh), jnp.float32)
+        * (1.0 / math.sqrt(wh)),
+        "a_param": a_param,
+        "wo": jax.random.normal(ks[6], (w, d), jnp.float32)
+        * (1.0 / math.sqrt(w)),
+    }
+
+
+def _block_diag_gate(wg, u):
+    """u: (B,S,W) → sigmoid(u @ blockdiag(wg)): wg (nh, wh, wh)."""
+    B, S, W = u.shape
+    nh, wh, _ = wg.shape
+    uh = u.reshape(B, S, nh, wh)
+    return jax.nn.sigmoid(
+        jnp.einsum("bshw,hwv->bshv", uh, wg.astype(u.dtype)).reshape(B, S, W)
+    )
+
+
+def _rg_lru(p, u: jnp.ndarray, h0: jnp.ndarray):
+    """RG-LRU over a sequence. u: (B, S, W); h0: (B, W). Returns (y, h_T)."""
+    c = 8.0
+    r_gate = _block_diag_gate(p["w_a_gate"], u)
+    i_gate = _block_diag_gate(p["w_in_gate"], u)
+    log_a = -c * jax.nn.softplus(p["a_param"]).astype(jnp.float32) * r_gate.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    gated = (u * i_gate).astype(jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated
+
+    def combine(l, r):
+        a1, b1 = l
+        a2, b2 = r
+        return a1 * a2, a2 * b1 + b2
+
+    # prepend carry as step 0: h_t = a_t h_{t-1} + b_t with h_{-1} = h0
+    a_all = jnp.concatenate([jnp.ones_like(a[:, :1]), a], axis=1)
+    b_all = jnp.concatenate([h0.astype(jnp.float32)[:, None], b], axis=1)
+    _, hs = jax.lax.associative_scan(combine, (a_all, b_all), axis=1)
+    y = hs[:, 1:]
+    return y.astype(u.dtype), y[:, -1].astype(jnp.float32)
+
+
+def rnn_block(p, cfg: ModelConfig, x: jnp.ndarray, cache=None):
+    """Griffin recurrent block. Returns (out, new_cache)."""
+    dt = x.dtype
+    B, S, _ = x.shape
+    w = cfg.rnn_width_eff
+    u = x @ p["wx"].astype(dt)          # (B,S,W)
+    gate = jax.nn.gelu(x @ p["wgate"].astype(dt))
+    cw = cfg.conv_width
+    if cache is not None:
+        hist = jnp.concatenate([cache["conv"].astype(dt), u], axis=1)
+        h0 = cache["h"]
+    else:
+        hist = jnp.pad(u, ((0, 0), (cw - 1, 0), (0, 0)))
+        h0 = jnp.zeros((B, w), jnp.float32)
+    conv = sum(
+        hist[:, i : i + S] * p["conv"][i].astype(dt) for i in range(cw)
+    )
+    y, h_T = _rg_lru(p, conv, h0)
+    out = (y * gate) @ p["wo"].astype(dt)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"h": h_T, "conv": hist[:, -(cw - 1):].astype(cache["conv"].dtype)}
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 (Finch) block: time-mix with data-dependent decay + channel-mix.
+# cache: {"S": (B, H, hd, hd), "tm_x": (B, D), "cm_x": (B, D)}
+# ---------------------------------------------------------------------------
+
+def init_rwkv(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    r = cfg.rwkv_lora_r
+    H, hd = cfg.n_rwkv_heads, cfg.rwkv_head_dim
+    ks = jax.random.split(key, 12)
+    s = 1.0 / math.sqrt(d)
+    return {
+        # time-mix projections
+        "wr": jax.random.normal(ks[0], (d, d), jnp.float32) * s,
+        "wk": jax.random.normal(ks[1], (d, d), jnp.float32) * s,
+        "wv": jax.random.normal(ks[2], (d, d), jnp.float32) * s,
+        "wg": jax.random.normal(ks[3], (d, d), jnp.float32) * s,
+        "wo_tm": jax.random.normal(ks[4], (d, d), jnp.float32) * s,
+        # token-shift interpolation: static μ per stream + shared lora
+        "mu": jax.random.uniform(ks[5], (5, d), jnp.float32),  # r,k,v,g,w
+        "mu_lora_a": jax.random.normal(ks[6], (d, r), jnp.float32) * s,
+        "mu_lora_b": jax.random.normal(ks[7], (r, 5, d), jnp.float32)
+        * (1.0 / math.sqrt(r)),
+        # data-dependent decay lora
+        "w0": jnp.full((d,), -6.0, jnp.float32),
+        "w_lora_a": jax.random.normal(ks[8], (d, r), jnp.float32) * s,
+        "w_lora_b": jax.random.normal(ks[9], (r, d), jnp.float32)
+        * (1.0 / math.sqrt(r)),
+        "u": jax.random.normal(ks[10], (H, hd), jnp.float32) * 0.1,
+        "ln_x": init_rms_norm(d),
+        # channel-mix
+        "cm_mu": jax.random.uniform(ks[11], (2, d), jnp.float32),
+        "cm_wk": jax.random.normal(ks[0], (d, cfg.d_ff), jnp.float32) * s,
+        "cm_wv": jax.random.normal(ks[1], (cfg.d_ff, d), jnp.float32)
+        * (1.0 / math.sqrt(cfg.d_ff)),
+        "cm_wr": jax.random.normal(ks[2], (d, d), jnp.float32) * s,
+    }
+
+
+def _wkv_scan(r, k, v, w, u, S0):
+    """RWKV-6 recurrence.  r,k,w: (B,T,H,hd); v: (B,T,H,hd); S0: (B,H,hd,hd).
+    S_t = diag(w_t) S_{t-1} + k_t v_tᵀ ;  y_t = S_{t-1}ᵀ r_t + (rᵀ(u⊙k)) v.
+    Returns (y: (B,T,H,hd), S_T)."""
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp  # (B,H,hd)
+        y = jnp.einsum("bhij,bhi->bhj", S, r_t) + jnp.einsum(
+            "bhi,bhi,bhj->bhj", r_t, u[None] * k_t, v_t
+        )
+        S = w_t[..., None] * S + jnp.einsum("bhi,bhj->bhij", k_t, v_t)
+        return S, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    S_T, ys = jax.lax.scan(step, S0, xs)
+    return jnp.moveaxis(ys, 0, 1), S_T
+
+
+def rwkv_block(p, cfg: ModelConfig, x_raw: jnp.ndarray, cache=None):
+    """Full RWKV-6 layer (time-mix + channel-mix), with its own pre-norms
+    (token-shift operates on the *normed* stream, so the norms live here).
+    p must contain "ln1"/"ln2". Returns (x_new, cache)."""
+    dt = x_raw.dtype
+    B, T, D = x_raw.shape
+    H, hd = cfg.n_rwkv_heads, cfg.rwkv_head_dim
+
+    # ---- time mix ----
+    x = rms_norm(p["ln1"], x_raw, cfg.norm_eps)
+    if cache is not None:
+        first = cache["tm_x"].astype(dt)[:, None]
+        prev = first if T == 1 else jnp.concatenate([first, x[:, :-1]], axis=1)
+    else:
+        prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    dx = prev - x
+    # data-dependent interpolation (5 streams: r,k,v,g,w)
+    lora = jnp.einsum("btd,dr->btr", x + dx * p["mu"][4].astype(dt), p["mu_lora_a"].astype(dt))
+    mix = p["mu"].astype(dt)[None, None] + jnp.einsum(
+        "btr,rsd->btsd", jnp.tanh(lora), p["mu_lora_b"].astype(dt)
+    )  # (B,T,5,D)
+    xr, xk, xv, xg, xw = (x + dx * mix[:, :, i] for i in range(5))
+
+    r = (xr @ p["wr"].astype(dt)).reshape(B, T, H, hd)
+    k = (xk @ p["wk"].astype(dt)).reshape(B, T, H, hd)
+    v = (xv @ p["wv"].astype(dt)).reshape(B, T, H, hd)
+    g = jax.nn.silu(xg @ p["wg"].astype(dt))
+    wlog = p["w0"].astype(jnp.float32) + jnp.einsum(
+        "btr,rd->btd",
+        jnp.tanh(jnp.einsum("btd,dr->btr", xw, p["w_lora_a"].astype(dt))).astype(jnp.float32),
+        p["w_lora_b"],
+    )
+    w = jnp.exp(-jnp.exp(wlog)).reshape(B, T, H, hd).astype(jnp.float32)
+
+    S0 = (
+        cache["S"] if cache is not None
+        else jnp.zeros((B, H, hd, hd), jnp.float32)
+    )
+    y, S_T = _wkv_scan(
+        r.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+        w, p["u"], S0,
+    )
+    y = rms_norm(p["ln_x"], y.reshape(B, T, D).astype(dt), cfg.norm_eps)
+    tm_out = (y * g) @ p["wo_tm"].astype(dt)
+
+    # ---- channel mix ----
+    x_mid = x_raw + tm_out
+    x2 = rms_norm(p["ln2"], x_mid, cfg.norm_eps)
+    if cache is not None:
+        first2 = cache["cm_x"].astype(dt)[:, None]
+        prev2 = first2 if T == 1 else jnp.concatenate([first2, x2[:, :-1]], axis=1)
+    else:
+        prev2 = jnp.pad(x2, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    dx2 = prev2 - x2
+    xk2 = x2 + dx2 * p["cm_mu"][0].astype(dt)
+    xr2 = x2 + dx2 * p["cm_mu"][1].astype(dt)
+    kk = jnp.square(jax.nn.relu(xk2 @ p["cm_wk"].astype(dt)))
+    cm_out = jax.nn.sigmoid(xr2 @ p["cm_wr"].astype(dt)) * (
+        kk @ p["cm_wv"].astype(dt)
+    )
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {
+            "S": S_T,
+            "tm_x": x[:, -1].astype(cache["tm_x"].dtype),
+            "cm_x": x2[:, -1].astype(cache["cm_x"].dtype),
+        }
+    return x_mid + cm_out, new_cache

@@ -1,0 +1,332 @@
+"""The model stack: pattern-scan over heterogeneous layers, caches, logits.
+
+Design points (see DESIGN.md):
+* Layer heterogeneity is a repeating ``cfg.pattern`` of kinds; parameters
+  are stacked per pattern *position* over the ``n_blocks`` repeats and the
+  stack is traversed with ``lax.scan`` — HLO size is independent of depth.
+* A remainder (n_layers % len(pattern)) is applied unrolled.
+* Decode carries a cache pytree mirroring the block structure.
+* Whisper (enc-dec) adds an encoder stack + cross-attention caches.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .config import ATTN_KINDS, MOE_KINDS, WINDOWED_KINDS, ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def init_layer(key, cfg: ModelConfig, kind: str) -> dict:
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    p = {"ln1": L.init_rms_norm(d), "ln2": L.init_rms_norm(d)}
+    if kind in ("attn", "local", "enc"):
+        p["attn"] = L.init_attention(ks[0], cfg)
+        p["mlp"] = L.init_mlp(ks[1], cfg)
+    elif kind == "dec":
+        p["attn"] = L.init_attention(ks[0], cfg)
+        p["cross"] = L.init_attention(ks[2], cfg, cross=True)
+        p["ln_cross"] = L.init_rms_norm(d)
+        p["mlp"] = L.init_mlp(ks[1], cfg)
+    elif kind in MOE_KINDS:
+        p["attn"] = L.init_attention(ks[0], cfg)
+        p["moe"] = L.init_moe(ks[1], cfg)
+    elif kind == "rnn":
+        p["rnn"] = L.init_rnn(ks[0], cfg)
+        p["mlp"] = L.init_mlp(ks[1], cfg)
+    elif kind == "rwkv":
+        p["rwkv"] = L.init_rwkv(ks[0], cfg)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def init_params(key, cfg: ModelConfig, *, max_seq: int = 4096) -> dict:
+    kE, kH, kB, kR, kEnc, kPos = jax.random.split(key, 6)
+    d, V = cfg.d_model, cfg.vocab
+    params: dict = {
+        "embed": jax.random.normal(kE, (V, d), jnp.float32) / math.sqrt(d),
+        "final_norm": L.init_rms_norm(d),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = jax.random.normal(kH, (d, V), jnp.float32) / math.sqrt(d)
+    if cfg.pos_embedding == "learned":
+        params["pos"] = jax.random.normal(kPos, (max_seq, d), jnp.float32) * 0.02
+
+    # stacked pattern blocks
+    blocks = {}
+    for i, kind in enumerate(cfg.pattern):
+        keys = jax.random.split(jax.random.fold_in(kB, i), max(cfg.n_blocks, 1))
+        if cfg.n_blocks > 0:
+            blocks[f"p{i}_{kind}"] = jax.vmap(
+                lambda k: init_layer(k, cfg, kind)
+            )(keys)
+    params["blocks"] = blocks
+    # remainder layers, unrolled
+    rem = {}
+    for i in range(cfg.n_rem):
+        kind = cfg.pattern[i]
+        rem[f"r{i}_{kind}"] = init_layer(jax.random.fold_in(kR, i), cfg, kind)
+    params["rem"] = rem
+
+    # encoder stack (whisper)
+    if cfg.n_enc_layers:
+        keys = jax.random.split(kEnc, cfg.n_enc_layers)
+        params["enc_blocks"] = jax.vmap(
+            lambda k: init_layer(k, cfg, "enc")
+        )(keys)
+        params["enc_norm"] = L.init_rms_norm(d)
+        params["enc_pos"] = (
+            jax.random.normal(jax.random.fold_in(kPos, 1), (cfg.enc_seq, d), jnp.float32) * 0.02
+        )
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Cache init
+# ---------------------------------------------------------------------------
+
+def init_layer_cache(cfg: ModelConfig, kind: str, batch: int, max_seq: int,
+                     dtype=jnp.bfloat16) -> dict:
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    if kind in ("attn", "attn_moe", "enc"):
+        S = max_seq
+        return {"k": jnp.zeros((batch, S, KV, hd), dtype),
+                "v": jnp.zeros((batch, S, KV, hd), dtype)}
+    if kind in WINDOWED_KINDS:
+        S = min(cfg.window, max_seq)
+        return {"k": jnp.zeros((batch, S, KV, hd), dtype),
+                "v": jnp.zeros((batch, S, KV, hd), dtype)}
+    if kind == "dec":
+        return {
+            "k": jnp.zeros((batch, max_seq, KV, hd), dtype),
+            "v": jnp.zeros((batch, max_seq, KV, hd), dtype),
+            "ck": jnp.zeros((batch, cfg.enc_seq, KV, hd), dtype),
+            "cv": jnp.zeros((batch, cfg.enc_seq, KV, hd), dtype),
+        }
+    if kind == "rnn":
+        w = cfg.rnn_width_eff
+        return {"h": jnp.zeros((batch, w), jnp.float32),
+                "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype)}
+    if kind == "rwkv":
+        H, hd_r = cfg.n_rwkv_heads, cfg.rwkv_head_dim
+        return {"S": jnp.zeros((batch, H, hd_r, hd_r), jnp.float32),
+                "tm_x": jnp.zeros((batch, cfg.d_model), dtype),
+                "cm_x": jnp.zeros((batch, cfg.d_model), dtype)}
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    """Decode cache pytree: stacked per pattern position + remainder."""
+    def stack(tree, n):
+        return jax.tree.map(lambda x: jnp.broadcast_to(x, (n,) + x.shape), tree)
+
+    cache = {"blocks": {}, "rem": {}}
+    for i, kind in enumerate(cfg.pattern):
+        if cfg.n_blocks > 0:
+            cache["blocks"][f"p{i}_{kind}"] = stack(
+                init_layer_cache(cfg, kind, batch, max_seq, dtype), cfg.n_blocks
+            )
+    for i in range(cfg.n_rem):
+        kind = cfg.pattern[i]
+        cache["rem"][f"r{i}_{kind}"] = init_layer_cache(
+            cfg, kind, batch, max_seq, dtype
+        )
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Layer application
+# ---------------------------------------------------------------------------
+
+def apply_layer(p, cfg: ModelConfig, kind: str, x, positions, cache=None,
+                cache_pos=None, enc_out=None):
+    """Pre-norm residual layer of the given kind. Returns (x, new_cache)."""
+    if kind == "rwkv":
+        return L.rwkv_block(p["rwkv"] | {"ln1": p["ln1"], "ln2": p["ln2"]},
+                            cfg, x, cache)
+    if kind == "rnn":
+        h, new_cache = L.rnn_block(
+            p["rnn"], cfg, L.rms_norm(p["ln1"], x, cfg.norm_eps), cache
+        )
+        x = x + h
+        x = x + L.mlp(p["mlp"], cfg, L.rms_norm(p["ln2"], x, cfg.norm_eps))
+        return x, new_cache
+
+    # attention kinds
+    h, new_cache = L.attention(
+        p["attn"], cfg, L.rms_norm(p["ln1"], x, cfg.norm_eps), positions,
+        kind=kind, cache=cache, cache_pos=cache_pos,
+    )
+    x = x + h
+    if kind == "dec":
+        if cache is not None:
+            h = L.cross_attention_cached(
+                p["cross"], cfg,
+                L.rms_norm(p["ln_cross"], x, cfg.norm_eps),
+                cache,
+            )
+        else:
+            h, _ = L.attention(
+                p["cross"], cfg,
+                L.rms_norm(p["ln_cross"], x, cfg.norm_eps), positions,
+                kind=kind, enc_out=enc_out,
+            )
+        x = x + h
+    y = L.rms_norm(p["ln2"], x, cfg.norm_eps)
+    if kind in MOE_KINDS:
+        x = x + L.moe(p["moe"], cfg, y)
+    else:
+        x = x + L.mlp(p["mlp"], cfg, y)
+    if kind == "dec" and new_cache is not None:
+        new_cache = new_cache | {"ck": cache["ck"], "cv": cache["cv"]}
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Full forward
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params, cfg: ModelConfig, tokens, compute_dtype):
+    if cfg.onehot_embed:
+        # One-hot matmul lookup: with a vocab-sharded table the gather
+        # forces GSPMD into "involuntary full rematerialization" (an
+        # all-gather of the whole table); the one-hot contraction keeps the
+        # vocab dim sharded and reduces with one psum of (B,S,D).
+        oh = jax.nn.one_hot(tokens, cfg.vocab, dtype=compute_dtype)
+        x = oh @ params["embed"].astype(compute_dtype)
+    else:
+        x = jnp.take(params["embed"], tokens, axis=0).astype(compute_dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), compute_dtype)
+    return x
+
+
+def encode(params, cfg: ModelConfig, enc_feats, compute_dtype=jnp.bfloat16):
+    """Whisper encoder: enc_feats (B, enc_seq, d_model) — the stub frontend
+    supplies precomputed frame embeddings per the brief."""
+    x = enc_feats.astype(compute_dtype)
+    x = x + params["enc_pos"][None, : x.shape[1]].astype(compute_dtype)
+    positions = jnp.arange(x.shape[1])
+
+    def body(x, blk):
+        x, _ = apply_layer(blk, cfg, "enc", x, positions)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return L.rms_norm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def build_cross_cache(params, cfg: ModelConfig, enc_out):
+    """Precompute per-decoder-layer cross K/V from encoder output."""
+    def kv(blk):
+        p = blk["cross"]
+        dt = enc_out.dtype
+        k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"].astype(dt))
+        v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"].astype(dt))
+        return {"ck": k, "cv": v}
+
+    out = {"blocks": {}, "rem": {}}
+    for name, blk in params["blocks"].items():
+        if name.split("_", 1)[1] == "dec":
+            out["blocks"][name] = jax.vmap(kv)(blk)
+    for name, blk in params["rem"].items():
+        if name.split("_", 1)[1] == "dec":
+            out["rem"][name] = kv(blk)
+    return out
+
+
+def forward(
+    params,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,              # (B, S) int32
+    *,
+    cache=None,
+    cache_pos=None,                   # scalar int32 (decode only)
+    enc_feats=None,                   # (B, enc_seq, d) whisper train/prefill
+    compute_dtype=jnp.bfloat16,
+    remat: bool = False,
+    scan_unroll: bool = False,        # analysis builds: XLA cost_analysis
+                                      # counts loop bodies ONCE, so the
+                                      # roofline sweep unrolls the layer scan
+):
+    """Returns (logits f32 (B, S, V), new_cache)."""
+    B, S = tokens.shape
+    x = embed_tokens(params, cfg, tokens, compute_dtype)
+
+    if cache is not None:
+        positions = jnp.broadcast_to(
+            jnp.asarray(cache_pos, jnp.int32)[None, None]
+            + jnp.arange(S, dtype=jnp.int32)[None, :],
+            (B, S),
+        )
+    else:
+        positions = jnp.arange(S)
+    if cfg.pos_embedding == "learned":
+        if cache is not None:
+            pos_e = jax.lax.dynamic_slice_in_dim(params["pos"], cache_pos, S)
+        else:
+            pos_e = params["pos"][:S]
+        x = x + pos_e[None].astype(compute_dtype)
+
+    enc_out = None
+    if cfg.n_enc_layers and enc_feats is not None:
+        enc_out = encode(params, cfg, enc_feats, compute_dtype)
+
+    new_cache = {"blocks": {}, "rem": {}} if cache is not None else None
+
+    # --- scanned pattern blocks ---
+    for i, kind in enumerate(cfg.pattern):
+        name = f"p{i}_{kind}"
+        if cfg.n_blocks == 0:
+            continue
+        blk_params = params["blocks"][name]
+        blk_cache = cache["blocks"][name] if cache is not None else None
+
+        def body(x, xs, kind=kind):
+            bp, bc = xs
+            fn = apply_layer
+            if remat:
+                fn = jax.checkpoint(apply_layer, static_argnums=(1, 2))
+            x, nc = fn(bp, cfg, kind, x, positions, bc, cache_pos, enc_out)
+            return x, nc
+
+        unroll = cfg.n_blocks if scan_unroll else 1
+        if cache is not None:
+            x, ncache = jax.lax.scan(
+                body, x, (blk_params, blk_cache), unroll=unroll
+            )
+            new_cache["blocks"][name] = ncache
+        else:
+            x, _ = jax.lax.scan(body, x, (blk_params, None), unroll=unroll)
+
+    # --- remainder layers (unrolled) ---
+    for i in range(cfg.n_rem):
+        kind = cfg.pattern[i]
+        name = f"r{i}_{kind}"
+        rp = params["rem"][name]
+        rc = cache["rem"][name] if cache is not None else None
+        fn = apply_layer
+        if remat and cache is None:
+            fn = jax.checkpoint(apply_layer, static_argnums=(1, 2))
+        x, nc = fn(rp, cfg, kind, x, positions, rc, cache_pos, enc_out)
+        if cache is not None:
+            new_cache["rem"][name] = nc
+
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    head = (
+        params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    ).astype(compute_dtype)
+    logits = (x @ head).astype(jnp.float32)
+    logits = L.softcap(logits, cfg.final_softcap)
+    return logits, new_cache

@@ -1,0 +1,1 @@
+from .step import decode_step, greedy_generate, prefill_step

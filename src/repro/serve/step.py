@@ -1,0 +1,77 @@
+"""Serving steps: prefill (build the KV/state cache) and decode (one token).
+
+``decode_*`` / ``long_*`` dry-run cells lower ``decode_step`` with a
+seq_len-sized cache; ``prefill_*`` cells lower ``prefill_step``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import build_cross_cache, encode, forward, init_cache
+from repro.models.config import ModelConfig
+
+
+def prefill_step(params, cfg: ModelConfig, tokens, cache, *,
+                 enc_feats=None, compute_dtype=jnp.bfloat16,
+                 scan_unroll: bool = False):
+    """Process a (B, S) prompt from an empty cache. Returns
+    (last-token logits (B, V), filled cache)."""
+    if cfg.n_enc_layers and enc_feats is not None:
+        enc_out = encode(params, cfg, enc_feats, compute_dtype)
+        cc = build_cross_cache(params, cfg, enc_out)
+        cache = dict(cache)
+        cache["blocks"] = {
+            k: (cache["blocks"][k] | cc["blocks"][k])
+            if k in cc["blocks"] else cache["blocks"][k]
+            for k in cache["blocks"]
+        }
+        cache["rem"] = {
+            k: (cache["rem"][k] | cc["rem"][k])
+            if k in cc["rem"] else cache["rem"][k]
+            for k in cache["rem"]
+        }
+    logits, cache = forward(
+        params, cfg, tokens, cache=cache,
+        cache_pos=jnp.zeros((), jnp.int32), compute_dtype=compute_dtype,
+        scan_unroll=scan_unroll,
+    )
+    return logits[:, -1], cache
+
+
+def decode_step(params, cfg: ModelConfig, token, cache, cache_pos, *,
+                compute_dtype=jnp.bfloat16, scan_unroll: bool = False):
+    """One decode step. token: (B, 1) int32; cache_pos: scalar int32
+    (number of tokens already in the cache). Returns (logits (B, V), cache)."""
+    logits, cache = forward(
+        params, cfg, token, cache=cache, cache_pos=cache_pos,
+        compute_dtype=compute_dtype, scan_unroll=scan_unroll,
+    )
+    return logits[:, -1], cache
+
+
+def greedy_generate(params, cfg: ModelConfig, prompt, max_new: int, *,
+                    max_seq: int, enc_feats=None,
+                    compute_dtype=jnp.float32):
+    """Simple batched greedy generation loop (examples/serving)."""
+    B, S = prompt.shape
+    cache = init_cache(cfg, B, max_seq, dtype=compute_dtype)
+    logits, cache = prefill_step(
+        params, cfg, prompt, cache, enc_feats=enc_feats,
+        compute_dtype=compute_dtype,
+    )
+    tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    out = [tok]
+    pos = S
+    for _ in range(max_new - 1):
+        logits, cache = decode_step(
+            params, cfg, tok, cache, jnp.asarray(pos, jnp.int32),
+            compute_dtype=compute_dtype,
+        )
+        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        out.append(tok)
+        pos += 1
+    return jnp.concatenate(out, axis=1)

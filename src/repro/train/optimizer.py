@@ -1,0 +1,99 @@
+"""In-house AdamW (no optax dependency) with global-norm clipping.
+
+Optimizer state mirrors the parameter pytree (so it inherits the same
+PartitionSpecs) plus a scalar step counter.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+class OptState(NamedTuple):
+    mu: Any
+    nu: Any
+    step: jnp.ndarray
+
+
+def init_opt_state(params) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return OptState(
+        mu=zeros,
+        nu=jax.tree.map(jnp.zeros_like, zeros),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def lr_schedule(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup → cosine decay to min_lr_ratio·lr."""
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip(
+        (s - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    decay = cfg.min_lr_ratio + (1.0 - cfg.min_lr_ratio) * cos
+    return cfg.lr * warm * decay
+
+
+def global_norm(tree) -> jnp.ndarray:
+    sq = sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32)))
+        for g in jax.tree.leaves(tree)
+    )
+    return jnp.sqrt(sq)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads), gn
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, state: OptState):
+    """Returns (new_params, new_state, metrics)."""
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    if cfg.grad_clip and cfg.grad_clip > 0:
+        grads, gn = clip_by_global_norm(grads, cfg.grad_clip)
+    else:
+        gn = global_norm(grads)
+
+    step = state.step + 1
+    lr = lr_schedule(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        m2 = cfg.b1 * m + (1.0 - cfg.b1) * g
+        v2 = cfg.b2 * v + (1.0 - cfg.b2) * jnp.square(g)
+        mhat = m2 / b1c
+        vhat = v2 / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(
+            jnp.float32
+        )
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m2, v2
+
+    out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    metrics = {"grad_norm": gn, "lr": lr}
+    return new_params, OptState(mu=new_mu, nu=new_nu, step=step), metrics

@@ -1,0 +1,219 @@
+"""Training step: masked CE + z-loss, microbatched grad accumulation,
+remat, AdamW, mixed precision. Built to be lowered under a mesh with the
+shardings from ``repro.dist.sharding``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import forward
+from repro.models.config import ModelConfig
+from .optimizer import AdamWConfig, OptState, adamw_update, init_opt_state
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: AdamWConfig = AdamWConfig()
+    z_loss: float = 1e-4
+    num_microbatches: int = 1
+    compute_dtype: Any = jnp.bfloat16
+    remat: bool = True
+    scan_unroll: bool = False  # analysis builds (see models.transformer)
+    ce_chunks: int = 0         # >0: blocked cross-entropy — never
+                               # materialize (B,S,V) logits; stream
+                               # logsumexp over vocab chunks with remat
+                               # (§Perf Cell B follow-up)
+
+
+def lm_loss(params, cfg: ModelConfig, tokens, labels, mask, *,
+            enc_feats=None, z_loss: float = 1e-4,
+            compute_dtype=jnp.bfloat16, remat: bool = True,
+            scan_unroll: bool = False):
+    """Next-token CE with optional z-loss. labels/mask: (B, S)."""
+    logits, _ = forward(
+        params, cfg, tokens, enc_feats=enc_feats,
+        compute_dtype=compute_dtype, remat=remat, scan_unroll=scan_unroll,
+    )
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0] - lse
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    ce = -jnp.sum(ll * mask) / denom
+    zl = z_loss * jnp.sum(jnp.square(lse) * mask) / denom if z_loss else 0.0
+    return ce + zl, {"ce": ce, "tokens": denom}
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    batch: {"tokens": (B,S) int32, "labels": (B,S) int32,
+            "mask": (B,S) f32, ["enc_feats"]: (B,E,D)}.
+    Grad accumulation over ``num_microbatches`` via lax.scan (batch is split
+    on the leading axis; per-microbatch remat keeps live memory bounded).
+    """
+
+    def loss_fn(params, mb):
+        if tcfg.ce_chunks:
+            return blocked_lm_loss(
+                params, cfg, mb["tokens"], mb["labels"], mb["mask"],
+                ce_chunks=tcfg.ce_chunks, enc_feats=mb.get("enc_feats"),
+                z_loss=tcfg.z_loss, compute_dtype=tcfg.compute_dtype,
+                remat=tcfg.remat, scan_unroll=tcfg.scan_unroll,
+            )
+        return lm_loss(
+            params, cfg, mb["tokens"], mb["labels"], mb["mask"],
+            enc_feats=mb.get("enc_feats"),
+            z_loss=tcfg.z_loss, compute_dtype=tcfg.compute_dtype,
+            remat=tcfg.remat, scan_unroll=tcfg.scan_unroll,
+        )
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state: OptState, batch):
+        nmb = tcfg.num_microbatches
+        if nmb > 1:
+            batch_r = jax.tree.map(
+                lambda x: x.reshape((nmb, x.shape[0] // nmb) + x.shape[1:]),
+                batch,
+            )
+
+            def body(acc, mb):
+                (loss, aux), g = grad_fn(params, mb)
+                acc = jax.tree.map(jnp.add, acc, {"g": g, "loss": loss,
+                                                  "ce": aux["ce"]})
+                return acc, None
+
+            zero = {
+                "g": jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params
+                ),
+                "loss": jnp.zeros((), jnp.float32),
+                "ce": jnp.zeros((), jnp.float32),
+            }
+            acc, _ = jax.lax.scan(
+                body, zero, batch_r, unroll=nmb if tcfg.scan_unroll else 1
+            )
+            grads = jax.tree.map(lambda g: g / nmb, acc["g"])
+            loss = acc["loss"] / nmb
+            ce = acc["ce"] / nmb
+        else:
+            (loss, aux), grads = grad_fn(params, batch)
+            ce = aux["ce"]
+
+        params, opt_state, om = adamw_update(tcfg.opt, params, grads, opt_state)
+        metrics = {"loss": loss, "ce": ce, **om}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+__all__ = [
+    "TrainConfig",
+    "AdamWConfig",
+    "OptState",
+    "init_opt_state",
+    "lm_loss",
+    "make_train_step",
+]
+
+
+# ---------------------------------------------------------------------------
+# Blocked cross-entropy (memory-roofline optimization, EXPERIMENTS §Perf B4)
+# ---------------------------------------------------------------------------
+
+def blocked_lm_loss(params, cfg: ModelConfig, tokens, labels, mask, *,
+                    ce_chunks: int, enc_feats=None, z_loss: float = 1e-4,
+                    compute_dtype=jnp.bfloat16, remat: bool = True,
+                    scan_unroll: bool = False):
+    """CE + z-loss WITHOUT materializing (B, S, V) logits.
+
+    The final hidden states x (B,S,D) are produced once; the vocab dim is
+    processed in ``ce_chunks`` chunks with a streaming logsumexp and a
+    rematerialized chunk body, so peak logits memory drops by the chunk
+    factor (the backward pass recomputes each chunk's logits). The chunk
+    count should divide the vocab; with vocab sharded over `model`, chunk
+    boundaries align with shard boundaries when ce_chunks % TP == 0.
+    """
+    from repro.models import transformer as T
+    from repro.models import layers as L
+    import math as _m
+
+    B, S = tokens.shape
+    # forward to final hidden states (logits path bypassed)
+    x = T.embed_tokens(params, cfg, tokens, compute_dtype)
+    positions = jnp.arange(S)
+    enc_out = None
+    if cfg.n_enc_layers and enc_feats is not None:
+        enc_out = T.encode(params, cfg, enc_feats, compute_dtype)
+    for i, kind in enumerate(cfg.pattern):
+        name = f"p{i}_{kind}"
+        if cfg.n_blocks == 0:
+            continue
+
+        def body(x, xs, kind=kind):
+            bp, _ = xs
+            fn = T.apply_layer
+            if remat:
+                fn = jax.checkpoint(T.apply_layer, static_argnums=(1, 2))
+            x, _ = fn(bp, cfg, kind, x, positions, None, None, enc_out)
+            return x, None
+
+        x, _ = jax.lax.scan(
+            body, x, (params["blocks"][name], None),
+            unroll=cfg.n_blocks if scan_unroll else 1,
+        )
+    for i in range(cfg.n_rem):
+        kind = cfg.pattern[i]
+        rp = params["rem"][f"r{i}_{kind}"]
+        x, _ = T.apply_layer(rp, cfg, kind, x, positions, None, None, enc_out)
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    V = head.shape[1]
+    nc = ce_chunks
+    if V % nc:
+        raise ValueError(f"vocab {V} not divisible by ce_chunks {nc}")
+    Vc = V // nc
+    head_r = head.reshape(cfg.d_model, nc, Vc).transpose(1, 0, 2)  # (nc,D,Vc)
+
+    def chunk_body(carry, inp):
+        run_max, run_sum, tgt = carry
+        w_c, c_idx = inp
+        logits_c = (x @ w_c.astype(compute_dtype)).astype(jnp.float32)
+        logits_c = L.softcap(logits_c, cfg.final_softcap)
+        m_c = jnp.max(logits_c, axis=-1)
+        new_max = jnp.maximum(run_max, m_c)
+        run_sum = run_sum * jnp.exp(run_max - new_max) + jnp.sum(
+            jnp.exp(logits_c - new_max[..., None]), axis=-1
+        )
+        # target logit if the label falls in this chunk
+        local = labels - c_idx * Vc
+        in_chunk = (local >= 0) & (local < Vc)
+        li = jnp.take_along_axis(
+            logits_c, jnp.clip(local, 0, Vc - 1)[..., None], axis=-1
+        )[..., 0]
+        tgt = tgt + jnp.where(in_chunk, li, 0.0)
+        return (new_max, run_sum, tgt), None
+
+    init = (
+        jnp.full((B, S), -jnp.inf, jnp.float32),
+        jnp.zeros((B, S), jnp.float32),
+        jnp.zeros((B, S), jnp.float32),
+    )
+    (mx, sm, tgt), _ = jax.lax.scan(
+        jax.checkpoint(chunk_body) if remat else chunk_body,
+        init, (head_r, jnp.arange(nc)),
+        unroll=nc if scan_unroll else 1,
+    )
+    lse = mx + jnp.log(sm)
+    ll = tgt - lse
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    ce = -jnp.sum(ll * mask) / denom
+    zl = z_loss * jnp.sum(jnp.square(lse) * mask) / denom if z_loss else 0.0
+    return ce + zl, {"ce": ce, "tokens": denom}

@@ -1,0 +1,30 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
+see the real device count (1); distributed tests spawn subprocesses with
+their own flags (tests/test_dist.py)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+
+@pytest.fixture(scope="session")
+def ridge_problem():
+    """Small ill-conditioned ridge problem with known direct solution."""
+    from repro.core import from_least_squares, direct_solve, effective_dimension
+    from repro.core.effective_dim import exp_decay_singular_values
+
+    n, d, rate, nu = 2048, 256, 0.9, 1e-2
+    key = jax.random.PRNGKey(0)
+    sv = exp_decay_singular_values(d, rate)
+    kU, kV, ky = jax.random.split(key, 3)
+    U, _ = jnp.linalg.qr(jax.random.normal(kU, (n, d)))
+    V, _ = jnp.linalg.qr(jax.random.normal(kV, (d, d)))
+    A = (U * sv[None, :]) @ V.T
+    y = jax.random.normal(ky, (n,))
+    q = from_least_squares(A, y, nu)
+    return {
+        "q": q,
+        "x_star": direct_solve(q),
+        "d_e": float(effective_dimension(sv, nu)),
+        "sv": sv,
+    }

@@ -1,0 +1,162 @@
+"""Distributed tests. Multi-device cases run in a SUBPROCESS with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 so the main pytest
+process keeps the real (1-)device view."""
+
+import json
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.dist.compress import compress_decompress, init_ef, compress_tree
+
+
+def _run_subprocess(code: str) -> str:
+    env = {
+        "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+        "PYTHONPATH": "src",
+        "PATH": "/usr/bin:/bin",
+        "HOME": "/root",
+    }
+    import os
+    env = {**os.environ, **env}
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, env=env,
+                       cwd="/root/repo", timeout=600)
+    assert r.returncode == 0, f"stderr:\n{r.stderr[-3000:]}"
+    return r.stdout
+
+
+def test_gradient_compression_error_feedback():
+    """EF-int8 SGD tracks uncompressed SGD on a quadratic."""
+    key = jax.random.PRNGKey(0)
+    H = jax.random.normal(key, (16, 16))
+    H = H @ H.T / 16 + jnp.eye(16)
+    b = jax.random.normal(jax.random.PRNGKey(1), (16,))
+    grad = lambda x: H @ x - b
+
+    x_ref = jnp.zeros(16)
+    x_c = jnp.zeros(16)
+    ef = init_ef(x_c)
+    lr = 0.05
+    for _ in range(150):
+        x_ref = x_ref - lr * grad(x_ref)
+        g_hat, ef = compress_tree(grad(x_c), ef)
+        x_c = x_c - lr * g_hat
+    rel = float(jnp.linalg.norm(x_c - x_ref) / jnp.linalg.norm(x_ref))
+    assert rel < 0.01, f"EF-compressed trajectory diverged: {rel}"
+
+
+def test_int8_quantization_bounds():
+    x = jax.random.normal(jax.random.PRNGKey(2), (1000,)) * 5
+    ef = init_ef(x)
+    g_hat, ef2 = compress_tree(x, ef)
+    # quantization error bounded by scale = max|x|/127
+    err = jnp.max(jnp.abs(g_hat - x))
+    assert float(err) <= float(jnp.max(jnp.abs(x))) / 127.0 * 1.01
+    # error feedback holds the residual
+    np.testing.assert_allclose(np.asarray(ef2.residual),
+                               np.asarray(x - g_hat), rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.slow
+def test_distributed_block_sketch_8dev():
+    out = _run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import from_least_squares, direct_solve
+        from repro.core.distributed import shard_quadratic, distributed_sketch_and_factorize
+        from repro.core.solvers import run_fixed
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        A = jax.random.normal(jax.random.PRNGKey(0), (512, 64)) / np.sqrt(512)
+        y = jax.random.normal(jax.random.PRNGKey(1), (512,))
+        q = from_least_squares(A, y, 0.1)
+        x_star = direct_solve(q)
+        qd = shard_quadratic(q, mesh)
+        with mesh:
+            for kind in ["gaussian", "sjlt", "srht"]:
+                P = distributed_sketch_and_factorize(qd, jax.random.PRNGKey(2), kind, 256, mesh)
+                x, _ = run_fixed(qd, P, jnp.zeros((64,)), method="pcg", iters=25, rho=0.5)
+                err = float(jnp.linalg.norm(x - x_star)/jnp.linalg.norm(x_star))
+                assert err < 1e-3, (kind, err)
+        print("DIST_OK")
+    """)
+    assert "DIST_OK" in out
+
+
+@pytest.mark.slow
+def test_sharded_train_step_matches_single_device():
+    """The same train step on a (4,2) mesh and on 1 device produces the
+    same loss and (numerically close) parameters."""
+    out = _run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding
+        from repro.configs import get_config
+        from repro.models import init_params
+        from repro.dist.sharding import param_specs, input_specs_for
+        from repro.train import AdamWConfig, TrainConfig, init_opt_state
+        from repro.train.step import make_train_step
+
+        cfg = get_config("qwen2-0.5b").reduced()
+        params = init_params(jax.random.PRNGKey(0), cfg, max_seq=32)
+        tcfg = TrainConfig(opt=AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10),
+                           num_microbatches=2, compute_dtype=jnp.float32)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (8, 17), 0, cfg.vocab)
+        batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:],
+                 "mask": jnp.ones((8, 16), jnp.float32)}
+
+        # single device
+        step1 = jax.jit(make_train_step(cfg, tcfg))
+        p1, o1, m1 = step1(params, init_opt_state(params), batch)
+
+        # sharded
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        spec = param_specs(cfg, params, mesh)
+        p_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), spec)
+        params_d = jax.device_put(params, p_sh)
+        with mesh:
+            step2 = jax.jit(make_train_step(cfg, tcfg))
+            p2, o2, m2 = step2(params_d, init_opt_state(params_d), batch)
+        assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-3
+        d = max(float(jnp.max(jnp.abs(a - b)))
+                for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)))
+        assert d < 1e-4, d
+        print("SHARD_OK", float(m1["loss"]), float(m2["loss"]))
+    """)
+    assert "SHARD_OK" in out
+
+
+@pytest.mark.slow
+def test_decode_step_sharded_matches():
+    out = _run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding
+        from repro.configs import get_config
+        from repro.models import init_params, init_cache
+        from repro.dist.sharding import param_specs, cache_specs
+        from repro.serve.step import decode_step
+
+        cfg = get_config("qwen2-7b").reduced()
+        params = init_params(jax.random.PRNGKey(0), cfg, max_seq=32)
+        cache = init_cache(cfg, 8, 32, dtype=jnp.float32)
+        tok = jax.random.randint(jax.random.PRNGKey(1), (8, 1), 0, cfg.vocab)
+        lg1, _ = decode_step(params, cfg, tok, cache, jnp.asarray(0, jnp.int32),
+                             compute_dtype=jnp.float32)
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        p_sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                            param_specs(cfg, params, mesh, fsdp=False))
+        c_sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                            cache_specs(cfg, cache, mesh))
+        with mesh:
+            lg2, _ = decode_step(jax.device_put(params, p_sh), cfg, tok,
+                                 jax.device_put(cache, c_sh),
+                                 jnp.asarray(0, jnp.int32),
+                                 compute_dtype=jnp.float32)
+        np.testing.assert_allclose(np.asarray(lg1), np.asarray(lg2),
+                                   rtol=2e-4, atol=2e-4)
+        print("DECODE_OK")
+    """)
+    assert "DECODE_OK" in out

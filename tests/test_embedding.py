@@ -1,0 +1,127 @@
+"""Subspace-embedding properties and concentration (paper §2.2, §5) +
+hypothesis property tests on sketch invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import effective_dimension, fwht, make_sketch
+from repro.core.effective_dim import (
+    exp_decay_singular_values,
+    m_delta_gaussian,
+    m_delta_srht,
+)
+
+
+def test_sketch_unbiased():
+    """E[SᵀS] = I for all three embeddings (Monte-Carlo over seeds)."""
+    n, m, reps = 64, 256, 64
+    for kind in ["gaussian", "srht", "sjlt"]:
+        acc = np.zeros((n, n))
+        for r in range(reps):
+            S = make_sketch(kind, m, n, jax.random.PRNGKey(r)).dense()
+            acc += np.asarray(S.T @ S)
+        acc /= reps
+        err = np.max(np.abs(acc - np.eye(n)))
+        assert err < 0.25, f"{kind}: E[SᵀS] deviates by {err}"
+
+
+def test_srht_is_orthogonal_transform():
+    """H·E is orthogonal ⇒ SRHT preserves norms in expectation exactly."""
+    n, d = 256, 16
+    A = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+    sk = make_sketch("srht", n, n, jax.random.PRNGKey(1))
+    # with m = n (all rows, w/o replacement) ‖SA‖_F² == ‖A‖_F²·(n/m)
+    SA = sk.apply(A)
+    np.testing.assert_allclose(
+        float(jnp.sum(SA**2)), float(jnp.sum(A**2)), rtol=0.35
+    )
+
+
+def test_embedding_deviation_scaling(ridge_problem):
+    """‖C_S − I‖₂ shrinks ~1/√m (eq. 5.4): doubling m⁴ roughly halves²."""
+    q = ridge_problem["q"]
+    H = q.A.T @ q.A + (q.nu**2) * jnp.diag(q.lam_diag)
+    w, V = jnp.linalg.eigh(H)
+    Hmh = (V * (w**-0.5)[None, :]) @ V.T
+    devs = []
+    for m in [64, 256, 1024]:
+        vals = []
+        for seed in range(3):
+            sk = make_sketch("gaussian", m, q.n, jax.random.PRNGKey(seed))
+            SA = sk.apply(q.A)
+            H_S = SA.T @ SA + (q.nu**2) * jnp.diag(q.lam_diag)
+            C = Hmh @ H_S @ Hmh
+            vals.append(float(jnp.linalg.norm(C - jnp.eye(q.d), 2)))
+        devs.append(np.mean(vals))
+    assert devs[2] < devs[0] / 2.0  # 16× more rows ⇒ ≥2× tighter
+
+
+def test_m_delta_formulas_monotone():
+    for d_e in [10.0, 100.0, 1000.0]:
+        assert m_delta_gaussian(d_e) < m_delta_srht(d_e, n=1 << 20)
+    assert m_delta_gaussian(100) > m_delta_gaussian(10)
+    assert m_delta_srht(100, 1 << 16) > m_delta_srht(10, 1 << 16)
+
+
+def test_effective_dimension_limits():
+    sv = exp_decay_singular_values(512, 0.99)
+    d_e_small_nu = float(effective_dimension(sv, 1e-6))
+    d_e_large_nu = float(effective_dimension(sv, 10.0))
+    assert d_e_small_nu > 400  # ν→0 ⇒ d_e → rank
+    assert d_e_large_nu < 60   # large ν ⇒ small d_e
+    # d_e ≤ d always
+    assert d_e_small_nu <= 512 + 1e-3
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property tests
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    lg_n=st.integers(min_value=1, max_value=9),
+    d=st.integers(min_value=1, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**30),
+)
+def test_fwht_involution_property(lg_n, d, seed):
+    """H(Hx) = n·x — the Hadamard transform is an involution up to n."""
+    n = 1 << lg_n
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n, d))
+    hx = fwht(x, axis=0)
+    hhx = fwht(hx, axis=0)
+    np.testing.assert_allclose(np.asarray(hhx), n * np.asarray(x),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(min_value=8, max_value=200),
+    m=st.integers(min_value=1, max_value=64),
+    seed=st.integers(min_value=0, max_value=2**30),
+)
+def test_sjlt_column_norms(n, m, seed):
+    """Every SJLT column has exactly s=1 entry of magnitude 1."""
+    S = make_sketch("sjlt", m, n, jax.random.PRNGKey(seed)).dense()
+    S = np.asarray(S)
+    col_counts = (np.abs(S) > 0).sum(axis=0)
+    np.testing.assert_array_equal(col_counts, np.ones(n))
+    np.testing.assert_allclose(np.abs(S).sum(axis=0), np.ones(n), rtol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**30))
+def test_sketch_linearity(seed):
+    """S(aX + bY) = a·SX + b·SY for all sketch kinds."""
+    n, d, m = 64, 8, 32
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    X = jax.random.normal(k1, (n, d))
+    Y = jax.random.normal(k2, (n, d))
+    for kind in ["gaussian", "srht", "sjlt"]:
+        sk = make_sketch(kind, m, n, jax.random.PRNGKey(seed // 2))
+        lhs = sk.apply(2.0 * X - 3.0 * Y)
+        rhs = 2.0 * sk.apply(X) - 3.0 * sk.apply(Y)
+        np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                                   rtol=1e-4, atol=1e-4)

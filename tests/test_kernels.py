@@ -1,0 +1,93 @@
+"""Pallas kernel validation: shape/dtype sweeps vs pure-jnp oracles,
+executed in interpret mode on CPU (the TPU-target kernels' semantics)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.kernels.ops as ops
+from repro.kernels import ref
+from repro.kernels.fwht import fwht_pallas
+from repro.kernels.sjlt import sjlt_pallas
+
+
+@pytest.mark.parametrize("n", [8, 64, 512, 2048])
+@pytest.mark.parametrize("d", [1, 7, 128, 130])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fwht_kernel_matches_ref(n, d, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(n * 31 + d), (n, d)).astype(dtype)
+    got = fwht_pallas(x, interpret=True)
+    want = ref.fwht_ref(x.astype(jnp.float32))
+    tol = 1e-4 if dtype == jnp.float32 else 0.15
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want), rtol=tol,
+        atol=tol * np.sqrt(n),
+    )
+
+
+def test_fwht_matches_dense_hadamard():
+    n, d = 128, 9
+    x = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+    H = ref.hadamard_dense(n)
+    np.testing.assert_allclose(
+        np.asarray(fwht_pallas(x, interpret=True)), np.asarray(H @ x),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+def test_fwht_large_two_pass(monkeypatch):
+    monkeypatch.setattr(ops, "_FWHT_VMEM_MAX_N", 64)
+    for n in [128, 1024]:
+        x = jax.random.normal(jax.random.PRNGKey(n), (n, 5))
+        got = ops.fwht_large(x, interpret=True)
+        np.testing.assert_allclose(np.asarray(got),
+                                   np.asarray(ref.fwht_ref(x)),
+                                   rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n,d,m,br", [
+    (512, 64, 32, 256), (1000, 37, 128, 128), (256, 300, 8, 64),
+    (128, 16, 2048, 128),
+])
+def test_sjlt_kernel_matches_ref(n, d, m, br):
+    A = jax.random.normal(jax.random.PRNGKey(1), (n, d))
+    rows = jax.random.randint(jax.random.PRNGKey(2), (n,), 0, m)
+    signs = jax.random.rademacher(jax.random.PRNGKey(3), (n,), dtype=A.dtype)
+    got = sjlt_pallas(A, rows, signs, m, interpret=True, block_rows=br)
+    want = ref.sjlt_ref(A, rows, signs, m)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    lg_n=st.integers(min_value=3, max_value=10),
+    d=st.integers(min_value=1, max_value=16),
+    seed=st.integers(min_value=0, max_value=2**30),
+)
+def test_fwht_kernel_property(lg_n, d, seed):
+    n = 1 << lg_n
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n, d))
+    got = fwht_pallas(x, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref.fwht_ref(x)),
+                               rtol=1e-4, atol=1e-4)
+    # Parseval: ‖Hx‖² = n‖x‖²
+    np.testing.assert_allclose(float(jnp.sum(got**2)),
+                               n * float(jnp.sum(x**2)), rtol=1e-3)
+
+
+def test_srht_sketch_end_to_end():
+    """kernels.ops.srht_sketch is an unbiased isometry in expectation."""
+    n, d, m = 256, 16, 512
+    A = jax.random.normal(jax.random.PRNGKey(5), (n, d)) / np.sqrt(n)
+    G = np.asarray(A.T @ A)
+    acc = np.zeros_like(G)
+    reps = 24
+    for r in range(reps):
+        SA = ops.srht_sketch(A, jax.random.PRNGKey(r), m,
+                             use_pallas=True, interpret=True)
+        acc += np.asarray(SA.T @ SA)
+    acc /= reps
+    assert np.max(np.abs(acc - G)) < 0.15 * np.max(np.abs(G)) + 5e-3

@@ -1,0 +1,97 @@
+"""End-to-end system behaviour: the paper's pipeline solves real problems
+faster (in iterations / flops) than baselines; adaptive beats non-adaptive;
+launcher integration."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    AdaptiveConfig,
+    adaptive_solve,
+    cg_solve,
+    direct_solve,
+    factorize,
+    from_least_squares,
+    make_sketch,
+    run_fixed,
+)
+
+
+def test_adaptive_pcg_fewer_hvp_than_cg(ridge_problem):
+    """The paper's headline: adaptive PCG needs far fewer H·v passes than
+    CG on ill-conditioned problems (each PCG iter = 1 hvp, like CG)."""
+    q, x_star = ridge_problem["q"], ridge_problem["x_star"]
+    res = adaptive_solve(
+        q, AdaptiveConfig(method="pcg", sketch="sjlt", max_iters=500,
+                          tol=1e-10),
+        key=jax.random.PRNGKey(0),
+    )
+    err_target = float(jnp.linalg.norm(res.x - x_star) /
+                       jnp.linalg.norm(x_star))
+    # how many CG iterations to reach the same error?
+    cg_iters = None
+    for iters in [25, 50, 100, 200, 400, 800]:
+        x_cg, _ = cg_solve(q, jnp.zeros((q.d,)), iters=iters)
+        if float(jnp.linalg.norm(x_cg - x_star) /
+                 jnp.linalg.norm(x_star)) <= max(err_target, 1e-6) * 1.5:
+            cg_iters = iters
+            break
+    total_adaptive_hvp = res.iters + res.n_doublings
+    assert cg_iters is None or total_adaptive_hvp < cg_iters, (
+        f"adaptive used {total_adaptive_hvp} hvp vs CG {cg_iters}"
+    )
+
+
+def test_adaptive_smaller_sketch_than_2d(ridge_problem):
+    """Final adaptive sketch ≪ the oblivious default m = 2d."""
+    q = ridge_problem["q"]
+    res = adaptive_solve(
+        q, AdaptiveConfig(method="pcg", sketch="sjlt", max_iters=200,
+                          tol=1e-9),
+        key=jax.random.PRNGKey(1),
+    )
+    assert res.m_final < 2 * q.d
+
+
+def test_effective_dim_tracks_nu(ridge_problem):
+    """Smaller ν ⇒ larger d_e ⇒ larger final sketch (paper Fig. 1 trend)."""
+    q0 = ridge_problem["q"]
+    finals = []
+    for nu in [3e-1, 1e-2]:
+        q = from_least_squares(q0.A, jnp.ones((q0.n,)), nu)
+        res = adaptive_solve(
+            q, AdaptiveConfig(method="pcg", sketch="gaussian",
+                              max_iters=200, tol=1e-8),
+            key=jax.random.PRNGKey(2),
+        )
+        finals.append(res.m_final)
+    assert finals[1] >= finals[0]
+
+
+def test_ridge_probe_pipeline():
+    """Solver-on-backbone integration: fit a readout over model features
+    by adaptive PCG and beat the zero init on held-out MSE."""
+    from repro.configs import get_config
+    from repro.models import init_params, forward
+
+    cfg = get_config("qwen2-0.5b").reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg, max_seq=32)
+    B, S = 8, 16
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    # features = final hidden states (use logits pre-head trick: forward
+    # returns logits; instead extract by calling with identity head)
+    logits, _ = forward(params, cfg, toks, compute_dtype=jnp.float32)
+    feats = logits.reshape(B * S, -1)[:, : cfg.d_model]  # cheap proxy feats
+    w_true = jax.random.normal(jax.random.PRNGKey(2), (cfg.d_model,)) / 8
+    y = feats @ w_true + 0.01 * jax.random.normal(jax.random.PRNGKey(3),
+                                                  (B * S,))
+    q = from_least_squares(feats, y, nu=0.1)
+    res = adaptive_solve(q, AdaptiveConfig(method="pcg", sketch="sjlt",
+                                           max_iters=100, tol=1e-8),
+                         key=jax.random.PRNGKey(4))
+    pred = feats @ res.x
+    mse = float(jnp.mean((pred - y) ** 2))
+    base = float(jnp.mean(y ** 2))
+    assert mse < 0.05 * base
