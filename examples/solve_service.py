@@ -1,0 +1,59 @@
+"""Ridge-solve serving demo: heterogeneous requests through the shape-class
+bucketing + batched multi-problem adaptive engine (DESIGN.md §6).
+
+Submits a stream of ridge problems with random shapes and regularization,
+flushes them through the service, and audits every returned solution and
+its adaptivity certificate against a dense direct solve.
+
+    PYTHONPATH=src python examples/solve_service.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import direct_solve, from_least_squares
+from repro.serve.solver_service import SolverService
+
+
+def main():
+    svc = SolverService(batch_size=16, method="pcg", sketch="gaussian",
+                        tol=1e-12)
+    rng = np.random.default_rng(0)
+    requests = {}
+    for i in range(40):
+        n = int(rng.integers(64, 1500))
+        d = int(rng.integers(8, 100))
+        A = jax.random.normal(jax.random.PRNGKey(2 * i), (n, d)) / np.sqrt(n)
+        y = jax.random.normal(jax.random.PRNGKey(2 * i + 1), (n,))
+        nu = float(rng.uniform(0.05, 0.5))
+        rid = svc.submit(A, y, nu)
+        requests[rid] = (A, y, nu)
+
+    t0 = time.perf_counter()
+    sols = svc.flush()
+    dt = time.perf_counter() - t0
+
+    worst = 0.0
+    for rid, (A, y, nu) in requests.items():
+        s = sols[rid]
+        x_star = direct_solve(from_least_squares(A, y, nu))
+        rel = float(jnp.linalg.norm(s.x - x_star) / jnp.linalg.norm(x_star))
+        worst = max(worst, rel)
+    m_finals = sorted(s.m_final for s in sols.values())
+
+    print(f"{len(requests)} requests in {dt:.2f}s "
+          f"(incl. compile; {svc.stats['batches']} batches, "
+          f"{svc.stats['padded_slots']} padded slots)")
+    print(f"worst relative error vs direct solve: {worst:.2e}")
+    print(f"adapted sketch sizes m_final: min={m_finals[0]} "
+          f"median={m_finals[len(m_finals) // 2]} max={m_finals[-1]}")
+    print("sample certificate:",
+          {k: getattr(next(iter(sols.values())), k)
+           for k in ("m_final", "iters", "doublings", "delta_tilde")})
+
+
+if __name__ == "__main__":
+    main()

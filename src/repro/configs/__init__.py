@@ -3,7 +3,7 @@
 ``get_config(arch_id)`` returns the exact published ModelConfig;
 ``SHAPES`` defines the four assigned input-shape cells;
 ``cells(arch_id)`` enumerates the runnable (arch × shape) cells with the
-skip rules of DESIGN.md §6 applied.
+skip rules of DESIGN.md §7 applied.
 """
 
 from __future__ import annotations
@@ -64,7 +64,7 @@ def get_config(arch: str) -> ModelConfig:
 
 
 def skip_reason(cfg: ModelConfig, shape: str) -> str | None:
-    """Why a cell is skipped (None = runnable). DESIGN.md §6."""
+    """Why a cell is skipped (None = runnable). DESIGN.md §7."""
     if shape == "long_500k" and not cfg.supports_long_context:
         return "full-attention KV at 500k is quadratic-prefill/unbounded-cache"
     if SHAPES[shape].step == "decode" and not cfg.has_decoder:

@@ -6,12 +6,17 @@ Layout:
   quadratic.py      problem container (matrix-free H·v, ∇f)
   solvers.py        IHS / PCG / Polyak-IHS / plain CG
   adaptive.py       Algorithm 4.1 / 4.2 (host-orchestrated doubling)
-  adaptive_padded.py  beyond-paper single-XLA-program masked adaptivity
+  adaptive_padded.py  beyond-paper single-XLA-program masked adaptivity,
+                    batch-polymorphic multi-problem engine (DESIGN.md §6)
   effective_dim.py  d_e and critical sketch sizes (Table 1 / Thm 5.1)
   distributed.py    row-sharded A: block sketches + GSPMD solver steps
+
+Every core op accepts an optional leading problem axis (batched
+``Quadratic``) — see quadratic.py and DESIGN.md §6.
 """
 
 from .adaptive import AdaptiveConfig, AdaptiveResult, adaptive_solve, k_max
+from .adaptive_padded import padded_adaptive_solve, padded_adaptive_solve_batched
 from .effective_dim import (
     effective_dimension,
     effective_dimension_exact,
@@ -20,8 +25,15 @@ from .effective_dim import (
     m_delta_sjlt,
     m_delta_srht,
 )
-from .precond import SketchedPrecond, factorize
-from .quadratic import Quadratic, direct_solve, from_least_squares
+from .precond import SketchedPrecond, factorize, factorize_shared
+from .quadratic import (
+    Quadratic,
+    direct_solve,
+    from_least_squares,
+    from_least_squares_batch,
+    lambda_sweep,
+    stack_quadratics,
+)
 from .sketches import Sketch, fwht, make_sketch
 from .solvers import cg_solve, newton_solve, run_fixed
 
@@ -29,6 +41,8 @@ __all__ = [
     "AdaptiveConfig",
     "AdaptiveResult",
     "adaptive_solve",
+    "padded_adaptive_solve",
+    "padded_adaptive_solve_batched",
     "k_max",
     "effective_dimension",
     "effective_dimension_exact",
@@ -38,9 +52,13 @@ __all__ = [
     "m_delta_srht",
     "SketchedPrecond",
     "factorize",
+    "factorize_shared",
     "Quadratic",
     "direct_solve",
     "from_least_squares",
+    "from_least_squares_batch",
+    "lambda_sweep",
+    "stack_quadratics",
     "Sketch",
     "fwht",
     "make_sketch",

@@ -7,21 +7,47 @@ executables, we instead:
 
 * allocate the sketch at a maximum size m_max once;
 * keep an *active-row count* m_t as a traced integer; rows ≥ m_t are masked
-  to zero and the live rows are rescaled by √(m_max/m_t) so the masked
-  sketch has exactly the law of an m_t-row sketch (for Gaussian/SJLT whose
-  rows are i.i.d.);
+  to zero and the live rows are rescaled so the masked sketch has exactly
+  the law of an m_t-row sketch;
 * run the whole adaptive loop as one ``lax.while_loop`` — the improvement
   test, doubling (m_t ← 2·m_t, i.e. unmask more rows) and refactorization
   are all inside the compiled graph.
 
-Cost trade-off vs the paper: every refactorization pays the m_max-shape
-Gram/Cholesky cost (we cannot shrink shapes in-graph), but there are at
-most log₂(m_max) of them; in exchange there is exactly ONE executable and
-no host round-trips — the right trade on real TPU pods where launch
-latency and recompiles dominate at small m. Recorded in EXPERIMENTS.md.
+Multi-problem engine (DESIGN.md §6): the loop is *batch-polymorphic*. A
+batched ``Quadratic`` (B problems, per-problem A or shared A) is solved by
+ONE while_loop in which m_t, the restart clock t_rel, δ̃_I and the
+convergence flag are all per-problem (B,) vectors — each problem follows
+its own doubling schedule (driven by its own effective dimension, per
+arXiv:2006.05874) inside a single executable. Refactorization is batched:
+whenever any problem rejects, the masked factorization is recomputed for
+the whole batch at the updated per-problem sizes (unchanged problems
+reproduce their factor bit-for-bit, so this is a no-op for them).
 
-Gaussian sketch only (i.i.d. rows ⇒ masking = subsampling). IHS inner
-update (the test thresholds follow Thm 3.2: φ(ρ)=ρ, α=1).
+Sketch families:
+
+* ``gaussian`` — rows are i.i.d., so masking = subsampling; live rows are
+  rescaled by 1/√m_t (entries are sampled as unit normals).
+* ``sjlt``     — each data row i carries a fixed uniform u_i ∈ [0,1) and a
+  sign; the active target row is ⌊u_i · m_t⌋, which is exactly uniform on
+  {0,…,m_t−1} for every m_t. Doubling re-dispatches the same (u, sign)
+  stream into more rows; no rescale (s = 1 entries are ±1).
+
+Methods: ``ihs`` (Thm 3.2 thresholds: φ(ρ)=ρ, α=1) and ``pcg``
+(Alg 4.2 thresholds: φ(ρ)=(1−√(1−ρ))/(1+√(1−ρ)), α=4); the method restarts
+at the current iterate on every doubling, as in Algorithm 4.1.
+
+Cost model: m_t only ever visits the doubling ladder {1, 2, 4, …, m_max},
+so the sketched Gram (SA)ᵀ(SA) is PRECOMPUTED at every ladder level before
+the loop starts — prefix-summed row-Grams for the Gaussian (the m-row Gram
+is the first-m-rows partial sum), one re-dispatch per level for the SJLT
+(routed through ``kernels.ops.sjlt_apply_batched``, i.e. the Pallas MXU
+kernel on TPU). The sketch touches A exactly once, matching the paper's
+O(sketch) + Σ O(factorize) accounting, and the in-loop refactorization is
+only a (B,) gather of level Grams + diagonal add + batched d×d Cholesky.
+H_S is factorized in the primal (d×d) form for every m_t (ν²Λ ≻ 0 keeps it
+SPD below d). In exchange for the padded d×d factor there is exactly ONE
+executable and no host round-trips — the right trade on real TPU pods
+where launch latency and recompiles dominate at small m.
 """
 
 from __future__ import annotations
@@ -33,109 +59,381 @@ import jax
 import jax.numpy as jnp
 
 from .quadratic import Quadratic
-from .solvers import c_alpha_rho
+from .solvers import c_alpha_rho, rho_to_rate
+
+PADDED_METHODS = ("ihs", "pcg")
+PADDED_SKETCHES = ("gaussian", "sjlt")
 
 
 class PaddedState(NamedTuple):
-    x: jnp.ndarray
-    m: jnp.ndarray            # active rows (traced int32)
-    t_rel: jnp.ndarray        # iterations since last restart
-    dtilde_I: jnp.ndarray     # δ̃ at last restart
-    dtilde: jnp.ndarray       # current δ̃
-    chol: jnp.ndarray         # (d, d) Cholesky of H_S (primal form)
-    iters: jnp.ndarray        # accepted iterations
-    doublings: jnp.ndarray
+    x: jnp.ndarray            # (B, d) iterates
+    r: jnp.ndarray            # (B, d) PCG residual (zeros for IHS)
+    rt: jnp.ndarray           # (B, d) PCG preconditioned residual
+    p: jnp.ndarray            # (B, d) PCG search direction
+    grad: jnp.ndarray         # (B, d) gradient at x (IHS)
+    level: jnp.ndarray        # (B,)  index into the doubling ladder (int32)
+    t_rel: jnp.ndarray        # (B,)  iterations since last restart
+    dtilde_I: jnp.ndarray     # (B,)  δ̃ at last restart
+    dtilde: jnp.ndarray       # (B,)  current δ̃
+    dtilde0: jnp.ndarray      # (B,)  δ̃ at x₀ under the current sketch
+    x_best: jnp.ndarray       # (B, d) best iterate under the current metric
+    dt_best: jnp.ndarray      # (B,)  its δ̃ (the returned certificate)
+    pinv: jnp.ndarray         # (B, d, d) gathered H_S⁻¹ at the current level
+    iters: jnp.ndarray        # (B,)  accepted iterations
+    doublings: jnp.ndarray    # (B,)
+    done: jnp.ndarray         # (B,)  bool
+    trips: jnp.ndarray        # scalar loop-trip counter
 
 
-def _masked_factorize(q: Quadratic, S: jnp.ndarray, m: jnp.ndarray):
-    """Cholesky of H_S for the m-row masked/rescaled sketch (fixed shapes)."""
-    m_max = S.shape[0]
-    mask = (jnp.arange(m_max) < m).astype(S.dtype)
-    scale = jnp.sqrt(jnp.asarray(m_max, S.dtype) / jnp.maximum(m, 1).astype(S.dtype))
-    SA = (S * (mask * scale)[:, None]) @ q.A
-    H_S = SA.T @ SA + jnp.diag((q.nu**2) * q.lam_diag)
-    return jnp.linalg.cholesky(H_S)
+def _apply_pinv(pinv, z):
+    """H_S⁻¹ z as one fused batched matvec — the in-loop hot path."""
+    return jnp.einsum("bde,be->bd", pinv, z)
 
 
-def _chol_solve(chol, z):
-    y = jax.scipy.linalg.solve_triangular(chol, z, lower=True)
-    return jax.scipy.linalg.solve_triangular(chol.T, y, lower=False)
+def _pdot(a, b):
+    return jnp.sum(a * b, axis=-1)
 
 
-@partial(jax.jit, static_argnames=("m_max", "max_iters", "rho"))
+def _is_single_key(keys: jax.Array) -> bool:
+    """One PRNG key vs a batch of keys, for both key flavors: typed keys
+    (jax.random.key — a key is a rank-0 array) and legacy uint32 keys
+    (jax.random.PRNGKey — a key is a rank-1 (2,) array)."""
+    if jnp.issubdtype(keys.dtype, jax.dtypes.prng_key):
+        return keys.ndim == 0
+    return keys.ndim == 1
+
+
+def doubling_ladder(m_max: int) -> tuple[int, ...]:
+    """The sizes m_t can visit: 1, 2, 4, …, capped at m_max."""
+    ms, m = [], 1
+    while m < m_max:
+        ms.append(m)
+        m *= 2
+    ms.append(m_max)
+    return tuple(ms)
+
+
+def _sample_sketch(sketch: str, keys, m_max: int, n: int, dtype):
+    """Per-problem sketch randomness, one key per problem (so a batched run
+    reproduces the corresponding single-problem runs exactly)."""
+    if sketch == "gaussian":
+        S = jax.vmap(lambda k: jax.random.normal(k, (m_max, n), dtype))(keys)
+        return {"S": S}
+    if sketch == "sjlt":
+        u = jax.vmap(lambda k: jax.random.uniform(
+            jax.random.fold_in(k, 0), (n,), dtype))(keys)
+        signs = jax.vmap(lambda k: jax.random.rademacher(
+            jax.random.fold_in(k, 1), (n,), dtype))(keys)
+        return {"u": u, "signs": signs}
+    raise ValueError(f"padded engine supports {PADDED_SKETCHES}, got {sketch!r}")
+
+
+def _level_grams(sketch: str, data: dict, q: Quadratic,
+                 ladder: tuple[int, ...]) -> jnp.ndarray:
+    """(L, B, d, d) Gram matrices (SA)ᵀ(SA) of the masked sketch at every
+    ladder level — the sketch touches A exactly once.
+
+    * Gaussian: rows are i.i.d., so the level-m Gram is the prefix sum of
+      the first m unscaled row-Grams times 1/m (mask = subsample, rescale
+      1/√m folded in as 1/m on the Gram).
+    * SJLT: the level-m sketch re-dispatches row i to ⌊u_i·m⌋ (exactly
+      uniform on {0,…,m−1} for every m), one segment-sum / Pallas dispatch
+      per level; entries are ±1 so there is no rescale.
+    """
+    dtype = q.A.dtype
+    B, d = q.batch, q.d
+    if sketch == "gaussian":
+        S = data["S"]                                        # (B, m_max, n)
+        if q.shared_A:
+            SA = jnp.einsum("bmn,nd->bmd", S, q.A)           # unscaled rows
+        else:
+            SA = jnp.einsum("bmn,bnd->bmd", S, q.A)
+        grams, acc, prev = [], jnp.zeros((B, d, d), dtype), 0
+        for m in ladder:
+            seg = SA[:, prev:m, :]
+            acc = acc + jnp.einsum("bmd,bme->bde", seg, seg)
+            grams.append(acc / jnp.asarray(m, dtype))
+            prev = m
+        return jnp.stack(grams)
+    from repro.kernels.ops import sjlt_apply_batched
+
+    u, signs = data["u"], data["signs"]
+
+    def dispatch(m: int) -> jnp.ndarray:
+        rows = jnp.clip(
+            jnp.floor(u * jnp.asarray(m, u.dtype)).astype(jnp.int32),
+            0, m - 1)
+        return sjlt_apply_batched(q.A, rows, signs, m)
+
+    # ⌊u·m⌋ = ⌊⌊u·2m⌋/2⌋, so the level-m sketch is exactly the pairwise
+    # row-fold of the level-2m sketch: ONE scatter/Pallas dispatch at the
+    # top power-of-two level, then log₂ cheap folds down the ladder.
+    pow2 = [m for m in ladder if m & (m - 1) == 0]
+    by_m = {}
+    SA = dispatch(pow2[-1])
+    by_m[pow2[-1]] = SA
+    for m in reversed(pow2[:-1]):
+        SA = SA[:, 0::2, :] + SA[:, 1::2, :]
+        by_m[m] = SA
+    for m in ladder:                       # non-pow2 cap level, if any
+        if m not in by_m:
+            by_m[m] = dispatch(m)
+    return jnp.stack(
+        [jnp.einsum("bmd,bme->bde", by_m[m], by_m[m]) for m in ladder])
+
+
+def _precompute_pinvs(grams: jnp.ndarray, q: Quadratic) -> jnp.ndarray:
+    """(L, B, d, d) explicit H_S⁻¹ at EVERY ladder level, as one flattened
+    batched Cholesky + triangular inverse before the loop starts.
+
+    With the inverses precomputed, the in-loop "refactorization" on a
+    doubling is a pure (B,) gather and the per-iteration preconditioner
+    application is one fused batched matvec — no LAPACK dispatch anywhere
+    inside the while_loop. The extra work vs factorizing on demand is at
+    most the ladder length × a d×d Cholesky, a rounding error next to the
+    sketch pass; the forward error of an explicit inverse is the same
+    O(ε·κ) as triangular solves, which a *preconditioner* tolerates."""
+    L, B, d, _ = grams.shape
+    reg = (q.nu**2)[:, None] * q.lam_diag                    # (B, d)
+    HS = grams + jax.vmap(jnp.diag)(reg)[None, :, :, :]
+    HS = HS.reshape(L * B, d, d)
+    chol = jnp.linalg.cholesky(HS)
+    eye = jnp.broadcast_to(jnp.eye(d, dtype=HS.dtype), HS.shape)
+    y = jax.scipy.linalg.solve_triangular(chol, eye, lower=True)
+    pinv = jax.scipy.linalg.solve_triangular(
+        jnp.swapaxes(chol, -1, -2), y, lower=False)
+    return pinv.reshape(L, B, d, d)
+
+
+def _gather_pinv(pinvs: jnp.ndarray, level: jnp.ndarray) -> jnp.ndarray:
+    """Select each problem's preconditioner at its current ladder level."""
+    return pinvs[level, jnp.arange(level.shape[0])]
+
+
+@partial(jax.jit,
+         static_argnames=("m_max", "method", "sketch", "max_iters", "rho",
+                          "gram_hvp"))
+def padded_adaptive_solve_batched(
+    q: Quadratic,
+    keys: jax.Array,
+    *,
+    m_max: int,
+    method: str = "ihs",
+    sketch: str = "gaussian",
+    max_iters: int = 100,
+    rho: float = 0.5,
+    tol: float = 1e-10,
+    gram_hvp: bool | None = None,
+):
+    """One-executable adaptive solve of a batch of B problems.
+
+    ``q`` must be batched (per-problem A (B,n,d) or shared A (n,d));
+    ``keys`` is a single PRNG key (split internally) or a (B,)-batch of keys
+    — problem b's sketch depends only on keys[b]. Returns (x, stats) with
+    x (B, d) and per-problem stats vectors (m_final, iters, doublings, δ̃).
+
+    ``gram_hvp`` (default: auto, on when d ≤ min(n, 1024)): precompute the
+    per-problem Gram AᵀA once so every in-loop H·v is a (B,d,d)·(B,d)
+    matvec instead of two memory-bound (B,n,d) GEMVs — the right trade in
+    the serving regime (n ≫ d, many iterations), and no more than the
+    sketch pass we already pay; large-d problems keep the matrix-free O(nd)
+    hvp of the paper.
+    """
+    if not q.batched:
+        raise ValueError("use padded_adaptive_solve for single problems")
+    if method not in PADDED_METHODS:
+        raise ValueError(f"padded engine supports {PADDED_METHODS}, got {method!r}")
+    B, d = q.batch, q.d
+    if _is_single_key(keys):
+        keys = jax.random.split(keys, B)
+    data = _sample_sketch(sketch, keys, m_max, q.n, q.A.dtype)
+    ladder = doubling_ladder(m_max)
+    grams = _level_grams(sketch, data, q, ladder)
+    pinvs = _precompute_pinvs(grams, q)
+    ladder_m = jnp.asarray(ladder, jnp.int32)
+    top = len(ladder) - 1
+
+    if gram_hvp is None:
+        gram_hvp = q.d <= min(q.n, 1024)
+    if gram_hvp:
+        if q.shared_A:
+            G_full = q.A.T @ q.A                             # (d, d) once
+            hvp = lambda v: v @ G_full + (q.nu**2)[:, None] * q.lam_diag * v
+        else:
+            G_full = jnp.einsum("bnd,bne->bde", q.A, q.A)    # (B, d, d) once
+            hvp = lambda v: jnp.einsum("bde,be->bd", G_full, v) + (
+                (q.nu**2)[:, None] * q.lam_diag * v)
+    else:
+        hvp = q.hvp
+    grad_f = lambda x: hvp(x) - q.b
+
+    phi, alpha = rho_to_rate(method, rho)
+    c = c_alpha_rho(alpha, rho)
+    mu = 1.0 - rho
+    fdtype = q.A.dtype
+
+    x0 = jnp.zeros((B, d), fdtype)
+    lvl0 = jnp.zeros((B,), jnp.int32)
+    pinv0 = _gather_pinv(pinvs, lvl0)
+    g0 = grad_f(x0)                                  # = −b
+    rt0 = _apply_pinv(pinv0, -g0)
+    dt0 = 0.5 * _pdot(-g0, rt0)
+
+    init = PaddedState(
+        x=x0, r=-g0, rt=rt0, p=rt0, grad=g0,
+        level=lvl0, t_rel=jnp.zeros((B,), jnp.int32),
+        dtilde_I=dt0, dtilde=dt0, dtilde0=dt0,
+        x_best=x0, dt_best=dt0, pinv=pinv0,
+        iters=jnp.zeros((B,), jnp.int32),
+        doublings=jnp.zeros((B,), jnp.int32),
+        done=dt0 <= tol * dt0,                       # trivially-solved (b=0)
+        trips=jnp.asarray(0, jnp.int32),
+    )
+    # Rejects per problem are bounded by the ladder length; the trip cap is
+    # a safety net on top of the per-problem iteration cap.
+    trip_cap = max_iters + top + 4
+
+    def cond(st: PaddedState):
+        return (~jnp.all(st.done)) & (st.trips < trip_cap)
+
+    def body(st: PaddedState) -> PaddedState:
+        active = ~st.done
+        pinv = st.pinv
+        # ---- one step of the method under the current preconditioner ----
+        if method == "ihs":
+            # rt caches H_S⁻¹(b − Hx) = −H_S⁻¹∇f from the previous trip's
+            # δ̃ evaluation (or the restart), so each trip applies the
+            # preconditioner once, not twice.
+            x_new = st.x + mu * st.rt
+            g_new = grad_f(x_new)
+            rt_new = _apply_pinv(pinv, -g_new)
+            dt_new = 0.5 * _pdot(-g_new, rt_new)
+            r_new, p_new = -g_new, st.p
+        else:  # pcg
+            Hp = hvp(st.p)
+            denom = _pdot(st.p, Hp)
+            ok = denom > 0
+            alpha_s = jnp.where(ok, 2.0 * st.dtilde / jnp.where(ok, denom, 1.0), 0.0)
+            x_new = st.x + alpha_s[:, None] * st.p
+            r_new = st.r - alpha_s[:, None] * Hp
+            rt_new = _apply_pinv(pinv, r_new)
+            dt_new = 0.5 * _pdot(r_new, rt_new)
+            okb = st.dtilde > 0
+            beta = jnp.where(okb, dt_new / jnp.where(okb, st.dtilde, 1.0), 0.0)
+            p_new = rt_new + beta[:, None] * st.p
+            g_new = -r_new
+
+        # ---- per-problem improvement test (Alg 4.1 line 6) ----
+        threshold = c * (phi ** (st.t_rel + 1).astype(fdtype)) * st.dtilde_I
+        bad = jnp.logical_or(~jnp.isfinite(dt_new), dt_new > threshold)
+        at_cap = st.level >= top
+        reject = bad & active & ~at_cap
+        # At the ladder cap the rate test is unenforceable (no further
+        # doubling), so steps are accepted freely and the BEST iterate is
+        # tracked instead: f32 δ̃-floor oscillation polishes harmlessly,
+        # while clear divergence (a divergent method under a too-weak
+        # capped preconditioner, e.g. IHS) stalls the problem — the caller
+        # reads the shortfall off the returned δ̃ certificate. Without the
+        # safeguard a diverging iteration would be "accepted" to overflow.
+        stalled = active & at_cap & (
+            ~jnp.isfinite(dt_new) | (dt_new > 1e6 * st.dt_best))
+        accept = active & ~reject & ~stalled
+
+        aB = accept[:, None]
+        improved = accept & (dt_new < st.dt_best)
+        st1 = PaddedState(
+            x=jnp.where(aB, x_new, st.x),
+            r=jnp.where(aB, r_new, st.r),
+            rt=jnp.where(aB, rt_new, st.rt),
+            p=jnp.where(aB, p_new, st.p),
+            grad=jnp.where(aB, g_new, st.grad),
+            level=jnp.where(reject, jnp.minimum(st.level + 1, top), st.level),
+            t_rel=jnp.where(accept, st.t_rel + 1, st.t_rel),
+            dtilde_I=st.dtilde_I,
+            dtilde=jnp.where(accept, dt_new, st.dtilde),
+            dtilde0=st.dtilde0,
+            x_best=jnp.where(improved[:, None], x_new, st.x_best),
+            dt_best=jnp.where(improved, dt_new, st.dt_best),
+            pinv=st.pinv,
+            iters=st.iters + accept.astype(jnp.int32),
+            doublings=st.doublings + reject.astype(jnp.int32),
+            done=st.done | stalled | (accept & (dt_new <= tol * st.dtilde0))
+                 | (st.iters + accept.astype(jnp.int32) >= max_iters),
+            trips=st.trips + 1,
+        )
+
+        def do_refactor(s: PaddedState) -> PaddedState:
+            # Doubling: unmask more rows + restart at the current iterate
+            # (Alg 4.1 line 8). "Refactorization" is a pure gather of the
+            # precomputed per-level inverses (problems whose level did not
+            # change get the identical factor back); the restart residual
+            # is the stored gradient (x did not move on a reject), so no
+            # extra H·v is needed.
+            pinv_new = _gather_pinv(pinvs, s.level)
+            res = -s.grad                              # b − Hx at current x
+            rt_re = _apply_pinv(pinv_new, res)
+            dt_re = 0.5 * _pdot(res, rt_re)
+            dt0_re = 0.5 * _pdot(q.b, _apply_pinv(pinv_new, q.b))
+            rB = reject[:, None]
+            return s._replace(
+                pinv=pinv_new,
+                r=jnp.where(rB, res, s.r),
+                rt=jnp.where(rB, rt_re, s.rt),
+                p=jnp.where(rB, rt_re, s.p),
+                t_rel=jnp.where(reject, 0, s.t_rel),
+                # δ̃ is metric-dependent: restart best-tracking in the new
+                # preconditioner's metric at the current iterate
+                x_best=jnp.where(rB, s.x, s.x_best),
+                dt_best=jnp.where(reject, dt_re, s.dt_best),
+                dtilde_I=jnp.where(reject, dt_re, s.dtilde_I),
+                dtilde=jnp.where(reject, dt_re, s.dtilde),
+                dtilde0=jnp.where(reject, dt0_re, s.dtilde0),
+            )
+
+        return jax.lax.cond(jnp.any(reject), do_refactor, lambda s: s, st1)
+
+    st = jax.lax.while_loop(cond, body, init)
+    stats = {"m_final": ladder_m[st.level], "iters": st.iters,
+             "doublings": st.doublings, "dtilde": st.dt_best,
+             "trips": st.trips}
+    return st.x_best, stats
+
+
 def padded_adaptive_solve(
     q: Quadratic,
     key: jax.Array,
     *,
     m_max: int,
+    method: str = "ihs",
+    sketch: str = "gaussian",
     max_iters: int = 100,
     rho: float = 0.5,
     tol: float = 1e-10,
 ):
-    """One-executable adaptive IHS. Returns (x, stats dict)."""
-    d = q.d
-    S = jax.random.normal(key, (m_max, q.n), dtype=q.A.dtype) / jnp.sqrt(
-        jnp.asarray(m_max, q.A.dtype)
-    )
-    phi, alpha = rho, 1.0
-    c = c_alpha_rho(alpha, rho)
-    mu = 1.0 - rho
-
-    x0 = jnp.zeros_like(q.b)
-    m0 = jnp.asarray(1, jnp.int32)
-    chol0 = _masked_factorize(q, S, m0)
-    g0 = q.grad(x0)
-    dt0 = 0.5 * jnp.sum(g0 * _chol_solve(chol0, g0))
-
-    init = PaddedState(
-        x=x0, m=m0, t_rel=jnp.asarray(0, jnp.int32), dtilde_I=dt0, dtilde=dt0,
-        chol=chol0, iters=jnp.asarray(0, jnp.int32),
-        doublings=jnp.asarray(0, jnp.int32),
-    )
-    dt_ref = dt0  # reference for the relative stop (updated on resketch)
-
-    def cond(carry):
-        st, dt_ref = carry
-        return (st.iters < max_iters) & (st.dtilde > tol * dt_ref)
-
-    def body(carry):
-        st, dt_ref = carry
-        g = q.grad(st.x)
-        x_new = st.x - mu * _chol_solve(st.chol, g)
-        g_new = q.grad(x_new)
-        dt_new = 0.5 * jnp.sum(g_new * _chol_solve(st.chol, g_new))
-        threshold = c * (phi ** (st.t_rel + 1).astype(q.A.dtype)) * st.dtilde_I
-        reject = jnp.logical_or(~jnp.isfinite(dt_new), dt_new > threshold)
-        reject = jnp.logical_and(reject, st.m < m_max)
-
-        def do_reject(_):
-            m2 = jnp.minimum(st.m * 2, m_max)
-            chol2 = _masked_factorize(q, S, m2)
-            dt_I = 0.5 * jnp.sum(g * _chol_solve(chol2, g))
-            g00 = q.grad(jnp.zeros_like(st.x))
-            ref2 = 0.5 * jnp.sum(g00 * _chol_solve(chol2, g00))
-            return (
-                PaddedState(
-                    x=st.x, m=m2, t_rel=jnp.asarray(0, jnp.int32),
-                    dtilde_I=dt_I, dtilde=dt_I, chol=chol2, iters=st.iters,
-                    doublings=st.doublings + 1,
-                ),
-                ref2,
-            )
-
-        def do_accept(_):
-            return (
-                PaddedState(
-                    x=x_new, m=st.m, t_rel=st.t_rel + 1, dtilde_I=st.dtilde_I,
-                    dtilde=dt_new, chol=st.chol, iters=st.iters + 1,
-                    doublings=st.doublings,
-                ),
-                dt_ref,
-            )
-
-        return jax.lax.cond(reject, do_reject, do_accept, None)
-
-    st, _ = jax.lax.while_loop(cond, body, (init, dt_ref))
-    stats = {"m_final": st.m, "iters": st.iters, "doublings": st.doublings,
-             "dtilde": st.dtilde}
-    return st.x, stats
+    """Adaptive solve of one problem as a B=1 (or B=c for matrix RHS) batch
+    through the padded multi-problem engine. Returns (x, stats) with scalar
+    stats for vector right-hand sides; a (d, c) matrix RHS is dispatched as
+    a shared-A batch over columns and gets per-column stats."""
+    if q.batched:
+        return padded_adaptive_solve_batched(
+            q, key, m_max=m_max, method=method, sketch=sketch,
+            max_iters=max_iters, rho=rho, tol=tol)
+    matrix_rhs = q.b.ndim == 2
+    if matrix_rhs:
+        B = q.b.shape[1]
+        b = q.b.T
+        keys = jax.random.split(key, B)
+    else:
+        B = 1
+        b = q.b[None, :]
+        keys = key[None] if _is_single_key(key) else key
+    nu = jnp.broadcast_to(jnp.atleast_1d(q.nu), (B,))
+    lam = jnp.broadcast_to(q.lam_diag, (B, q.d))
+    qb = Quadratic(A=q.A, b=b, nu=nu, lam_diag=lam, batched=True)
+    x, stats = padded_adaptive_solve_batched(
+        qb, keys, m_max=m_max, method=method, sketch=sketch,
+        max_iters=max_iters, rho=rho, tol=tol)
+    if matrix_rhs:
+        return x.T, stats
+    return x[0], {k: (v[0] if getattr(v, "ndim", 0) else v)
+                  for k, v in stats.items()}

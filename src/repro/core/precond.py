@@ -7,6 +7,12 @@ Two regimes, chosen exactly as in the paper:
   Cholesky in O(m³); solves O(md) via
       v = Λ⁻¹/ν² · (I_d − (SA)ᵀ W_S⁻¹ SA Λ⁻¹) z .
 
+Batch polymorphism (DESIGN.md §6): ``factorize`` accepts SA with a leading
+problem axis (B, m, d) — the factorization and ``solve`` batch over it —
+and ``factorize_shared`` covers the shared-sketch λ-batch, where one SA is
+factorized against B different (ν, Λ) regularizers with the Gram matrix
+(SAᵀSA, resp. SAΛ⁻¹SAᵀ) formed once.
+
 The factorization object is a pytree so it can be closed over / donated in
 jitted solver loops.
 """
@@ -17,7 +23,13 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
-from jax.scipy.linalg import cho_factor, cho_solve
+from jax.scipy.linalg import cho_factor, solve_triangular
+
+
+def _chol_solve(chol: jnp.ndarray, z: jnp.ndarray) -> jnp.ndarray:
+    """Lower-Cholesky solve; batches over leading axes."""
+    y = solve_triangular(chol, z, lower=True)
+    return solve_triangular(jnp.swapaxes(chol, -1, -2), y, lower=False)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -26,33 +38,59 @@ class SketchedPrecond:
     """Cached factorization of H_S; solves  H_S v = z  in O(min(m,d)·d)."""
 
     mode: str               # "primal" | "dual"
-    chol: jnp.ndarray       # (d,d) or (m,m) lower Cholesky factor
-    SA: jnp.ndarray | None  # (m,d), kept only in dual mode
-    nu2: jnp.ndarray        # scalar ν²
-    lam_diag: jnp.ndarray   # (d,) diagonal of Λ
+    chol: jnp.ndarray       # (d,d) or (m,m) lower Cholesky; (B,·,·) batched
+    SA: jnp.ndarray | None  # (m,d) or (B,m,d), kept only in dual mode
+    nu2: jnp.ndarray        # scalar ν²; (B,) batched
+    lam_diag: jnp.ndarray   # (d,) diagonal of Λ; (B,d) batched
+    batched: bool = False   # static: leading problem axis on chol/ν²/Λ
 
     def tree_flatten(self):
-        return (self.chol, self.SA, self.nu2, self.lam_diag), (self.mode,)
+        return (self.chol, self.SA, self.nu2, self.lam_diag), (
+            self.mode, self.batched)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         chol, SA, nu2, lam = children
-        return cls(mode=aux[0], chol=chol, SA=SA, nu2=nu2, lam_diag=lam)
+        return cls(mode=aux[0], chol=chol, SA=SA, nu2=nu2, lam_diag=lam,
+                   batched=aux[1])
 
     def solve(self, z: jnp.ndarray) -> jnp.ndarray:
-        """Solve H_S v = z. Supports vector (d,) or matrix (d,c) RHS."""
+        """Solve H_S v = z. Supports vector (d,) or matrix (d,c) RHS; with
+        ``batched`` z carries the problem axis: (B, d)."""
+        if self.batched:
+            return self._solve_batched(z)
         squeeze = z.ndim == 1
         if squeeze:
             z = z[:, None]
         if self.mode == "primal":
-            v = cho_solve((self.chol, True), z)
+            v = _chol_solve(self.chol, z)
         else:
             SA, nu2 = self.SA, self.nu2
             lam_inv = 1.0 / self.lam_diag
             zi = lam_inv[:, None] * z                      # Λ⁻¹ z
-            w = cho_solve((self.chol, True), SA @ zi)      # W_S⁻¹ SA Λ⁻¹ z
+            w = _chol_solve(self.chol, SA @ zi)            # W_S⁻¹ SA Λ⁻¹ z
             v = (zi - lam_inv[:, None] * (SA.T @ w)) / nu2
         return v[:, 0] if squeeze else v
+
+    def _solve_batched(self, z: jnp.ndarray) -> jnp.ndarray:
+        if self.mode == "primal":
+            return _chol_solve(self.chol, z[..., None])[..., 0]
+        SA = self.SA
+        lam_inv = 1.0 / self.lam_diag                      # (B, d)
+        zi = lam_inv * z                                   # Λ⁻¹ z, (B, d)
+        if SA.ndim == 2:                                   # shared sketch
+            SAzi = jnp.einsum("md,bd->bm", SA, zi)
+            w = _chol_solve(self.chol, SAzi[..., None])[..., 0]
+            back = jnp.einsum("md,bm->bd", SA, w)
+        else:
+            SAzi = jnp.einsum("bmd,bd->bm", SA, zi)
+            w = _chol_solve(self.chol, SAzi[..., None])[..., 0]
+            back = jnp.einsum("bmd,bm->bd", SA, w)
+        return (zi - lam_inv * back) / self.nu2[:, None]
+
+
+def _diag_embed(x: jnp.ndarray) -> jnp.ndarray:
+    return jax.vmap(jnp.diag)(x)
 
 
 def factorize(
@@ -62,7 +100,10 @@ def factorize(
     *,
     jitter: float = 0.0,
 ) -> SketchedPrecond:
-    """Factorize H_S given the sketched matrix SA ∈ R^{m×d}."""
+    """Factorize H_S given the sketched matrix SA ∈ R^{m×d}, or a batch of
+    sketched matrices SA ∈ R^{B×m×d} (ν, Λ broadcast or per-problem)."""
+    if SA.ndim == 3:
+        return _factorize_batched(SA, nu, lam_diag, jitter=jitter)
     m, d = SA.shape
     nu2 = jnp.asarray(nu, SA.dtype) ** 2
     if m >= d:
@@ -81,6 +122,71 @@ def factorize(
     return SketchedPrecond(
         mode="dual", chol=chol, SA=SA, nu2=nu2, lam_diag=lam_diag
     )
+
+
+def _factorize_batched(SA, nu, lam_diag, *, jitter: float = 0.0
+                       ) -> SketchedPrecond:
+    B, m, d = SA.shape
+    nu2 = jnp.broadcast_to(
+        jnp.atleast_1d(jnp.asarray(nu, SA.dtype)) ** 2, (B,))
+    lam_diag = jnp.broadcast_to(jnp.asarray(lam_diag, SA.dtype), (B, d))
+    if m >= d:
+        H_S = jnp.einsum("bmd,bme->bde", SA, SA) + _diag_embed(
+            nu2[:, None] * lam_diag)
+        if jitter:
+            H_S = H_S + jitter * jnp.eye(d, dtype=SA.dtype)
+        chol = jnp.linalg.cholesky(H_S)
+        return SketchedPrecond(mode="primal", chol=chol, SA=None, nu2=nu2,
+                               lam_diag=lam_diag, batched=True)
+    lam_inv = 1.0 / lam_diag
+    W_S = jnp.einsum("bmd,bnd->bmn", SA * lam_inv[:, None, :], SA) + (
+        nu2[:, None, None] * jnp.eye(m, dtype=SA.dtype))
+    if jitter:
+        W_S = W_S + jitter * jnp.eye(m, dtype=SA.dtype)
+    chol = jnp.linalg.cholesky(W_S)
+    return SketchedPrecond(mode="dual", chol=chol, SA=SA, nu2=nu2,
+                           lam_diag=lam_diag, batched=True)
+
+
+def factorize_shared(
+    SA: jnp.ndarray,
+    nu: jnp.ndarray,
+    lam_diag: jnp.ndarray,
+    *,
+    jitter: float = 0.0,
+) -> SketchedPrecond:
+    """λ-batch fast path: ONE sketched matrix SA (m, d) factorized against a
+    batch of regularizers ν (B,), Λ (B, d) — e.g. a regularization path or
+    per-tenant λ heads over shared data.
+
+    The O(md²) Gram product SAᵀSA (primal) is computed once; only the B
+    diagonal additions and Cholesky factorizations are batched. In the dual
+    (m < d) regime the Λ-weighted Gram SAΛ⁻¹SAᵀ is shared only when Λ is
+    shared across the batch; per-problem Λ falls back to a batched Gram."""
+    m, d = SA.shape
+    nu2 = jnp.atleast_1d(jnp.asarray(nu, SA.dtype)) ** 2
+    B = nu2.shape[0]
+    lam_shared = jnp.asarray(lam_diag, SA.dtype).ndim == 1
+    lam_diag = jnp.broadcast_to(jnp.asarray(lam_diag, SA.dtype), (B, d))
+    if m >= d:
+        G = SA.T @ SA                                        # once, shared
+        H_S = G[None, :, :] + _diag_embed(nu2[:, None] * lam_diag)
+        if jitter:
+            H_S = H_S + jitter * jnp.eye(d, dtype=SA.dtype)
+        chol = jnp.linalg.cholesky(H_S)
+        return SketchedPrecond(mode="primal", chol=chol, SA=None, nu2=nu2,
+                               lam_diag=lam_diag, batched=True)
+    if lam_shared:
+        K = (SA * (1.0 / lam_diag[0])[None, :]) @ SA.T       # once, shared
+        W_S = K[None, :, :] + nu2[:, None, None] * jnp.eye(m, dtype=SA.dtype)
+    else:
+        W_S = jnp.einsum("md,bd,nd->bmn", SA, 1.0 / lam_diag, SA) + (
+            nu2[:, None, None] * jnp.eye(m, dtype=SA.dtype))
+    if jitter:
+        W_S = W_S + jitter * jnp.eye(m, dtype=SA.dtype)
+    chol = jnp.linalg.cholesky(W_S)
+    return SketchedPrecond(mode="dual", chol=chol, SA=SA, nu2=nu2,
+                           lam_diag=lam_diag, batched=True)
 
 
 def factorization_cost_flops(m: int, n: int, d: int) -> float:

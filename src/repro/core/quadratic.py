@@ -4,6 +4,19 @@
 It supports matrix right-hand sides B ∈ R^{d×c} (multi-class heads — the
 paper's experiments use one-hot label matrices).
 
+Batch polymorphism (DESIGN.md §6): every op also accepts a *leading problem
+axis*. A batched ``Quadratic`` (``batched=True``) holds B independent
+problems and comes in two layouts:
+
+* per-problem data:  A (B, n, d), b (B, d), ν (B,), Λ (B, d);
+* shared-A λ-batch:  A (n, d) shared, b (B, d), ν (B,), Λ (B, d) — the
+  layout of hyperparameter sweeps / per-tenant heads over one dataset,
+  where the Gram matrix AᵀA is computed ONCE and reused across the batch.
+
+``batched`` is static pytree metadata, so jitted solvers specialize on it
+without retracing per batch size. Scalar reductions (value, error, δ̃)
+return a (B,) vector in batched mode.
+
 A distributed (row-sharded) variant lives in ``repro.core.distributed``; this
 module is the single-device semantics both share.
 """
@@ -16,48 +29,108 @@ import jax
 import jax.numpy as jnp
 
 
+def pdot(a: jnp.ndarray, b: jnp.ndarray, batched: bool) -> jnp.ndarray:
+    """⟨a, b⟩ summed over all axes — except the leading problem axis when
+    ``batched`` (returns (B,))."""
+    if batched:
+        return jnp.sum(a * b, axis=tuple(range(1, a.ndim)))
+    return jnp.sum(a * b)
+
+
+def pscale(c: jnp.ndarray, batched: bool) -> jnp.ndarray:
+    """Broadcast a per-problem scalar (B,) against (B, d) state arrays."""
+    return c[..., None] if batched else c
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class Quadratic:
-    A: jnp.ndarray          # (n, d) data matrix
-    b: jnp.ndarray          # (d,) or (d, c) linear term (= Aᵀy for LS)
-    nu: jnp.ndarray         # scalar regularization ν
-    lam_diag: jnp.ndarray   # (d,) diagonal of Λ ⪰ I
+    A: jnp.ndarray          # (n, d) data matrix; (B, n, d) or shared (n, d)
+    b: jnp.ndarray          # (d,) or (d, c); (B, d) when batched
+    nu: jnp.ndarray         # scalar regularization ν; (B,) when batched
+    lam_diag: jnp.ndarray   # (d,) diagonal of Λ ⪰ I; (B, d) when batched
+    batched: bool = False   # static: leading problem axis on b/ν/Λ (and A
+                            # unless shared)
 
     def tree_flatten(self):
-        return (self.A, self.b, self.nu, self.lam_diag), ()
+        return (self.A, self.b, self.nu, self.lam_diag), (self.batched,)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children)
+        return cls(*children, batched=aux[0])
 
     # -- dimensions --------------------------------------------------------
     @property
+    def shared_A(self) -> bool:
+        return self.batched and self.A.ndim == 2
+
+    @property
     def n(self) -> int:
-        return self.A.shape[0]
+        return self.A.shape[-2]
 
     @property
     def d(self) -> int:
-        return self.A.shape[1]
+        return self.A.shape[-1]
+
+    @property
+    def batch(self) -> int:
+        if not self.batched:
+            raise ValueError("not a batched problem")
+        return self.b.shape[0]
 
     # -- operator ----------------------------------------------------------
-    def hvp(self, v: jnp.ndarray) -> jnp.ndarray:
-        """H v = AᵀA v + ν²Λ v  in O(nd) (never forms H)."""
+    def _reg(self, v: jnp.ndarray) -> jnp.ndarray:
+        """ν²Λ v with the layout-appropriate broadcast."""
+        if self.batched:
+            return (self.nu**2)[:, None] * self.lam_diag * v
         lam = self.lam_diag
         if v.ndim == 1:
-            return self.A.T @ (self.A @ v) + (self.nu**2) * lam * v
-        return self.A.T @ (self.A @ v) + (self.nu**2) * lam[:, None] * v
+            return (self.nu**2) * lam * v
+        return (self.nu**2) * lam[:, None] * v
+
+    def hvp(self, v: jnp.ndarray) -> jnp.ndarray:
+        """H v = AᵀA v + ν²Λ v  in O(nd) per problem (never forms H)."""
+        if self.batched:
+            if self.shared_A:
+                Av = v @ self.A.T                      # (B, n)
+                AtAv = Av @ self.A                     # (B, d)
+            else:
+                Av = jnp.einsum("bnd,bd->bn", self.A, v)
+                AtAv = jnp.einsum("bnd,bn->bd", self.A, Av)
+            return AtAv + self._reg(v)
+        return self.A.T @ (self.A @ v) + self._reg(v)
 
     def grad(self, x: jnp.ndarray) -> jnp.ndarray:
         return self.hvp(x) - self.b
 
     def value(self, x: jnp.ndarray) -> jnp.ndarray:
-        return 0.5 * jnp.sum(x * self.hvp(x)) - jnp.sum(self.b * x)
+        return 0.5 * pdot(x, self.hvp(x), self.batched) - pdot(
+            self.b, x, self.batched
+        )
 
     def error(self, x: jnp.ndarray, x_star: jnp.ndarray) -> jnp.ndarray:
-        """δ_x = ½‖x − x*‖²_H (summed over columns for matrix RHS)."""
+        """δ_x = ½‖x − x*‖²_H (summed over columns for matrix RHS; per
+        problem for batched)."""
         dx = x - x_star
-        return 0.5 * jnp.sum(dx * self.hvp(dx))
+        return 0.5 * pdot(dx, self.hvp(dx), self.batched)
+
+    # -- batch utilities ---------------------------------------------------
+    def problem(self, i: int) -> "Quadratic":
+        """Extract problem i of a batched Quadratic as a single problem."""
+        if not self.batched:
+            raise ValueError("not a batched problem")
+        A = self.A if self.shared_A else self.A[i]
+        return Quadratic(A=A, b=self.b[i], nu=self.nu[i],
+                         lam_diag=self.lam_diag[i])
+
+
+def _as_batched_reg(nu, lam_diag, B: int, d: int, dtype):
+    """Materialize ν as (B,) and Λ as (B, d) so batched ops are uniform."""
+    nu = jnp.broadcast_to(jnp.atleast_1d(jnp.asarray(nu, dtype)), (B,))
+    if lam_diag is None:
+        lam_diag = jnp.ones((d,), dtype)
+    lam_diag = jnp.broadcast_to(jnp.asarray(lam_diag, dtype), (B, d))
+    return nu, lam_diag
 
 
 def from_least_squares(A, y, nu, lam_diag=None) -> Quadratic:
@@ -69,8 +142,63 @@ def from_least_squares(A, y, nu, lam_diag=None) -> Quadratic:
     return Quadratic(A=A, b=A.T @ y, nu=jnp.asarray(nu, A.dtype), lam_diag=lam_diag)
 
 
+def from_least_squares_batch(A, Y, nu, lam_diag=None) -> Quadratic:
+    """Batched ridge:  A (B, n, d) per-problem or (n, d) shared; Y (B, n);
+    ν scalar or (B,); Λ (d,) or (B, d)."""
+    A = jnp.asarray(A)
+    Y = jnp.asarray(Y)
+    B, d = Y.shape[0], A.shape[-1]
+    if A.ndim == 2:
+        b = Y @ A                                   # (B, d), shared Gram path
+    else:
+        b = jnp.einsum("bnd,bn->bd", A, Y)
+    nu, lam_diag = _as_batched_reg(nu, lam_diag, B, d, A.dtype)
+    return Quadratic(A=A, b=b, nu=nu, lam_diag=lam_diag, batched=True)
+
+
+def lambda_sweep(A, y, nus, lam_diag=None) -> Quadratic:
+    """Shared-A regularization-path batch: one (A, y), B values of ν.
+
+    The returned problem has A shared, so Gram-forming consumers
+    (``direct_solve``, ``precond.factorize_shared``) pay the O(nd²) once."""
+    A = jnp.asarray(A)
+    y = jnp.asarray(y)
+    nus = jnp.asarray(nus, A.dtype)
+    b1 = A.T @ y
+    b = jnp.broadcast_to(b1[None, :], (nus.shape[0], A.shape[1]))
+    nu, lam_diag = _as_batched_reg(nus, lam_diag, nus.shape[0], A.shape[1],
+                                   A.dtype)
+    return Quadratic(A=A, b=b, nu=nu, lam_diag=lam_diag, batched=True)
+
+
+def stack_quadratics(qs: list[Quadratic]) -> Quadratic:
+    """Stack same-shape single problems along a new leading problem axis."""
+    if any(q.batched for q in qs):
+        raise ValueError("stack_quadratics takes single problems")
+    A = jnp.stack([q.A for q in qs])
+    b = jnp.stack([q.b for q in qs])
+    nu = jnp.stack([jnp.asarray(q.nu) for q in qs])
+    lam = jnp.stack([q.lam_diag for q in qs])
+    return Quadratic(A=A, b=b, nu=nu, lam_diag=lam, batched=True)
+
+
 def direct_solve(q: Quadratic) -> jnp.ndarray:
-    """Baseline: dense Cholesky factor-and-solve, O(nd²+d³) (paper baseline)."""
+    """Baseline: dense Cholesky factor-and-solve, O(nd²+d³) (paper baseline).
+
+    Batched problems get a batched Cholesky; with shared A the Gram matrix
+    is formed once and only the ν²Λ diagonal varies across the batch."""
+    if q.batched:
+        from .precond import _chol_solve
+
+        if q.shared_A:
+            G = q.A.T @ q.A                                    # (d, d) once
+            H = G[None, :, :] + jax.vmap(jnp.diag)((q.nu**2)[:, None]
+                                                   * q.lam_diag)
+        else:
+            G = jnp.einsum("bnd,bne->bde", q.A, q.A)
+            H = G + jax.vmap(jnp.diag)((q.nu**2)[:, None] * q.lam_diag)
+        chol = jnp.linalg.cholesky(H)
+        return _chol_solve(chol, q.b[..., None])[..., 0]
     H = q.A.T @ q.A + jnp.diag((q.nu**2) * q.lam_diag)
     chol, _ = jax.scipy.linalg.cho_factor(H, lower=True)
     return jax.scipy.linalg.cho_solve((chol, True), q.b)

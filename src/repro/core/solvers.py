@@ -14,6 +14,10 @@ convenience ``run`` loop (lax.while_loop, fully jittable) for fixed sketches.
 
 Every step also returns the approximate Newton decrement
 δ̃ = ½ ∇fᵀ H_S⁻¹ ∇f (eq. 2.3), which is free given the preconditioner solve.
+
+Batch polymorphism (DESIGN.md §6): when ``q.batched`` every state field
+carries a leading problem axis and δ̃ / step sizes are per-problem (B,)
+vectors — one compiled step advances B independent problems.
 """
 
 from __future__ import annotations
@@ -27,7 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from .precond import SketchedPrecond
-from .quadratic import Quadratic
+from .quadratic import Quadratic, pdot, pscale
 
 
 def rho_to_rate(method: str, rho: float) -> tuple[float, float]:
@@ -52,19 +56,21 @@ def c_alpha_rho(alpha: float, rho: float) -> float:
 class IHSState(NamedTuple):
     x: jnp.ndarray
     grad: jnp.ndarray
-    delta_tilde: jnp.ndarray  # scalar δ̃ at x
+    delta_tilde: jnp.ndarray  # δ̃ at x: scalar, or (B,) for batched problems
 
 
 def ihs_init(q: Quadratic, P: SketchedPrecond, x0: jnp.ndarray) -> IHSState:
     g = q.grad(x0)
-    return IHSState(x=x0, grad=g, delta_tilde=0.5 * jnp.sum(g * P.solve(g)))
+    return IHSState(x=x0, grad=g,
+                    delta_tilde=0.5 * pdot(g, P.solve(g), q.batched))
 
 
 def ihs_step(q: Quadratic, P: SketchedPrecond, st: IHSState, rho: float) -> IHSState:
     mu = 1.0 - rho
     x = st.x - mu * P.solve(st.grad)
     g = q.grad(x)
-    return IHSState(x=x, grad=g, delta_tilde=0.5 * jnp.sum(g * P.solve(g)))
+    return IHSState(x=x, grad=g,
+                    delta_tilde=0.5 * pdot(g, P.solve(g), q.batched))
 
 
 # ---------------------------------------------------------------------------
@@ -82,7 +88,8 @@ class PolyakState(NamedTuple):
 def polyak_init(q: Quadratic, P: SketchedPrecond, x0: jnp.ndarray) -> PolyakState:
     g = q.grad(x0)
     return PolyakState(
-        x=x0, x_prev=x0, grad=g, delta_tilde=0.5 * jnp.sum(g * P.solve(g))
+        x=x0, x_prev=x0, grad=g,
+        delta_tilde=0.5 * pdot(g, P.solve(g), q.batched)
     )
 
 
@@ -95,7 +102,8 @@ def polyak_step(
     x = st.x - mu * P.solve(st.grad) + beta * (st.x - st.x_prev)
     g = q.grad(x)
     return PolyakState(
-        x=x, x_prev=st.x, grad=g, delta_tilde=0.5 * jnp.sum(g * P.solve(g))
+        x=x, x_prev=st.x, grad=g,
+        delta_tilde=0.5 * pdot(g, P.solve(g), q.batched)
     )
 
 
@@ -115,21 +123,22 @@ def pcg_init(q: Quadratic, P: SketchedPrecond, x0: jnp.ndarray) -> PCGState:
     r = q.b - q.hvp(x0)
     rt = P.solve(r)
     return PCGState(x=x0, r=r, r_tilde=rt, p=rt,
-                    delta_tilde=0.5 * jnp.sum(r * rt))
+                    delta_tilde=0.5 * pdot(r, rt, q.batched))
 
 
 def pcg_step(q: Quadratic, P: SketchedPrecond, st: PCGState, rho: float = 0.0
              ) -> PCGState:
+    bt = q.batched
     Hp = q.hvp(st.p)
-    denom = jnp.sum(st.p * Hp)
-    # Guard: at exact convergence p → 0; keep alpha finite.
+    denom = pdot(st.p, Hp, bt)
+    # Guard: at exact convergence p → 0; keep alpha finite (per problem).
     alpha = jnp.where(denom > 0, 2.0 * st.delta_tilde / jnp.where(denom > 0, denom, 1.0), 0.0)
-    x = st.x + alpha * st.p
-    r = st.r - alpha * Hp
+    x = st.x + pscale(alpha, bt) * st.p
+    r = st.r - pscale(alpha, bt) * Hp
     rt = P.solve(r)
-    dt_new = 0.5 * jnp.sum(r * rt)
+    dt_new = 0.5 * pdot(r, rt, bt)
     beta = jnp.where(st.delta_tilde > 0, dt_new / jnp.where(st.delta_tilde > 0, st.delta_tilde, 1.0), 0.0)
-    p = rt + beta * st.p
+    p = rt + pscale(beta, bt) * st.p
     return PCGState(x=x, r=r, r_tilde=rt, p=p, delta_tilde=dt_new)
 
 
@@ -138,23 +147,25 @@ def pcg_step(q: Quadratic, P: SketchedPrecond, st: PCGState, rho: float = 0.0
 # ---------------------------------------------------------------------------
 
 def cg_solve(q: Quadratic, x0: jnp.ndarray, iters: int, tol: float = 0.0):
-    """Standard CG on Hx = b; returns (x, per-iteration ‖r‖² trace)."""
+    """Standard CG on Hx = b; returns (x, per-iteration ‖r‖² trace).
 
+    Batched problems get per-problem α/β; the trace is (iters, B)."""
+    bt = q.batched
     r0 = q.b - q.hvp(x0)
 
     def body(carry, _):
         x, r, p, rs = carry
         Hp = q.hvp(p)
-        denom = jnp.sum(p * Hp)
+        denom = pdot(p, Hp, bt)
         alpha = jnp.where(denom > 0, rs / jnp.where(denom > 0, denom, 1.0), 0.0)
-        x = x + alpha * p
-        r = r - alpha * Hp
-        rs_new = jnp.sum(r * r)
+        x = x + pscale(alpha, bt) * p
+        r = r - pscale(alpha, bt) * Hp
+        rs_new = pdot(r, r, bt)
         beta = jnp.where(rs > 0, rs_new / jnp.where(rs > 0, rs, 1.0), 0.0)
-        p = r + beta * p
+        p = r + pscale(beta, bt) * p
         return (x, r, p, rs_new), rs_new
 
-    init = (x0, r0, r0, jnp.sum(r0 * r0))
+    init = (x0, r0, r0, pdot(r0, r0, bt))
     (x, _, _, _), trace = jax.lax.scan(body, init, None, length=iters)
     return x, trace
 
@@ -180,7 +191,9 @@ def run_fixed(
     iters: int = 20,
     rho: float = 1.0 / 8.0,
 ):
-    """Run ``iters`` steps with a fixed preconditioner; returns (x, δ̃-trace)."""
+    """Run ``iters`` steps with a fixed preconditioner; returns (x, δ̃-trace).
+
+    Accepts batched (q, P, x0) — the trace is then (iters, B)."""
     init_fn, step_fn = METHODS[method]
     st = init_fn(q, P, x0)
 

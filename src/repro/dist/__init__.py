@@ -1,0 +1,5 @@
+"""Distributed-training utilities: gradient compression (EF-int8) and
+sharding spec helpers live here; the solver-side distributed math is in
+``repro.core.distributed``."""
+
+from .compress import EFState, compress_decompress, compress_tree, init_ef

@@ -1,0 +1,76 @@
+"""Error-feedback int8 gradient compression (EF-SGD style).
+
+Cross-replica gradient all-reduces dominate data-parallel step time at
+pod scale; 4× compression (f32 → int8) with error feedback keeps the
+convergence of uncompressed SGD on smooth objectives: the residual of each
+quantization is carried over and added to the next gradient before
+compressing, so the *accumulated* transmitted signal is unbiased up to a
+bounded lag (Karimireddy et al., "Error Feedback Fixes SignSGD").
+
+Quantization is symmetric per-tensor int8: scale = max|v|/127, code =
+round(v/scale) ∈ [−127, 127]. The decompressed tensor is what the step
+consumes; ``EFState.residual`` holds v − decompress(compress(v)).
+
+Everything is jit-compatible (pure functions over pytrees).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EFState(NamedTuple):
+    residual: jax.Array | dict | tuple  # pytree matching the gradients
+
+
+def init_ef(grads) -> EFState:
+    """Zero error-feedback state shaped like the gradient pytree."""
+    return EFState(residual=jax.tree.map(jnp.zeros_like, grads))
+
+
+def _quantize(v: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-tensor int8: returns (codes int8, scale f32)."""
+    scale = jnp.max(jnp.abs(v)) / 127.0
+    safe = jnp.where(scale > 0, scale, 1.0)
+    codes = jnp.clip(jnp.round(v / safe), -127, 127).astype(jnp.int8)
+    return codes, scale
+
+
+def _dequantize(codes: jnp.ndarray, scale: jnp.ndarray,
+                dtype=jnp.float32) -> jnp.ndarray:
+    return codes.astype(dtype) * scale
+
+
+def compress_decompress(v: jnp.ndarray, residual: jnp.ndarray
+                        ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One EF-int8 round for a single tensor.
+
+    Returns (v_hat, new_residual): v_hat = Q(v + residual) is what the wire
+    carries (int8 codes + one scale — materialized back to v's dtype here),
+    new_residual = (v + residual) − v_hat is held locally for the next step.
+    """
+    target = v + residual
+    codes, scale = _quantize(target)
+    v_hat = _dequantize(codes, scale, v.dtype)
+    return v_hat, target - v_hat
+
+
+def compress_tree(grads, ef: EFState) -> tuple[jax.Array | dict, EFState]:
+    """EF-int8 over a gradient pytree; returns (decompressed grads, state)."""
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(ef.residual)
+    out = [compress_decompress(g, r) for g, r in zip(flat_g, flat_r)]
+    g_hat = treedef.unflatten([o[0] for o in out])
+    new_res = treedef.unflatten([o[1] for o in out])
+    return g_hat, EFState(residual=new_res)
+
+
+def compression_ratio(grads) -> float:
+    """Wire-bytes ratio vs f32 (int8 codes + one f32 scale per tensor)."""
+    leaves = jax.tree.leaves(grads)
+    raw = sum(4 * l.size for l in leaves)
+    compressed = sum(l.size + 4 for l in leaves)
+    return raw / compressed

@@ -1,0 +1,90 @@
+"""Sharding specs for model params, decode caches, and input batches.
+
+Conservative, shape-driven GSPMD placement: a tensor axis is sharded only
+when its size is divisible by the target mesh axis — anything else is
+replicated, so the same spec functions are valid on every mesh from the
+1-device host mesh to the production pods (XLA inserts the collectives;
+numerics match the single-device program up to reduction order).
+
+Rules:
+* params: 2-D+ weights shard their trailing axis over ``model`` when
+  divisible (column-parallel matmuls — the all-gather-free layout for the
+  transformer stack's GEMMs); with ``fsdp`` the first remaining divisible
+  axis is additionally sharded over the data axes. 1-D tensors (norm
+  scales, biases) replicate.
+* caches: batch axis over the data axes, head axis over ``model`` when
+  divisible.
+* inputs: leading batch axis over the data axes.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def _data_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    size = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        size *= mesh.shape[a]
+    return size
+
+
+def _leaf_spec(leaf, mesh: Mesh, *, fsdp: bool) -> P:
+    model = mesh.shape.get("model", 1)
+    da = _data_axes(mesh)
+    dsize = _axis_size(mesh, da)
+    dims: list = [None] * leaf.ndim
+    if leaf.ndim >= 2 and model > 1:
+        for ax in reversed(range(leaf.ndim)):
+            if leaf.shape[ax] % model == 0 and leaf.shape[ax] >= model:
+                dims[ax] = "model"
+                break
+    if fsdp and leaf.ndim >= 2 and dsize > 1:
+        for ax in range(leaf.ndim):
+            if dims[ax] is None and leaf.shape[ax] % dsize == 0 \
+                    and leaf.shape[ax] >= dsize:
+                dims[ax] = da if len(da) > 1 else da[0]
+                break
+    return P(*dims)
+
+
+def param_specs(cfg, params, mesh: Mesh, *, fsdp: bool = False):
+    """PartitionSpec pytree matching ``params`` (see module docstring)."""
+    return jax.tree.map(lambda l: _leaf_spec(l, mesh, fsdp=fsdp), params)
+
+
+def cache_specs(cfg, cache, mesh: Mesh):
+    """Decode-cache placement: batch over data axes, heads over model."""
+    da = _data_axes(mesh)
+    dsize = _axis_size(mesh, da)
+    model = mesh.shape.get("model", 1)
+
+    def spec(leaf) -> P:
+        dims: list = [None] * leaf.ndim
+        if leaf.ndim >= 1 and dsize > 1 and leaf.shape[0] % dsize == 0 \
+                and leaf.shape[0] >= dsize:
+            dims[0] = da if len(da) > 1 else da[0]
+        if leaf.ndim >= 2 and model > 1 and leaf.shape[1] % model == 0 \
+                and leaf.shape[1] >= model:
+            dims[1] = "model"
+        return P(*dims)
+
+    return jax.tree.map(spec, cache)
+
+
+def input_specs_for(batch, mesh: Mesh):
+    """Input batches: leading (batch) axis over the data axes."""
+    da = _data_axes(mesh)
+    dsize = _axis_size(mesh, da)
+
+    def spec(leaf) -> P:
+        if leaf.ndim >= 1 and dsize > 1 and leaf.shape[0] % dsize == 0:
+            return P(da if len(da) > 1 else da[0])
+        return P()
+
+    return jax.tree.map(spec, batch)

@@ -13,7 +13,26 @@ from typing import Callable, Optional
 
 import jax
 
-from jax.sharding import AbstractMesh, AxisType
+# jax ≥ 0.5 exposes AxisType and takes AbstractMesh(axis_sizes, axis_names);
+# 0.4.x has neither the enum nor that signature (AbstractMesh takes a
+# ((name, size), ...) shape tuple). Normalize behind one constructor so
+# planning code is version-independent.
+from jax.sharding import AbstractMesh
+
+try:  # jax ≥ 0.5
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover - depends on installed jax
+    AxisType = None
+
+
+def _abstract_mesh(shape: tuple[int, ...], names: tuple[str, ...]):
+    if AxisType is not None:
+        try:
+            return AbstractMesh(
+                shape, names, axis_types=tuple(AxisType.Auto for _ in names))
+        except TypeError:  # pre-0.6 keyword variants
+            return AbstractMesh(shape, names)
+    return AbstractMesh(tuple(zip(names, shape)))
 
 
 # ---------------------------------------------------------------------------
@@ -53,8 +72,7 @@ def plan_elastic(global_batch: int, n_live_devices: int,
     # divisor ≤ data (excess devices idle as hot spares)
     while global_batch % data:
         data -= 1
-    mesh = AbstractMesh((data, model), ("data", "model"),
-                        axis_types=(AxisType.Auto, AxisType.Auto))
+    mesh = _abstract_mesh((data, model), ("data", "model"))
     nmb = max(1, global_batch // target_microbatch)
     while global_batch % nmb:
         nmb -= 1

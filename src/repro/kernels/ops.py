@@ -15,7 +15,7 @@ import jax.numpy as jnp
 
 from . import ref
 from .fwht import fwht_pallas
-from .sjlt import sjlt_pallas
+from .sjlt import sjlt_pallas, sjlt_pallas_batched
 
 _FWHT_VMEM_MAX_N = 16_384  # n · 128 cols · 4 B ≈ 8 MiB
 
@@ -72,6 +72,21 @@ def sjlt_apply(A: jnp.ndarray, rows: jnp.ndarray, signs: jnp.ndarray, m: int,
     if not use_pallas:
         return ref.sjlt_ref(A, rows, signs, m)
     return sjlt_pallas(A, rows, signs, m, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "use_pallas", "interpret"))
+def sjlt_apply_batched(A: jnp.ndarray, rows: jnp.ndarray, signs: jnp.ndarray,
+                       m: int, *, use_pallas: bool | None = None,
+                       interpret: bool | None = None) -> jnp.ndarray:
+    """Batch of SJLT sketches (B, m, d); A per-problem (B, n, d) or shared
+    (n, d) across the batch (one grid cell per problem × row-block on TPU)."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if interpret is None:
+        interpret = not _on_tpu()
+    if not use_pallas:
+        return ref.sjlt_ref_batched(A, rows, signs, m)
+    return sjlt_pallas_batched(A, rows, signs, m, interpret=interpret)
 
 
 def srht_sketch(A: jnp.ndarray, key: jax.Array, m: int, *,

@@ -26,6 +26,17 @@ def sjlt_ref(A: jnp.ndarray, rows: jnp.ndarray, signs: jnp.ndarray, m: int
     return jax.ops.segment_sum(A * signs[:, None], rows, num_segments=m)
 
 
+def sjlt_ref_batched(A: jnp.ndarray, rows: jnp.ndarray, signs: jnp.ndarray,
+                     m: int) -> jnp.ndarray:
+    """Batched oracle: A (B, n, d) or shared (n, d); rows/signs (B, n).
+    Out-of-range targets (row index ≥ m, used for padding) drop out, as in
+    the kernel. Returns (B, m, d)."""
+    one = lambda A_b, r_b, s_b: jax.ops.segment_sum(
+        A_b * s_b[:, None], r_b, num_segments=m)
+    in_axes = (None, 0, 0) if A.ndim == 2 else (0, 0, 0)
+    return jax.vmap(one, in_axes=in_axes)(A, rows, signs)
+
+
 def hadamard_dense(n: int) -> jnp.ndarray:
     """Dense Hadamard matrix (tiny-n ground truth)."""
     H = jnp.ones((1, 1), jnp.float32)

@@ -13,6 +13,15 @@ The grid walks row blocks sequentially; the output block is revisited
 (index_map constant) and accumulated in place — the standard Pallas
 accumulator pattern. Dense systolic work replaces data-dependent scatter:
 bandwidth-bound instead of latency-bound.
+
+Batched variant (DESIGN.md §6): ``sjlt_pallas_batched`` adds a leading
+problem axis to the grid — grid (B, n/br), one dispatch-matmul cell per
+(problem, row-block). The problem axis is the outer (slowest) grid
+dimension, so each problem's output block sees its row-blocks sequentially
+and the same revisited-accumulator pattern applies per problem. The data
+matrix may be per-problem (B, n, d) or shared (n, d) across the batch
+(λ-sweep / multi-tenant serving); in the shared case the A tile is fetched
+once per row-block index by the pipeline, not once per problem.
 """
 
 from __future__ import annotations
@@ -78,6 +87,81 @@ def sjlt_pallas(
         ],
         out_specs=pl.BlockSpec((m, d), lambda i: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((m, d), A.dtype),
+        interpret=interpret,
+    )(rows.astype(jnp.int32), signs.astype(A.dtype), A)
+    return out
+
+
+def _sjlt_kernel_batched(rows_ref, signs_ref, a_ref, o_ref, *, m: int):
+    j = pl.program_id(1)            # row-block index (inner grid dim)
+    rows = rows_ref[0, :]           # (br,) this problem's targets
+    signs = signs_ref[0, :]
+    a = a_ref[...]                  # (br, d) or (1, br, d) per-problem
+    if a.ndim == 3:
+        a = a[0]
+    br = a.shape[0]
+    row_ids = jax.lax.broadcasted_iota(jnp.int32, (m, br), 0)
+    onehot = jnp.where(row_ids == rows[None, :], signs[None, :], 0.0).astype(
+        a.dtype
+    )
+    acc = jnp.dot(onehot, a, preferred_element_type=jnp.float32)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[0, ...] = acc.astype(o_ref.dtype)
+
+    @pl.when(j > 0)
+    def _acc():
+        o_ref[0, ...] = (o_ref[0, ...].astype(jnp.float32) + acc).astype(
+            o_ref.dtype
+        )
+
+
+def sjlt_pallas_batched(
+    A: jnp.ndarray,
+    rows: jnp.ndarray,
+    signs: jnp.ndarray,
+    m: int,
+    *,
+    block_rows: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Batch of s=1 SJLT sketches: one dispatch-matmul grid cell per
+    (problem, row-block). A: (B, n, d) per-problem or (n, d) shared;
+    rows/signs: (B, n). Returns (B, m, d).
+
+    The problem axis is the outer grid dimension so the per-problem output
+    block accumulates over its row-blocks exactly as in ``sjlt_pallas``;
+    VMEM per step is unchanged from the single-problem kernel.
+    """
+    B, n = rows.shape
+    shared = A.ndim == 2
+    d = A.shape[-1]
+    if A.shape[-2] != n:
+        raise ValueError(f"A rows {A.shape[-2]} != sketch columns {n}")
+    if n % block_rows:
+        pad = (-n) % block_rows
+        pad_a = ((0, pad), (0, 0)) if shared else ((0, 0), (0, pad), (0, 0))
+        A = jnp.pad(A, pad_a)
+        rows = jnp.pad(rows, ((0, 0), (0, pad)), constant_values=m)
+        signs = jnp.pad(signs, ((0, 0), (0, pad)))
+        n = A.shape[-2]
+    grid = (B, n // block_rows)
+    a_spec = (
+        pl.BlockSpec((block_rows, d), lambda b, j: (j, 0))
+        if shared
+        else pl.BlockSpec((1, block_rows, d), lambda b, j: (b, j, 0))
+    )
+    out = pl.pallas_call(
+        functools.partial(_sjlt_kernel_batched, m=m),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_rows), lambda b, j: (b, j)),
+            pl.BlockSpec((1, block_rows), lambda b, j: (b, j)),
+            a_spec,
+        ],
+        out_specs=pl.BlockSpec((1, m, d), lambda b, j: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, m, d), A.dtype),
         interpret=interpret,
     )(rows.astype(jnp.int32), signs.astype(A.dtype), A)
     return out

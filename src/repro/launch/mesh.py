@@ -9,16 +9,29 @@ runtime.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:  # jax >= 0.5
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover - depends on installed jax
+    AxisType = None
+
+
+def _make_mesh(shape, axes) -> Mesh:
+    if AxisType is not None:
+        try:
+            return jax.make_mesh(shape, axes,
+                                 axis_types=(AxisType.Auto,) * len(axes))
+        except TypeError:
+            pass
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     """16×16 single-pod (256 chips) or 2×16×16 multi-pod (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
-    )
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh(model: int | None = None) -> Mesh:
@@ -30,10 +43,7 @@ def make_host_mesh(model: int | None = None) -> Mesh:
             if n % cand == 0 and n >= cand * 2:
                 model = cand
     data = n // model
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(AxisType.Auto, AxisType.Auto),
-    )
+    return _make_mesh((data, model), ("data", "model"))
 
 
 def make_elastic_mesh(n_devices: int) -> Mesh:
@@ -50,5 +60,10 @@ def make_elastic_mesh(n_devices: int) -> Mesh:
     import numpy as np
 
     dev_array = np.array(devices).reshape(data, model)
-    return Mesh(dev_array, ("data", "model"),
-                axis_types=(AxisType.Auto, AxisType.Auto))
+    if AxisType is not None:
+        try:
+            return Mesh(dev_array, ("data", "model"),
+                        axis_types=(AxisType.Auto, AxisType.Auto))
+        except TypeError:
+            pass
+    return Mesh(dev_array, ("data", "model"))

@@ -4,6 +4,13 @@ the same decode_step under the production mesh (see launch/dryrun.py
 decode cells for the compiled configuration).
 
     PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-3b --reduced
+
+``--ridge`` serves the other production workload instead: a stream of
+heterogeneous ridge-solve requests, bucketed into shape classes and solved
+in fixed-shape batches by the multi-problem adaptive engine
+(serve/solver_service.py, DESIGN.md §6):
+
+    PYTHONPATH=src python -m repro.launch.serve --ridge --requests 64
 """
 
 from __future__ import annotations
@@ -20,6 +27,40 @@ from repro.models import init_params
 from repro.serve.step import greedy_generate
 
 
+def serve_ridge(args):
+    """Ridge-solve serving demo: random-shape requests through the
+    shape-class bucketing + batched adaptive engine."""
+    import numpy as np
+
+    from repro.serve.solver_service import SolverService
+
+    svc = SolverService(batch_size=args.batch if args.batch > 1 else 16,
+                        method="pcg", sketch="gaussian")
+    rng = np.random.default_rng(0)
+    truth = {}
+    for i in range(args.requests):
+        n = int(rng.integers(64, 1800))
+        d = int(rng.integers(8, 120))
+        A = jax.random.normal(jax.random.PRNGKey(2 * i), (n, d)) / np.sqrt(n)
+        y = jax.random.normal(jax.random.PRNGKey(2 * i + 1), (n,))
+        rid = svc.submit(A, y, nu=float(rng.uniform(0.05, 0.5)))
+        truth[rid] = (A, y)
+    t0 = time.perf_counter()
+    sols = svc.flush()
+    dt = time.perf_counter() - t0
+    if not sols:
+        print("ridge service: no requests")
+        return
+    m_finals = [s.m_final for s in sols.values()]
+    print(f"ridge service: {args.requests} requests in {dt:.2f}s "
+          f"({args.requests / dt:.1f} req/s incl. compile) — "
+          f"{svc.stats['batches']} batches, "
+          f"{svc.stats['padded_slots']} padded slots")
+    print(f"certificates: m_final min/median/max = {min(m_finals)}/"
+          f"{sorted(m_finals)[len(m_finals) // 2]}/{max(m_finals)}, "
+          f"max residual δ̃ = {max(s.delta_tilde for s in sols.values()):.2e}")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-0.5b")
@@ -29,7 +70,14 @@ def main(argv=None):
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--ckpt-dir", default="",
                     help="restore params from a training checkpoint")
+    ap.add_argument("--ridge", action="store_true",
+                    help="serve ridge-solve requests instead of LM decode")
+    ap.add_argument("--requests", type=int, default=48,
+                    help="number of synthetic ridge requests (--ridge)")
     args = ap.parse_args(argv)
+
+    if args.ridge:
+        return serve_ridge(args)
 
     cfg = get_config(args.arch)
     if args.reduced:

@@ -1,1 +1,8 @@
+from .solver_service import (
+    DEFAULT_SHAPE_CLASSES,
+    RidgeRequest,
+    RidgeSolution,
+    ShapeClass,
+    SolverService,
+)
 from .step import decode_step, greedy_generate, prefill_step

@@ -1,0 +1,202 @@
+"""Ridge-solve serving path on top of the batched padded engine.
+
+Production traffic is many *small heterogeneous* ridge problems (per-user /
+per-tenant heads, per-λ sweeps, one-hot class blocks), not one big solve.
+A fixed-shape accelerator executable cannot chase every (n, d): instead the
+service
+
+1. **buckets** each request into a fixed (n, d, m_max) *shape class* — the
+   smallest configured class that fits; A is zero-padded to (n_c, d_c) with
+   Λ = 1 on padded coordinates, which block-diagonalizes H so the padded
+   solution restricted to the original coordinates is EXACTLY the original
+   solution (padded coords solve ν²x = 0 ⇒ 0);
+2. **packs** up to ``batch_size`` requests per class into one batched
+   ``Quadratic`` (padding short batches with trivial b = 0 problems that
+   converge at initialization);
+3. **solves** the batch in one call of the fully-jitted multi-problem
+   adaptive engine (``core.adaptive_padded``) — per-problem doubling, one
+   executable per shape class;
+4. **returns** per-request solutions with their adaptivity *certificates*
+   (δ̃, m_final, iterations, doublings) so callers can audit convergence.
+
+CPU-scale demo wiring lives in ``launch/serve.py --ridge`` and
+``examples/solve_service.py``; the batched-vs-looped engine comparison is
+``benchmarks/bench_batched.py``. See DESIGN.md §6.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Iterable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.adaptive_padded import padded_adaptive_solve_batched
+from repro.core.quadratic import Quadratic
+
+
+class ShapeClass(NamedTuple):
+    n: int       # padded row count
+    d: int       # padded feature count
+    m_max: int   # padded sketch budget for the class
+
+
+DEFAULT_SHAPE_CLASSES = (
+    ShapeClass(n=256, d=32, m_max=64),
+    ShapeClass(n=1024, d=64, m_max=128),
+    ShapeClass(n=2048, d=128, m_max=256),
+    ShapeClass(n=4096, d=256, m_max=512),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class RidgeRequest:
+    req_id: int
+    A: jnp.ndarray           # (n, d) features
+    y: jnp.ndarray           # (n,) targets
+    nu: float                # regularization ν
+    lam_diag: jnp.ndarray | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class RidgeSolution:
+    req_id: int
+    x: jnp.ndarray           # (d,) solution in the request's coordinates
+    delta_tilde: float       # certificate: final δ̃ (eq. 2.3)
+    m_final: int             # certificate: adapted sketch size
+    iters: int               # accepted iterations
+    doublings: int
+    shape_class: ShapeClass
+    batch_index: int         # slot in the packed batch (observability)
+
+
+class SolverService:
+    """Shape-class bucketing + batch packing over the padded adaptive engine.
+
+    ``submit`` enqueues; ``flush`` drains every bucket in fixed-size batches
+    through one compiled executable per shape class and returns solutions
+    keyed by request id. The service is deterministic: request k is solved
+    with ``fold_in(base_key, k)`` regardless of what it is packed with.
+    """
+
+    def __init__(
+        self,
+        shape_classes: Iterable[ShapeClass] = DEFAULT_SHAPE_CLASSES,
+        *,
+        batch_size: int = 16,
+        method: str = "pcg",
+        sketch: str = "gaussian",
+        rho: float = 0.5,
+        tol: float = 1e-10,
+        max_iters: int = 200,
+        seed: int = 0,
+    ):
+        self.shape_classes = sorted(shape_classes,
+                                    key=lambda c: (c.n, c.d, c.m_max))
+        self.batch_size = batch_size
+        self.method = method
+        self.sketch = sketch
+        self.rho = rho
+        self.tol = tol
+        self.max_iters = max_iters
+        self._base_key = jax.random.PRNGKey(seed)
+        self._queues: dict[ShapeClass, list[RidgeRequest]] = {
+            c: [] for c in self.shape_classes}
+        self._next_id = 0
+        self.stats = {"requests": 0, "batches": 0, "padded_slots": 0,
+                      "solve_seconds": 0.0}
+
+    # -- bucketing ---------------------------------------------------------
+    def bucket_for(self, n: int, d: int) -> ShapeClass:
+        """Smallest configured shape class that fits an (n, d) request."""
+        for c in self.shape_classes:
+            if n <= c.n and d <= c.d:
+                return c
+        raise ValueError(
+            f"no shape class fits (n={n}, d={d}); "
+            f"largest is {self.shape_classes[-1]}")
+
+    def submit(self, A, y, nu, lam_diag=None) -> int:
+        """Enqueue one ridge problem; returns its request id."""
+        A = jnp.asarray(A)
+        y = jnp.asarray(y)
+        req = RidgeRequest(req_id=self._next_id, A=A, y=y, nu=float(nu),
+                           lam_diag=lam_diag)
+        self._next_id += 1
+        self._queues[self.bucket_for(*A.shape)].append(req)
+        self.stats["requests"] += 1
+        return req.req_id
+
+    # -- packing -----------------------------------------------------------
+    def _pack(self, cls: ShapeClass, reqs: list[RidgeRequest]):
+        """Pad each request to the class shape and stack; pad the batch to
+        ``batch_size`` with trivial (b = 0) problems.
+
+        Staged in host numpy buffers (in-place writes) with ONE device
+        transfer per field — out-of-jit `.at[i].set` would copy the full
+        padded batch buffer once per request."""
+        import numpy as np
+
+        B = self.batch_size
+        dtype = np.dtype(reqs[0].A.dtype)
+        A = np.zeros((B, cls.n, cls.d), dtype)
+        b = np.zeros((B, cls.d), dtype)
+        nu = np.ones((B,), dtype)
+        lam = np.ones((B, cls.d), dtype)
+        keys = np.zeros((B,) + self._base_key.shape,
+                        np.asarray(self._base_key).dtype)
+        for i, r in enumerate(reqs):
+            ni, di = r.A.shape
+            A[i, :ni, :di] = np.asarray(r.A, dtype)
+            b[i, :di] = np.asarray(r.A.T @ r.y, dtype)
+            nu[i] = r.nu
+            if r.lam_diag is not None:
+                lam[i, :di] = np.asarray(r.lam_diag, dtype)
+            keys[i] = np.asarray(
+                jax.random.fold_in(self._base_key, r.req_id))
+        q = Quadratic(A=jnp.asarray(A), b=jnp.asarray(b), nu=jnp.asarray(nu),
+                      lam_diag=jnp.asarray(lam), batched=True)
+        return q, jnp.asarray(keys)
+
+    # -- solving -----------------------------------------------------------
+    def flush(self) -> dict[int, RidgeSolution]:
+        """Solve everything queued; returns {req_id: RidgeSolution}."""
+        out: dict[int, RidgeSolution] = {}
+        for cls in self.shape_classes:
+            queue, self._queues[cls] = self._queues[cls], []
+            for i in range(0, len(queue), self.batch_size):
+                out.update(self._solve_chunk(cls, queue[i: i + self.batch_size]))
+        return out
+
+    def _solve_chunk(self, cls: ShapeClass, reqs: list[RidgeRequest]):
+        q, keys = self._pack(cls, reqs)
+        t0 = time.perf_counter()
+        x, stats = padded_adaptive_solve_batched(
+            q, keys, m_max=cls.m_max, method=self.method, sketch=self.sketch,
+            max_iters=self.max_iters, rho=self.rho, tol=self.tol)
+        x = jax.block_until_ready(x)
+        self.stats["solve_seconds"] += time.perf_counter() - t0
+        self.stats["batches"] += 1
+        self.stats["padded_slots"] += self.batch_size - len(reqs)
+        out = {}
+        for i, r in enumerate(reqs):
+            di = r.A.shape[1]
+            out[r.req_id] = RidgeSolution(
+                req_id=r.req_id,
+                x=x[i, :di],
+                delta_tilde=float(stats["dtilde"][i]),
+                m_final=int(stats["m_final"][i]),
+                iters=int(stats["iters"][i]),
+                doublings=int(stats["doublings"][i]),
+                shape_class=cls,
+                batch_index=i,
+            )
+        return out
+
+    def solve_one(self, A, y, nu, lam_diag=None) -> RidgeSolution:
+        """Convenience: submit + flush a single request (still batched —
+        the padded slots ride along as no-op problems)."""
+        rid = self.submit(A, y, nu, lam_diag)
+        return self.flush()[rid]

@@ -1,0 +1,308 @@
+"""Batch-polymorphic core + multi-problem padded engine (DESIGN.md §6):
+batched vs looped single-problem agreement, shared-A λ-batch fast path,
+independent per-problem doubling, batched SJLT kernel, solver service."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import direct_solve, factorize, from_least_squares, run_fixed
+from repro.core.adaptive_padded import (
+    doubling_ladder,
+    padded_adaptive_solve,
+    padded_adaptive_solve_batched,
+)
+from repro.core.effective_dim import exp_decay_singular_values
+from repro.core.precond import factorize_shared
+from repro.core.quadratic import (
+    Quadratic,
+    from_least_squares_batch,
+    lambda_sweep,
+    stack_quadratics,
+)
+from repro.core.sketches import make_sketch
+
+
+def _rel(a, b):
+    return float(jnp.linalg.norm(a - b) / (jnp.linalg.norm(b) + 1e-30))
+
+
+@pytest.fixture(scope="module")
+def batch32():
+    """B=32 heterogeneous ridge problems: mixed spectra (mixed effective
+    dimensions) and mixed ν — each problem wants a different sketch size."""
+    B, n, d = 32, 256, 32
+    ks = jax.random.split(jax.random.PRNGKey(0), B)
+    As, Ys, nus = [], [], []
+    for i in range(B):
+        rate = 0.82 + 0.16 * (i / (B - 1))
+        sv = exp_decay_singular_values(d, rate)
+        kU, kV, ky = jax.random.split(ks[i], 3)
+        U, _ = jnp.linalg.qr(jax.random.normal(kU, (n, d)))
+        V, _ = jnp.linalg.qr(jax.random.normal(kV, (d, d)))
+        As.append((U * sv[None, :]) @ V.T)
+        Ys.append(jax.random.normal(ky, (n,)))
+        nus.append(0.05 + 0.05 * (i % 4))
+    A, Y = jnp.stack(As), jnp.stack(Ys)
+    q = from_least_squares_batch(A, Y, jnp.asarray(nus, jnp.float32))
+    return {"q": q, "A": A, "Y": Y, "keys": jax.random.split(
+        jax.random.PRNGKey(42), B), "m_max": 64}
+
+
+# ---------------------------------------------------------------------------
+# Batched core ops
+# ---------------------------------------------------------------------------
+
+def test_batched_direct_solve_matches_loop(batch32):
+    q = batch32["q"]
+    X = direct_solve(q)
+    for i in [0, 7, 31]:
+        x_i = direct_solve(q.problem(i))
+        assert _rel(X[i], x_i) < 1e-5
+
+
+def test_shared_A_lambda_sweep_matches_independent(batch32):
+    A0, y0 = batch32["A"][0], batch32["Y"][0]
+    nus = jnp.asarray([0.05, 0.1, 0.2, 0.4], jnp.float32)
+    q_sweep = lambda_sweep(A0, y0, nus)
+    assert q_sweep.shared_A
+    X = direct_solve(q_sweep)
+    for i in range(len(nus)):
+        x_i = direct_solve(from_least_squares(A0, y0, nus[i]))
+        assert _rel(X[i], x_i) < 1e-5
+    # value/error reductions are per-problem vectors
+    assert q_sweep.value(X).shape == (len(nus),)
+
+
+def test_batched_run_fixed_matches_loop(batch32):
+    q = batch32["q"]
+    B, n, d = q.batch, q.n, q.d
+    SA = jnp.stack([
+        make_sketch("gaussian", 2 * d, n, jax.random.PRNGKey(100 + i)).apply(
+            q.A[i]) for i in range(B)])
+    P = factorize(SA, q.nu, q.lam_diag)
+    x, trace = run_fixed(q, P, jnp.zeros((B, d)), method="pcg", iters=25,
+                         rho=0.5)
+    assert trace.shape == (25, B)
+    for i in [0, 15, 31]:
+        Pi = factorize(SA[i], q.nu[i], q.lam_diag[i])
+        xi, _ = run_fixed(q.problem(i), Pi, jnp.zeros((d,)), method="pcg",
+                          iters=25, rho=0.5)
+        assert _rel(x[i], xi) < 1e-4
+
+
+def test_factorize_shared_lambda_batch(batch32):
+    """Shared-SA λ-batch preconditioner matches per-λ factorizations."""
+    A0, y0 = batch32["A"][0], batch32["Y"][0]
+    nus = jnp.asarray([0.05, 0.1, 0.3], jnp.float32)
+    q_sweep = lambda_sweep(A0, y0, nus)
+    sk = make_sketch("gaussian", 2 * q_sweep.d, q_sweep.n,
+                     jax.random.PRNGKey(5))
+    SA = sk.apply(A0)
+    P = factorize_shared(SA, q_sweep.nu, q_sweep.lam_diag)
+    z = jax.random.normal(jax.random.PRNGKey(6), (len(nus), q_sweep.d))
+    v = P.solve(z)
+    for i in range(len(nus)):
+        Pi = factorize(SA, nus[i], q_sweep.lam_diag[i])
+        np.testing.assert_allclose(np.asarray(v[i]), np.asarray(Pi.solve(z[i])),
+                                   rtol=2e-4, atol=1e-3)
+
+
+def test_stack_quadratics_roundtrip(batch32):
+    q = batch32["q"]
+    qs = [q.problem(i) for i in range(4)]
+    qb = stack_quadratics(qs)
+    assert qb.batched and qb.batch == 4
+    v = jax.random.normal(jax.random.PRNGKey(1), (4, q.d))
+    hv = qb.hvp(v)
+    for i in range(4):
+        np.testing.assert_allclose(np.asarray(hv[i]),
+                                   np.asarray(qs[i].hvp(v[i])),
+                                   rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Multi-problem padded engine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method,sketch", [
+    ("ihs", "gaussian"), ("pcg", "gaussian"), ("pcg", "sjlt"),
+])
+def test_batched_engine_matches_single_solves(batch32, method, sketch):
+    """Acceptance: B=32 through the engine matches per-problem single solves
+    to ≤1e-5 relative error, with identical per-problem doubling schedules
+    and per-problem (not global) m_final values.
+
+    A problem whose δ̃ lands exactly on the accept/reject threshold can flip
+    its schedule between the B=32 and B=1 executables (last-ulp einsum
+    differences); such a problem still converges, just along a different
+    valid schedule — allow at most 2/32 of those, at a looser 1e-4."""
+    q, keys, m_max = batch32["q"], batch32["keys"], batch32["m_max"]
+    # tol=0 makes the stop deterministic (a fixed iteration budget): with a
+    # δ̃-relative stop, the final iteration count flips on last-ulp noise
+    # between the B=32 and B=1 executables and the solutions differ by the
+    # size of one final polishing step. Both runs polish to the f32 floor
+    # and return their best iterate.
+    xb, sb = padded_adaptive_solve_batched(
+        q, keys, m_max=m_max, method=method, sketch=sketch, max_iters=60,
+        rho=0.5, tol=0.0)
+    assert sb["m_final"].shape == (q.batch,)
+    schedule_flips = 0
+    for i in range(q.batch):
+        q1 = Quadratic(A=q.A[i][None], b=q.b[i][None], nu=q.nu[i][None],
+                       lam_diag=q.lam_diag[i][None], batched=True)
+        x1, s1 = padded_adaptive_solve_batched(
+            q1, keys[i][None], m_max=m_max, method=method, sketch=sketch,
+            max_iters=60, rho=0.5, tol=0.0)
+        assert _rel(xb[i], x1[0]) <= 1e-5, i
+        if int(sb["m_final"][i]) != int(s1["m_final"][0]):
+            # a δ̃ landing exactly on the accept/reject threshold can flip
+            # the doubling schedule between executables; the solution still
+            # matches (asserted above), so allow a couple of these
+            schedule_flips += 1
+    assert schedule_flips <= 2, schedule_flips
+
+
+def test_batched_engine_correct_vs_direct(batch32):
+    q, keys, m_max = batch32["q"], batch32["keys"], batch32["m_max"]
+    X = direct_solve(q)
+    xb, _ = padded_adaptive_solve_batched(
+        q, keys, m_max=m_max, method="pcg", sketch="gaussian",
+        max_iters=100, rho=0.5, tol=1e-12)
+    for i in range(q.batch):
+        assert _rel(xb[i], X[i]) < 1e-4
+
+
+def test_independent_doubling_mixed_effective_dims():
+    """Problems with very different effective dimensions adapt to different
+    m_final inside ONE compiled batch — no global sketch size."""
+    # Hardness (steepness of decay relative to ν) increases with index:
+    # the easy head should stay at a tiny sketch while the hard one doubles
+    # all the way up. (A flat spectrum would be EASY for PCG even at m=1 —
+    # the adaptive test correctly leaves such problems unsketched.)
+    B, n, d = 3, 512, 64
+    rates = [0.5, 0.8, 0.95]
+    nus = [0.5, 0.1, 0.05]
+    As, Ys = [], []
+    for i in range(B):
+        sv = exp_decay_singular_values(d, rates[i])
+        kU, kV, ky = jax.random.split(jax.random.PRNGKey(i), 3)
+        U, _ = jnp.linalg.qr(jax.random.normal(kU, (n, d)))
+        V, _ = jnp.linalg.qr(jax.random.normal(kV, (d, d)))
+        As.append((U * sv[None, :]) @ V.T)
+        Ys.append(jax.random.normal(ky, (n,)))
+    q = from_least_squares_batch(jnp.stack(As), jnp.stack(Ys),
+                                 jnp.asarray(nus, jnp.float32))
+    x, stats = padded_adaptive_solve_batched(
+        q, jax.random.PRNGKey(3), m_max=256, method="pcg", sketch="gaussian",
+        max_iters=100, rho=0.5, tol=1e-10)
+    m_final = np.asarray(stats["m_final"])
+    assert len(set(m_final.tolist())) >= 2, m_final
+    # easiest problem needs a smaller sketch than the hardest
+    assert m_final[0] < m_final[-1], m_final
+    X = direct_solve(q)
+    for i in range(B):
+        assert _rel(x[i], X[i]) < 1e-2, i
+
+
+def test_padded_engine_shared_A_lambda_batch(batch32):
+    """Shared-A λ-batch through the engine matches per-λ single solves."""
+    A0, y0 = batch32["A"][0], batch32["Y"][0]
+    nus = jnp.asarray([0.05, 0.1, 0.2, 0.4], jnp.float32)
+    q_sweep = lambda_sweep(A0, y0, nus)
+    keys = jax.random.split(jax.random.PRNGKey(9), len(nus))
+    x, stats = padded_adaptive_solve_batched(
+        q_sweep, keys, m_max=64, method="pcg", sketch="gaussian",
+        max_iters=100, rho=0.5, tol=1e-12)
+    for i in range(len(nus)):
+        x_i = direct_solve(from_least_squares(A0, y0, nus[i]))
+        assert _rel(x[i], x_i) < 1e-4, i
+
+
+def test_padded_engine_matrix_rhs(batch32):
+    """A (d, c) matrix RHS dispatches as a shared-A column batch."""
+    A0 = batch32["A"][0]
+    Y = jax.random.normal(jax.random.PRNGKey(11), (A0.shape[0], 3))
+    q = from_least_squares(A0, Y, 0.1)
+    X, stats = padded_adaptive_solve(q, jax.random.PRNGKey(12), m_max=64,
+                                     method="pcg", tol=1e-12)
+    assert X.shape == q.b.shape
+    assert stats["m_final"].shape == (3,)
+    X_star = direct_solve(q)
+    assert _rel(X, X_star) < 1e-4
+
+
+def test_doubling_ladder():
+    assert doubling_ladder(8) == (1, 2, 4, 8)
+    assert doubling_ladder(12) == (1, 2, 4, 8, 12)
+    assert doubling_ladder(1) == (1,)
+
+
+# ---------------------------------------------------------------------------
+# Batched SJLT kernel (interpret mode = TPU semantics on CPU)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shared", [False, True])
+def test_sjlt_kernel_batched_matches_ref(shared):
+    from repro.kernels import ref
+    from repro.kernels.sjlt import sjlt_pallas, sjlt_pallas_batched
+
+    B, n, d, m, br = 3, 300, 17, 32, 128
+    A = jax.random.normal(jax.random.PRNGKey(1), (n, d) if shared
+                          else (B, n, d))
+    rows = jax.random.randint(jax.random.PRNGKey(2), (B, n), 0, m)
+    signs = jax.random.rademacher(jax.random.PRNGKey(3), (B, n),
+                                  dtype=jnp.float32)
+    got = sjlt_pallas_batched(A, rows, signs, m, interpret=True,
+                              block_rows=br)
+    want = ref.sjlt_ref_batched(A, rows, signs, m)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    # per-problem slices agree with the single-problem kernel
+    A0 = A if shared else A[0]
+    w0 = sjlt_pallas(A0, rows[0], signs[0], m, interpret=True, block_rows=br)
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(w0),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Solver service
+# ---------------------------------------------------------------------------
+
+def test_solver_service_buckets_and_certificates():
+    from repro.serve.solver_service import ShapeClass, SolverService
+
+    svc = SolverService(batch_size=4, sketch="gaussian", tol=1e-12,
+                        shape_classes=(ShapeClass(256, 32, 64),
+                                       ShapeClass(1024, 64, 128)))
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i in range(6):
+        n = int(rng.integers(64, 900))
+        d = int(rng.integers(8, 60))
+        A = jax.random.normal(jax.random.PRNGKey(i), (n, d)) / np.sqrt(n)
+        y = jax.random.normal(jax.random.PRNGKey(50 + i), (n,))
+        nu = float(rng.uniform(0.1, 0.4))
+        rid = svc.submit(A, y, nu)
+        reqs.append((rid, A, y, nu))
+    sols = svc.flush()
+    assert len(sols) == 6
+    for rid, A, y, nu in reqs:
+        s = sols[rid]
+        assert s.x.shape == (A.shape[1],)
+        x_star = direct_solve(from_least_squares(A, y, nu))
+        assert _rel(s.x, x_star) < 1e-4
+        assert s.m_final <= s.shape_class.m_max
+        assert s.delta_tilde >= 0.0
+    assert svc.stats["requests"] == 6
+    # every queue drained
+    assert all(not v for v in svc._queues.values())
+
+
+def test_solver_service_rejects_oversize():
+    from repro.serve.solver_service import ShapeClass, SolverService
+
+    svc = SolverService(shape_classes=(ShapeClass(128, 16, 32),))
+    with pytest.raises(ValueError):
+        svc.submit(jnp.ones((256, 8)), jnp.ones((256,)), 0.1)

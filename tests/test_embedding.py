@@ -1,13 +1,13 @@
-"""Subspace-embedding properties and concentration (paper §2.2, §5) +
-hypothesis property tests on sketch invariants."""
+"""Subspace-embedding properties and concentration (paper §2.2, §5).
+Hypothesis property tests on sketch invariants live in test_properties.py
+(optional dep)."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.core import effective_dimension, fwht, make_sketch
+from repro.core import effective_dimension, make_sketch
 from repro.core.effective_dim import (
     exp_decay_singular_values,
     m_delta_gaussian,
@@ -74,54 +74,3 @@ def test_effective_dimension_limits():
     assert d_e_large_nu < 60   # large ν ⇒ small d_e
     # d_e ≤ d always
     assert d_e_small_nu <= 512 + 1e-3
-
-
-# ---------------------------------------------------------------------------
-# hypothesis property tests
-# ---------------------------------------------------------------------------
-
-@settings(max_examples=20, deadline=None)
-@given(
-    lg_n=st.integers(min_value=1, max_value=9),
-    d=st.integers(min_value=1, max_value=8),
-    seed=st.integers(min_value=0, max_value=2**30),
-)
-def test_fwht_involution_property(lg_n, d, seed):
-    """H(Hx) = n·x — the Hadamard transform is an involution up to n."""
-    n = 1 << lg_n
-    x = jax.random.normal(jax.random.PRNGKey(seed), (n, d))
-    hx = fwht(x, axis=0)
-    hhx = fwht(hx, axis=0)
-    np.testing.assert_allclose(np.asarray(hhx), n * np.asarray(x),
-                               rtol=1e-4, atol=1e-4)
-
-
-@settings(max_examples=15, deadline=None)
-@given(
-    n=st.integers(min_value=8, max_value=200),
-    m=st.integers(min_value=1, max_value=64),
-    seed=st.integers(min_value=0, max_value=2**30),
-)
-def test_sjlt_column_norms(n, m, seed):
-    """Every SJLT column has exactly s=1 entry of magnitude 1."""
-    S = make_sketch("sjlt", m, n, jax.random.PRNGKey(seed)).dense()
-    S = np.asarray(S)
-    col_counts = (np.abs(S) > 0).sum(axis=0)
-    np.testing.assert_array_equal(col_counts, np.ones(n))
-    np.testing.assert_allclose(np.abs(S).sum(axis=0), np.ones(n), rtol=1e-6)
-
-
-@settings(max_examples=10, deadline=None)
-@given(seed=st.integers(min_value=0, max_value=2**30))
-def test_sketch_linearity(seed):
-    """S(aX + bY) = a·SX + b·SY for all sketch kinds."""
-    n, d, m = 64, 8, 32
-    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
-    X = jax.random.normal(k1, (n, d))
-    Y = jax.random.normal(k2, (n, d))
-    for kind in ["gaussian", "srht", "sjlt"]:
-        sk = make_sketch(kind, m, n, jax.random.PRNGKey(seed // 2))
-        lhs = sk.apply(2.0 * X - 3.0 * Y)
-        rhs = 2.0 * sk.apply(X) - 3.0 * sk.apply(Y)
-        np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
-                                   rtol=1e-4, atol=1e-4)

@@ -1,11 +1,11 @@
 """Pallas kernel validation: shape/dtype sweeps vs pure-jnp oracles,
-executed in interpret mode on CPU (the TPU-target kernels' semantics)."""
+executed in interpret mode on CPU (the TPU-target kernels' semantics).
+Hypothesis property sweeps live in test_properties.py (optional dep)."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 import repro.kernels.ops as ops
 from repro.kernels import ref
@@ -59,23 +59,6 @@ def test_sjlt_kernel_matches_ref(n, d, m, br):
     want = ref.sjlt_ref(A, rows, signs, m)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-4, atol=1e-4)
-
-
-@settings(max_examples=10, deadline=None)
-@given(
-    lg_n=st.integers(min_value=3, max_value=10),
-    d=st.integers(min_value=1, max_value=16),
-    seed=st.integers(min_value=0, max_value=2**30),
-)
-def test_fwht_kernel_property(lg_n, d, seed):
-    n = 1 << lg_n
-    x = jax.random.normal(jax.random.PRNGKey(seed), (n, d))
-    got = fwht_pallas(x, interpret=True)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(ref.fwht_ref(x)),
-                               rtol=1e-4, atol=1e-4)
-    # Parseval: ‖Hx‖² = n‖x‖²
-    np.testing.assert_allclose(float(jnp.sum(got**2)),
-                               n * float(jnp.sum(x**2)), rtol=1e-3)
 
 
 def test_srht_sketch_end_to_end():
