@@ -64,20 +64,12 @@ def time_best(fn, reps: int) -> float:
     return best
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--B", type=int, default=32)
-    ap.add_argument("--n", type=int, default=512)
-    ap.add_argument("--d", type=int, default=64)
-    ap.add_argument("--m-max", type=int, default=128)
-    ap.add_argument("--reps", type=int, default=3)
-    ap.add_argument("--tol", type=float, default=1e-12)
-    args = ap.parse_args()
-    B, n, d, m_max = args.B, args.n, args.d, args.m_max
-
+def run(B: int = 32, n: int = 512, d: int = 64, m_max: int = 128,
+        reps: int = 3, tol: float = 1e-12, seed: int = 42) -> list[dict]:
+    """Emit + return one row per (method, sketch) combination."""
     A, Y, nus = heterogeneous_batch(B, n, d)
     qb = from_least_squares_batch(A, Y, nus)
-    keys = jax.random.split(jax.random.PRNGKey(42), B)
+    keys = jax.random.split(jax.random.PRNGKey(seed), B)
     singles = [
         (Quadratic(A=A[i][None], b=qb.b[i][None], nu=nus[i][None],
                    lam_diag=qb.lam_diag[i][None], batched=True),
@@ -85,26 +77,27 @@ def main():
         for i in range(B)
     ]
 
+    rows = []
     for method, sketch in [("pcg", "gaussian"), ("pcg", "sjlt"),
-                           ("ihs", "gaussian")]:
+                           ("pcg", "srht"), ("ihs", "gaussian")]:
         solve = lambda q, k: padded_adaptive_solve_batched(
             q, k, m_max=m_max, method=method, sketch=sketch,
-            max_iters=200, rho=0.5, tol=args.tol)
+            max_iters=200, rho=0.5, tol=tol)
 
         xb, sb = jax.block_until_ready(solve(qb, keys))     # warm batched
         jax.block_until_ready(solve(*singles[0]))           # warm B=1 once
 
         cfg = AdaptiveConfig(method=method, sketch=sketch, rho=0.5,
-                             m_max=m_max, max_iters=200, tol=args.tol)
+                             m_max=m_max, max_iters=200, tol=tol)
         host_solve = lambda: [
             adaptive_solve(qb.problem(i), cfg, key=keys[i]).x
             for i in range(B)]
         host_solve()                                        # warm every m_t
         t_host = time_best(host_solve, 1)
 
-        t_batched = time_best(lambda: solve(qb, keys)[0], args.reps)
+        t_batched = time_best(lambda: solve(qb, keys)[0], reps)
         t_looped = time_best(
-            lambda: [solve(q1, k1)[0] for q1, k1 in singles], args.reps)
+            lambda: [solve(q1, k1)[0] for q1, k1 in singles], reps)
 
         rel = 0.0
         m_match = True
@@ -114,19 +107,36 @@ def main():
                                  / jnp.linalg.norm(x1[0])))
             m_match &= int(sb["m_final"][i]) == int(s1["m_final"][0])
         mf = np.asarray(sb["m_final"])
-        emit({
+        row = {
             "bench": "batched_engine", "method": method, "sketch": sketch,
-            "B": B, "n": n, "d": d, "m_max": m_max,
-            "batched_s": f"{t_batched:.4f}",
-            "host_loop_s": f"{t_host:.4f}",
-            "padded1_loop_s": f"{t_looped:.4f}",
-            "speedup_vs_host_loop": f"{t_host / t_batched:.2f}",
-            "speedup_vs_padded1_loop": f"{t_looped / t_batched:.2f}",
-            "max_rel_err": f"{rel:.2e}",
-            "schedules_match": m_match,
+            "B": B, "n": n, "d": d, "m_max": m_max, "seed": seed,
+            "batched_s": round(t_batched, 4),
+            "host_loop_s": round(t_host, 4),
+            "padded1_loop_s": round(t_looped, 4),
+            "speedup_vs_host_loop": round(t_host / t_batched, 2),
+            "speedup_vs_padded1_loop": round(t_looped / t_batched, 2),
+            "max_rel_err": float(f"{rel:.2e}"),
+            "schedules_match": bool(m_match),
             "m_final_min": int(mf.min()), "m_final_max": int(mf.max()),
             "m_final_distinct": len(set(mf.tolist())),
-        })
+            "max_dtilde": float(f"{float(np.max(np.asarray(sb['dtilde']))):.2e}"),
+        }
+        emit(row)
+        rows.append(row)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--B", type=int, default=32)
+    ap.add_argument("--n", type=int, default=512)
+    ap.add_argument("--d", type=int, default=64)
+    ap.add_argument("--m-max", type=int, default=128)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--tol", type=float, default=1e-12)
+    args = ap.parse_args()
+    run(B=args.B, n=args.n, d=args.d, m_max=args.m_max, reps=args.reps,
+        tol=args.tol)
 
 
 if __name__ == "__main__":

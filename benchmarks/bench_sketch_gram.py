@@ -1,0 +1,116 @@
+"""Sketch-pass benchmark: wall time + peak live bytes per ladder family.
+
+The padded engine's precompute — randomness → (L, B, d, d) ladder-level
+Grams — is the serving hot path's one O(n) touch of A. This benchmark
+times exactly that pass for every ``LevelGramProvider`` across n, and
+reports two memory numbers per (family, n):
+
+* ``peak_intermediate_bytes`` — the single largest array produced anywhere
+  in the jaxpr (sub-jaxprs included; ``repro.analysis.memscan``): the
+  dense Gaussian shows its (B, m_max, n) sketch here, the streamed path
+  only its (B, m_max, _MICRO) generation tile;
+* ``xla_temp_bytes`` — the compiled executable's temp allocation from
+  ``memory_analysis()`` (backend-dependent; reported when available).
+
+The acceptance row (n=8192, d=128, m_max=512): ``gaussian`` must complete
+where-or-faster than ``gaussian_dense`` with peak live bytes reduced ≥4×.
+
+    PYTHONPATH=src python -m benchmarks.bench_sketch_gram [--ns 2048,8192]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.analysis.memscan import max_intermediate_bytes
+from repro.core.adaptive_padded import doubling_ladder
+from repro.core.level_grams import PADDED_SKETCHES, get_provider
+from repro.core.quadratic import from_least_squares_batch
+
+
+def _problem(B: int, n: int, d: int, seed: int):
+    kA, kY = jax.random.split(jax.random.PRNGKey(seed))
+    A = jax.random.normal(kA, (B, n, d)) / jnp.sqrt(n)
+    Y = jax.random.normal(kY, (B, n))
+    return from_least_squares_batch(A, Y, 0.1)
+
+
+def bench_family(sketch: str, B: int, n: int, d: int, m_max: int,
+                 reps: int, seed: int) -> dict:
+    provider = get_provider(sketch)
+    q = _problem(B, n, d, seed)
+    keys = jax.random.split(jax.random.PRNGKey(seed + 1), B)
+    ladder = doubling_ladder(m_max)
+
+    def sketch_pass(q, keys):
+        data = provider.sample(keys, m_max, q.n, q.A.dtype)
+        return provider.level_grams(data, q, ladder)
+
+    jitted = jax.jit(sketch_pass)
+    peak, peak_shape = max_intermediate_bytes(
+        jax.make_jaxpr(sketch_pass)(q, keys))
+    try:
+        ma = jitted.lower(q, keys).compile().memory_analysis()
+        xla_temp = int(ma.temp_size_in_bytes) if ma is not None else -1
+    except Exception:
+        xla_temp = -1
+
+    grams = jax.block_until_ready(jitted(q, keys))          # compile + warm
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(jitted(q, keys))
+        best = min(best, time.perf_counter() - t0)
+    return {
+        "bench": "sketch_gram", "sketch": sketch, "B": B, "n": n, "d": d,
+        "m_max": m_max, "L": len(ladder), "seed": seed,
+        "pass_s": round(best, 4),
+        "peak_intermediate_bytes": peak,
+        "peak_intermediate_shape": "x".join(map(str, peak_shape)),
+        "xla_temp_bytes": xla_temp,
+        "gram_fro": float(f"{float(jnp.linalg.norm(grams[-1])):.4e}"),
+    }
+
+
+def run(B: int = 4, d: int = 128, m_max: int = 512,
+        ns: tuple[int, ...] = (2048, 8192), reps: int = 3,
+        seed: int = 0, families: tuple[str, ...] = PADDED_SKETCHES
+        ) -> list[dict]:
+    rows = []
+    for n in ns:
+        base = None
+        for sketch in families:
+            row = bench_family(sketch, B, n, d, m_max, reps, seed)
+            if sketch == "gaussian":
+                base = row
+            if sketch == "gaussian_dense" and base is not None:
+                row["streamed_speedup"] = round(
+                    row["pass_s"] / max(base["pass_s"], 1e-9), 2)
+                row["peak_bytes_ratio"] = round(
+                    row["peak_intermediate_bytes"]
+                    / max(base["peak_intermediate_bytes"], 1), 1)
+            emit(row)
+            rows.append(row)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--B", type=int, default=4)
+    ap.add_argument("--d", type=int, default=128)
+    ap.add_argument("--m-max", type=int, default=512)
+    ap.add_argument("--ns", default="2048,8192",
+                    help="comma list of n values")
+    ap.add_argument("--reps", type=int, default=3)
+    args = ap.parse_args()
+    run(B=args.B, d=args.d, m_max=args.m_max,
+        ns=tuple(int(x) for x in args.ns.split(",")), reps=args.reps)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,29 +1,42 @@
-"""Benchmark entry point: one module per paper table/figure.
+"""Benchmark entry point: one module per paper table/figure, plus the
+system benchmarks (batched engine, sketch→Gram pass).
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig1,table1,...] [--fast]
+    PYTHONPATH=src python -m benchmarks.run [--only fig1,batched,...]
+                                            [--fast] [--json]
 
-Prints CSV-ish rows (``k=v,...``) per benchmark; see each module's
-docstring for the reproduction target it validates.
+Prints CSV-ish rows (``k=v,...``) per benchmark; ``--json`` additionally
+writes ``BENCH_solver.json`` — the machine-readable perf-trajectory
+baseline (batched-engine + sketch-pass timings with shape/seed metadata)
+that CI uploads as an artifact. See each module's docstring for the
+reproduction target it validates.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import sys
 import time
+
+BENCH_JSON = "BENCH_solver.json"
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
-                    help="comma list: fig1,table1,table2,table3,fig4,kernels")
+                    help="comma list: fig1,table1,table2,table3,fig4,"
+                         "kernels,batched,sketch_gram")
     ap.add_argument("--fast", action="store_true",
                     help="smaller grids (CI-scale)")
+    ap.add_argument("--json", action="store_true",
+                    help=f"write row-returning benchmarks to {BENCH_JSON}")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
-    from . import (fig1_synthetic, fig4_realistic, kernels_bench,
-                   table1_mdelta, table2_complexity, table3_polyak)
+    from . import (bench_batched, bench_sketch_gram, fig1_synthetic,
+                   fig4_realistic, kernels_bench, table1_mdelta,
+                   table2_complexity, table3_polyak)
 
     jobs = {
         "fig1": lambda: fig1_synthetic.run(
@@ -39,21 +52,53 @@ def main() -> None:
         "table3": table3_polyak.run,
         "fig4": fig4_realistic.run,
         "kernels": kernels_bench.run,
+        "batched": lambda: bench_batched.run(
+            B=8 if args.fast else 32, n=256 if args.fast else 512,
+            d=32 if args.fast else 64, m_max=64 if args.fast else 128,
+            reps=1 if args.fast else 3,
+        ),
+        "sketch_gram": lambda: bench_sketch_gram.run(
+            B=2 if args.fast else 4, d=64 if args.fast else 128,
+            m_max=128 if args.fast else 512,
+            ns=(1024, 2048) if args.fast else (2048, 8192),
+            reps=1 if args.fast else 3,
+        ),
     }
     t_all = time.time()
     failures = []
+    json_rows: list[dict] = []
     for name, fn in jobs.items():
         if only and name not in only:
             continue
         print(f"\n=== {name} ===", flush=True)
         t0 = time.time()
         try:
-            fn()
+            rows = fn()
+            if args.json and isinstance(rows, list) and all(
+                    isinstance(r, dict) for r in rows):
+                json_rows.extend(rows)
         except Exception as e:  # keep the harness going, report at the end
             failures.append((name, repr(e)))
             print(f"bench={name},status=ERROR,err={e!r}", flush=True)
         print(f"bench={name},elapsed_s={time.time()-t0:.1f}", flush=True)
     print(f"\ntotal_elapsed_s={time.time()-t_all:.1f}")
+    if args.json:
+        import jax
+
+        payload = {
+            "meta": {
+                "fast": args.fast,
+                "backend": jax.default_backend(),
+                "jax": jax.__version__,
+                "python": platform.python_version(),
+                "machine": platform.machine(),
+                "elapsed_s": round(time.time() - t_all, 1),
+            },
+            "rows": json_rows,
+        }
+        with open(BENCH_JSON, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {BENCH_JSON} ({len(json_rows)} rows)")
     if failures:
         sys.exit(1)
 

@@ -2,12 +2,14 @@
 bucketing + batched multi-problem adaptive engine (DESIGN.md §6).
 
 Submits a stream of ridge problems with random shapes and regularization,
-flushes them through the service, and audits every returned solution and
-its adaptivity certificate against a dense direct solve.
+flushes them through the service, audits every returned solution against a
+dense direct solve, and prints each request's adaptivity certificate —
+including which sketch family produced it.
 
-    PYTHONPATH=src python examples/solve_service.py
+    PYTHONPATH=src python examples/solve_service.py --sketch srht
 """
 
+import argparse
 import time
 
 import jax
@@ -15,15 +17,25 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import direct_solve, from_least_squares
+from repro.core.level_grams import PADDED_SKETCHES
 from repro.serve.solver_service import SolverService
 
 
 def main():
-    svc = SolverService(batch_size=16, method="pcg", sketch="gaussian",
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sketch", default="gaussian",
+                    choices=PADDED_SKETCHES,
+                    help="sketch family for the adaptive engine")
+    ap.add_argument("--requests", type=int, default=40)
+    ap.add_argument("--certificates", type=int, default=8,
+                    help="how many per-request certificate lines to print")
+    args = ap.parse_args()
+
+    svc = SolverService(batch_size=16, method="pcg", sketch=args.sketch,
                         tol=1e-12)
     rng = np.random.default_rng(0)
     requests = {}
-    for i in range(40):
+    for i in range(args.requests):
         n = int(rng.integers(64, 1500))
         d = int(rng.integers(8, 100))
         A = jax.random.normal(jax.random.PRNGKey(2 * i), (n, d)) / np.sqrt(n)
@@ -50,9 +62,13 @@ def main():
     print(f"worst relative error vs direct solve: {worst:.2e}")
     print(f"adapted sketch sizes m_final: min={m_finals[0]} "
           f"median={m_finals[len(m_finals) // 2]} max={m_finals[-1]}")
-    print("sample certificate:",
-          {k: getattr(next(iter(sols.values())), k)
-           for k in ("m_final", "iters", "doublings", "delta_tilde")})
+    for rid in sorted(sols)[: args.certificates]:
+        s = sols[rid]
+        print(f"  cert req={rid:3d} sketch={s.sketch:<14s} "
+              f"class=(n={s.shape_class.n}, d={s.shape_class.d}, "
+              f"m_max={s.shape_class.m_max}) m_final={s.m_final:4d} "
+              f"iters={s.iters:3d} doublings={s.doublings} "
+              f"δ̃={s.delta_tilde:.2e}")
 
 
 if __name__ == "__main__":

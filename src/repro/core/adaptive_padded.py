@@ -23,14 +23,14 @@ whenever any problem rejects, the masked factorization is recomputed for
 the whole batch at the updated per-problem sizes (unchanged problems
 reproduce their factor bit-for-bit, so this is a no-op for them).
 
-Sketch families:
-
-* ``gaussian`` — rows are i.i.d., so masking = subsampling; live rows are
-  rescaled by 1/√m_t (entries are sampled as unit normals).
-* ``sjlt``     — each data row i carries a fixed uniform u_i ∈ [0,1) and a
-  sign; the active target row is ⌊u_i · m_t⌋, which is exactly uniform on
-  {0,…,m_t−1} for every m_t. Doubling re-dispatches the same (u, sign)
-  stream into more rows; no rescale (s = 1 entries are ±1).
+Sketch families are pluggable ``LevelGramProvider``s (``core.level_grams``,
+DESIGN.md §6): ``gaussian`` (streamed — rows generated on the fly inside
+the fused sketch→Gram kernel, masking = prefix of the i.i.d. row stream),
+``gaussian_dense`` (the materialized-S memory baseline, same entries),
+``sjlt`` (fixed (u, sign) stream; the level-m target ⌊u_i·m⌋ is uniform for
+every m and pow2 levels fold pairwise from ONE dispatch), and ``srht``
+(one sign flip + one FWHT pass; level-m = the first m rows of a fixed
+uniform row-sample stream).
 
 Methods: ``ihs`` (Thm 3.2 thresholds: φ(ρ)=ρ, α=1) and ``pcg``
 (Alg 4.2 thresholds: φ(ρ)=(1−√(1−ρ))/(1+√(1−ρ)), α=4); the method restarts
@@ -38,16 +38,19 @@ at the current iterate on every doubling, as in Algorithm 4.1.
 
 Cost model: m_t only ever visits the doubling ladder {1, 2, 4, …, m_max},
 so the sketched Gram (SA)ᵀ(SA) is PRECOMPUTED at every ladder level before
-the loop starts — prefix-summed row-Grams for the Gaussian (the m-row Gram
-is the first-m-rows partial sum), one re-dispatch per level for the SJLT
-(routed through ``kernels.ops.sjlt_apply_batched``, i.e. the Pallas MXU
-kernel on TPU). The sketch touches A exactly once, matching the paper's
-O(sketch) + Σ O(factorize) accounting, and the in-loop refactorization is
-only a (B,) gather of level Grams + diagonal add + batched d×d Cholesky.
-H_S is factorized in the primal (d×d) form for every m_t (ν²Λ ≻ 0 keeps it
-SPD below d). In exchange for the padded d×d factor there is exactly ONE
-executable and no host round-trips — the right trade on real TPU pods
-where launch latency and recompiles dominate at small m.
+the loop starts, by the family's provider, touching A exactly ONCE —
+matching the paper's O(sketch) + Σ O(factorize) accounting. The sketch
+pass *streams* A: the Gaussian family fuses row generation with the A
+contraction (``kernels.gaussian_gram`` on TPU, a chunked ``lax.scan``
+elsewhere) so S never exists in HBM; the SJLT routes one dispatch through
+the Pallas MXU kernel and folds the ladder down; the SRHT pays one FWHT.
+Precompute live memory is O(B·m_max·d) row streams + O(B·d²·L) level Grams
+— never O(B·m_max·n). The in-loop refactorization is only a (B,) gather of
+precomputed level inverses, and H_S is factorized in the primal (d×d) form
+for every m_t (ν²Λ ≻ 0 keeps it SPD below d). In exchange for the padded
+d×d factor there is exactly ONE executable and no host round-trips — the
+right trade on real TPU pods where launch latency and recompiles dominate
+at small m.
 """
 
 from __future__ import annotations
@@ -58,11 +61,11 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from .level_grams import PADDED_SKETCHES, get_provider
 from .quadratic import Quadratic
 from .solvers import c_alpha_rho, rho_to_rate
 
 PADDED_METHODS = ("ihs", "pcg")
-PADDED_SKETCHES = ("gaussian", "sjlt")
 
 
 class PaddedState(NamedTuple):
@@ -111,75 +114,6 @@ def doubling_ladder(m_max: int) -> tuple[int, ...]:
         m *= 2
     ms.append(m_max)
     return tuple(ms)
-
-
-def _sample_sketch(sketch: str, keys, m_max: int, n: int, dtype):
-    """Per-problem sketch randomness, one key per problem (so a batched run
-    reproduces the corresponding single-problem runs exactly)."""
-    if sketch == "gaussian":
-        S = jax.vmap(lambda k: jax.random.normal(k, (m_max, n), dtype))(keys)
-        return {"S": S}
-    if sketch == "sjlt":
-        u = jax.vmap(lambda k: jax.random.uniform(
-            jax.random.fold_in(k, 0), (n,), dtype))(keys)
-        signs = jax.vmap(lambda k: jax.random.rademacher(
-            jax.random.fold_in(k, 1), (n,), dtype))(keys)
-        return {"u": u, "signs": signs}
-    raise ValueError(f"padded engine supports {PADDED_SKETCHES}, got {sketch!r}")
-
-
-def _level_grams(sketch: str, data: dict, q: Quadratic,
-                 ladder: tuple[int, ...]) -> jnp.ndarray:
-    """(L, B, d, d) Gram matrices (SA)ᵀ(SA) of the masked sketch at every
-    ladder level — the sketch touches A exactly once.
-
-    * Gaussian: rows are i.i.d., so the level-m Gram is the prefix sum of
-      the first m unscaled row-Grams times 1/m (mask = subsample, rescale
-      1/√m folded in as 1/m on the Gram).
-    * SJLT: the level-m sketch re-dispatches row i to ⌊u_i·m⌋ (exactly
-      uniform on {0,…,m−1} for every m), one segment-sum / Pallas dispatch
-      per level; entries are ±1 so there is no rescale.
-    """
-    dtype = q.A.dtype
-    B, d = q.batch, q.d
-    if sketch == "gaussian":
-        S = data["S"]                                        # (B, m_max, n)
-        if q.shared_A:
-            SA = jnp.einsum("bmn,nd->bmd", S, q.A)           # unscaled rows
-        else:
-            SA = jnp.einsum("bmn,bnd->bmd", S, q.A)
-        grams, acc, prev = [], jnp.zeros((B, d, d), dtype), 0
-        for m in ladder:
-            seg = SA[:, prev:m, :]
-            acc = acc + jnp.einsum("bmd,bme->bde", seg, seg)
-            grams.append(acc / jnp.asarray(m, dtype))
-            prev = m
-        return jnp.stack(grams)
-    from repro.kernels.ops import sjlt_apply_batched
-
-    u, signs = data["u"], data["signs"]
-
-    def dispatch(m: int) -> jnp.ndarray:
-        rows = jnp.clip(
-            jnp.floor(u * jnp.asarray(m, u.dtype)).astype(jnp.int32),
-            0, m - 1)
-        return sjlt_apply_batched(q.A, rows, signs, m)
-
-    # ⌊u·m⌋ = ⌊⌊u·2m⌋/2⌋, so the level-m sketch is exactly the pairwise
-    # row-fold of the level-2m sketch: ONE scatter/Pallas dispatch at the
-    # top power-of-two level, then log₂ cheap folds down the ladder.
-    pow2 = [m for m in ladder if m & (m - 1) == 0]
-    by_m = {}
-    SA = dispatch(pow2[-1])
-    by_m[pow2[-1]] = SA
-    for m in reversed(pow2[:-1]):
-        SA = SA[:, 0::2, :] + SA[:, 1::2, :]
-        by_m[m] = SA
-    for m in ladder:                       # non-pow2 cap level, if any
-        if m not in by_m:
-            by_m[m] = dispatch(m)
-    return jnp.stack(
-        [jnp.einsum("bmd,bme->bde", by_m[m], by_m[m]) for m in ladder])
 
 
 def _precompute_pinvs(grams: jnp.ndarray, q: Quadratic) -> jnp.ndarray:
@@ -246,9 +180,10 @@ def padded_adaptive_solve_batched(
     B, d = q.batch, q.d
     if _is_single_key(keys):
         keys = jax.random.split(keys, B)
-    data = _sample_sketch(sketch, keys, m_max, q.n, q.A.dtype)
+    provider = get_provider(sketch)
+    data = provider.sample(keys, m_max, q.n, q.A.dtype)
     ladder = doubling_ladder(m_max)
-    grams = _level_grams(sketch, data, q, ladder)
+    grams = provider.level_grams(data, q, ladder)
     pinvs = _precompute_pinvs(grams, q)
     ladder_m = jnp.asarray(ladder, jnp.int32)
     top = len(ladder) - 1

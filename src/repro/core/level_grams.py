@@ -1,0 +1,208 @@
+"""Ladder-level Gram providers for the padded adaptive engine.
+
+The padded engine (``core.adaptive_padded``) precomputes the sketched Gram
+(S_m A)ᵀ(S_m A) at every doubling-ladder level {1, 2, 4, …, m_max} before
+its while_loop starts. Each sketch family owns its ladder algebra — how a
+single fixed-randomness pass over A yields a *consistent* sketch at every
+level — behind one protocol (DESIGN.md §6):
+
+* ``sample(keys, m_max, n, dtype)`` → per-problem randomness (a dict of
+  (B, …) arrays), one key per problem so a batched run reproduces the
+  corresponding single-problem runs;
+* ``level_grams(data, q, ladder)`` → (L, B, d, d) Grams, touching A
+  exactly ONCE (the paper's O(sketch) + Σ O(factorize) accounting).
+
+Families:
+
+* ``gaussian`` — *streamed*: rows are generated on the fly from a
+  counter-based PRNG fused with the A contraction
+  (``kernels.gaussian_gram``); S never exists in HBM, A is streamed once
+  in n-chunks, live memory is O(B·m_max·d + B·d²·L). Masking = prefix of
+  the i.i.d. row stream; the level-m rescale 1/√m folds into 1/m on the
+  Gram.
+* ``gaussian_dense`` — the same sketch entries, materialized as a
+  (B, m_max, n) array and contracted by einsum. Kept as the memory
+  baseline for benchmarks/tests; the streamed provider must match it to
+  fp reduction error at every level.
+* ``sjlt`` — each data row i carries a fixed uniform u_i and a sign; the
+  level-m target row ⌊u_i·m⌋ is exactly uniform for every m, and
+  ⌊u·m⌋ = ⌊⌊u·2m⌋/2⌋ makes each pow2 level an exact pairwise row-fold of
+  the level above. ONE dispatch at M = 2^⌈log₂ m_max⌉ (the Pallas MXU
+  kernel on TPU), then log₂ cheap folds. A non-pow2 cap level is derived
+  from the SAME dispatch by folding the M − m_max tail rows back onto the
+  head (row j ≥ m_max dispatches to j − m_max): still one ±1 per column,
+  so SᵀS = I exactly; the first M − m_max target rows are 2× likelier
+  than the rest, which perturbs embedding constants only — and A is
+  touched exactly once.
+* ``srht`` — signs + a row-sample stream FIXED at m_max: one sign flip,
+  one FWHT pass (the paper's O(n·d·log n) embedding; ``fwht_pallas`` on
+  TPU, the jnp butterfly elsewhere) touching A once, then level-m = the
+  first m sampled rows. Rows are i.i.d. uniform over the padded index
+  space, so a prefix of the stream is a valid m-row sample for EVERY m —
+  the same argument as the SJLT's ⌊u·m⌋. The 1/√m rescale folds into 1/m
+  on the prefix-summed row-Grams, exactly as for the Gaussian.
+"""
+
+from __future__ import annotations
+
+from typing import Protocol
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.kernels.gaussian_gram import gaussian_s_dense
+
+from .quadratic import Quadratic
+
+
+class LevelGramProvider(Protocol):
+    """A sketch family's ladder algebra (see module docstring)."""
+
+    name: str
+
+    def sample(self, keys: jax.Array, m_max: int, n: int, dtype) -> dict:
+        """Per-problem sketch randomness, one key per problem."""
+        ...
+
+    def level_grams(self, data: dict, q: Quadratic,
+                    ladder: tuple[int, ...]) -> jnp.ndarray:
+        """(L, B, d, d) Grams (S_m A)ᵀ(S_m A); touches A exactly once."""
+        ...
+
+
+def prefix_level_grams(R: jnp.ndarray, ladder: tuple[int, ...], *,
+                       inv_m_scale: bool) -> jnp.ndarray:
+    """(L, B, d, d) Grams from a (B, m_max, d) row stream whose level-m
+    sketch is the first m rows: prefix-summed per-segment row-Grams, with
+    the per-level 1/√m entry rescale folded in as 1/m when requested."""
+    B, _, d = R.shape
+    dtype = R.dtype
+    grams, acc, prev = [], jnp.zeros((B, d, d), dtype), 0
+    for m in ladder:
+        seg = R[:, prev:m, :]
+        acc = acc + jnp.einsum("bmd,bme->bde", seg, seg)
+        grams.append(acc / jnp.asarray(m, dtype) if inv_m_scale else acc)
+        prev = m
+    return jnp.stack(grams)
+
+
+def _uint32_seeds(keys: jax.Array) -> jnp.ndarray:
+    """One uint32 counter-hash seed per problem key."""
+    return jax.vmap(lambda k: jax.random.bits(k, dtype=jnp.uint32))(keys)
+
+
+class GaussianStreamedProvider:
+    """Streaming fused sketch→Gram (the default ``gaussian`` family)."""
+
+    name = "gaussian"
+
+    def sample(self, keys, m_max, n, dtype):
+        return {"seeds": _uint32_seeds(keys)}
+
+    def level_grams(self, data, q, ladder):
+        SA = ops.gaussian_sa(q.A, data["seeds"], ladder[-1])
+        return prefix_level_grams(SA, ladder, inv_m_scale=True)
+
+
+class GaussianDenseProvider:
+    """Materialized-S baseline: identical sketch entries, O(B·m_max·n)."""
+
+    name = "gaussian_dense"
+
+    def sample(self, keys, m_max, n, dtype):
+        return {"seeds": _uint32_seeds(keys)}
+
+    def level_grams(self, data, q, ladder):
+        m_max = ladder[-1]
+        S = gaussian_s_dense(data["seeds"], m_max, q.n).astype(q.A.dtype)
+        if q.shared_A:
+            SA = jnp.einsum("bmn,nd->bmd", S, q.A)
+        else:
+            SA = jnp.einsum("bmn,bnd->bmd", S, q.A)
+        return prefix_level_grams(SA, ladder, inv_m_scale=True)
+
+
+class SJLTProvider:
+    """s=1 SJLT ladder: one dispatch at the top power of two, folds below."""
+
+    name = "sjlt"
+
+    def sample(self, keys, m_max, n, dtype):
+        u = jax.vmap(lambda k: jax.random.uniform(
+            jax.random.fold_in(k, 0), (n,), dtype))(keys)
+        signs = jax.vmap(lambda k: jax.random.rademacher(
+            jax.random.fold_in(k, 1), (n,), dtype))(keys)
+        return {"u": u, "signs": signs}
+
+    def level_grams(self, data, q, ladder):
+        u, signs = data["u"], data["signs"]
+        m_max = ladder[-1]
+        M = 1 << max(0, (m_max - 1).bit_length())   # top pow2 ≥ m_max
+        rows = jnp.clip(
+            jnp.floor(u * jnp.asarray(M, u.dtype)).astype(jnp.int32),
+            0, M - 1)
+        SA = ops.sjlt_apply_batched(q.A, rows, signs, M)   # the ONE touch
+        by_m = {M: SA}
+        m = M
+        while m > 1:                    # ⌊u·m⌋ = ⌊⌊u·2m⌋/2⌋: pairwise fold
+            SA = SA[:, 0::2, :] + SA[:, 1::2, :]
+            m //= 2
+            by_m[m] = SA
+        if m_max != M:                  # non-pow2 cap: fold the tail rows
+            top = by_m[M]
+            head, tail = top[:, :m_max, :], top[:, m_max:, :]
+            by_m[m_max] = head + jnp.pad(
+                tail, ((0, 0), (0, 2 * m_max - M), (0, 0)))
+        return jnp.stack(
+            [jnp.einsum("bmd,bme->bde", by_m[m], by_m[m]) for m in ladder])
+
+
+class SRHTProvider:
+    """SRHT ladder: one FWHT pass, level-m = first m of a fixed row stream."""
+
+    name = "srht"
+
+    def sample(self, keys, m_max, n, dtype):
+        n_pad = 1 << max(0, (n - 1).bit_length())
+        signs = jax.vmap(lambda k: jax.random.rademacher(
+            jax.random.fold_in(k, 0), (n,), dtype))(keys)
+        rows = jax.vmap(lambda k: jax.random.randint(
+            jax.random.fold_in(k, 1), (m_max,), 0, n_pad))(keys)
+        return {"signs": signs, "rows": rows}
+
+    def level_grams(self, data, q, ladder):
+        signs, rows = data["signs"], data["rows"]
+        n, d = q.n, q.d
+        n_pad = 1 << max(0, (n - 1).bit_length())
+        if q.shared_A:
+            X = q.A[None, :, :] * signs[:, :, None]        # (B, n, d)
+        else:
+            X = q.A * signs[:, :, None]
+        if n_pad != n:
+            X = jnp.pad(X, ((0, 0), (0, n_pad - n), (0, 0)))
+        HX = ops.fwht_cols(X)                              # the ONE touch
+        picked = jnp.take_along_axis(HX, rows[:, :, None], axis=1)
+        return prefix_level_grams(picked, ladder, inv_m_scale=True)
+
+
+_PROVIDERS: dict[str, LevelGramProvider] = {
+    p.name: p for p in (
+        GaussianStreamedProvider(),
+        GaussianDenseProvider(),
+        SJLTProvider(),
+        SRHTProvider(),
+    )
+}
+
+PADDED_SKETCHES = tuple(_PROVIDERS)
+
+
+def get_provider(sketch: str) -> LevelGramProvider:
+    """Resolve a sketch-family name to its (stateless) provider."""
+    try:
+        return _PROVIDERS[sketch]
+    except KeyError:
+        raise ValueError(
+            f"padded engine supports {PADDED_SKETCHES}, got {sketch!r}"
+        ) from None

@@ -1,1 +1,2 @@
-"""Pallas TPU kernels: fwht (SRHT core), sjlt (one-hot MXU sketch)."""
+"""Pallas TPU kernels: fwht (SRHT core), sjlt (one-hot MXU sketch),
+gaussian_gram (streaming fused Gaussian sketch with in-kernel PRNG)."""

@@ -1,0 +1,220 @@
+"""Pallas TPU kernel: streaming fused Gaussian sketch→(SA) with in-kernel PRNG.
+
+The padded adaptive engine precomputes sketched Grams at every doubling-
+ladder level. Materializing the Gaussian sketch S (B, m_max, n) in HBM and
+pushing it through an einsum is memory-bound and allocates O(B·m_max·n) —
+the opposite of the paper's O(n·d) sketch-pass accounting. This kernel
+never materializes S: each grid cell *generates* its (m_max, chunk) tile of
+S on the fly from a counter-based PRNG in VMEM and contracts it with the
+matching A chunk on the MXU, accumulating SA (B, m_max, d) with the
+standard revisited-output pattern (DESIGN.md §3). A is streamed exactly
+once in n-chunks; live memory is O(B·m_max·d) ≪ O(B·m_max·n).
+
+PRNG design: entries are a pure function of (problem seed, row, column) —
+a murmur3-finalizer counter hash feeding Box–Muller — so
+
+* the kernel and the chunked ``lax.scan`` oracle (``gaussian_sa_ref``, the
+  CPU/GPU path) draw bit-identical sketch entries;
+* numerics are *chunk-invariant by construction*: the oracle reduces the
+  n axis at a fixed ``_MICRO``-column granularity in a fixed order, so any
+  public chunk size produces bit-identical SA (tested);
+* no backend-specific PRNG primitive is needed — the hash is plain uint32
+  jnp arithmetic, so the same kernel body compiles on TPU Mosaic and runs
+  under ``interpret=True`` on CPU.
+
+Counters pack (row, col) as ``row·2^20 + col`` in uint32, which is
+injective for n ≤ 2^20 columns and m_max ≤ 2^12 rows — far above any
+sketch this engine builds (m_max is a few·d); asserted in the wrappers.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+# Canonical micro-tile of the n axis: the oracle always reduces n in
+# _MICRO-column steps so chunk size never changes numerics; the Pallas
+# kernel requires chunk % _MICRO == 0 so its tiles see the same counters.
+_MICRO = 256
+_COL_BITS = 20                 # counters: row · 2^20 + col
+MAX_N = 1 << _COL_BITS         # column capacity of the counter packing
+MAX_M = 1 << (32 - _COL_BITS)  # row capacity
+
+# numpy scalars (not jnp arrays): they inline as jaxpr literals, which a
+# Pallas kernel body may close over — committed device arrays may not
+_GOLD = np.uint32(0x9E3779B9)
+_SEQ2 = np.uint32(0x7F4A7C15)
+_MUL1 = np.uint32(0x85EBCA6B)
+_MUL2 = np.uint32(0xC2B2AE35)
+
+
+def _mix(x: jnp.ndarray) -> jnp.ndarray:
+    """murmur3 finalizer: a bijective uint32 avalanche."""
+    x = (x ^ (x >> 16)) * _MUL1
+    x = (x ^ (x >> 13)) * _MUL2
+    return x ^ (x >> 16)
+
+
+def gaussian_tile(seed, row0, col0, shape) -> jnp.ndarray:
+    """(shape) float32 tile of the seed's N(0,1) sketch at (row0, col0).
+
+    Pure uint32 jnp arithmetic + Box–Muller, usable identically inside a
+    Pallas kernel body and in plain jitted code. ``seed``/``row0``/``col0``
+    may be traced scalars.
+    """
+    r = jnp.uint32(row0) + jax.lax.broadcasted_iota(jnp.uint32, shape, 0)
+    c = jnp.uint32(col0) + jax.lax.broadcasted_iota(jnp.uint32, shape, 1)
+    ctr = (r << _COL_BITS) + c
+    k = _mix(jnp.uint32(seed) ^ _GOLD)
+    h1 = _mix(ctr ^ k)
+    h2 = _mix(h1 + _SEQ2)
+    # 24-bit mantissas; u1 offset into (0, 1) so log(u1) is finite
+    u1 = (h1 >> 8).astype(jnp.float32) * (1.0 / 16777216.0) + (
+        0.5 / 16777216.0)
+    u2 = (h2 >> 8).astype(jnp.float32) * (1.0 / 16777216.0)
+    return jnp.sqrt(-2.0 * jnp.log(u1)) * jnp.cos(6.2831853071795864 * u2)
+
+
+def _check_caps(n: int, m: int) -> None:
+    if n > MAX_N or m > MAX_M:
+        raise ValueError(
+            f"counter packing supports n ≤ {MAX_N}, m ≤ {MAX_M}; "
+            f"got n={n}, m={m}")
+
+
+def gaussian_s_dense(seeds: jnp.ndarray, m: int, n: int) -> jnp.ndarray:
+    """Materialize the full (B, m, n) sketch — the dense baseline/oracle.
+
+    Entry [b, r, c] is exactly what the streaming kernel/oracle generate
+    for problem b at (row r, column c)."""
+    _check_caps(n, m)
+    return jax.vmap(lambda s: gaussian_tile(s, 0, 0, (m, n)))(seeds)
+
+
+# ---------------------------------------------------------------------------
+# Chunked lax.scan oracle — the CPU/GPU streaming path
+# ---------------------------------------------------------------------------
+
+def gaussian_sa_ref(A: jnp.ndarray, seeds: jnp.ndarray, m: int, *,
+                    chunk_cols: int = 2048) -> jnp.ndarray:
+    """Streamed S @ A without materializing S: (B, m, d) from A (n, d)
+    shared or (B, n, d) per-problem and per-problem uint32 seeds (B,).
+
+    ``lax.scan`` walks n-chunks of A; inside each step a ``fori_loop``
+    reduces the chunk in fixed _MICRO-column micro-tiles, so the sequence
+    of partial products — and therefore the result, bit-for-bit — is
+    independent of ``chunk_cols`` (which only sets live-memory/pipelining
+    granularity). Peak live sketch state is (B, m, _MICRO) + the (B, m, d)
+    accumulator."""
+    shared = A.ndim == 2
+    n, d = A.shape[-2], A.shape[-1]
+    B = seeds.shape[0]
+    _check_caps(n, m)
+    k = max(1, -(-chunk_cols // _MICRO))      # micro-tiles per scan step
+    k = min(k, -(-n // _MICRO))               # never pad n past one chunk
+    chunk = k * _MICRO
+    pad = (-n) % chunk
+    if pad:
+        # zero columns: their generated sketch entries multiply 0.0, and
+        # acc + 0.0 is exact, so padding never changes the result
+        A = jnp.pad(A, ((0, pad), (0, 0)) if shared
+                    else ((0, 0), (0, pad), (0, 0)))
+    steps = (n + pad) // chunk
+    if shared:
+        contract = lambda S, a: jnp.einsum("bmc,cd->bmd", S, a)
+    else:
+        contract = lambda S, a: jnp.einsum("bmc,bcd->bmd", S, a)
+    dtype = A.dtype
+
+    def step(acc, c_idx):
+        # A is sliced in place (no re-layout copy): the only live sketch
+        # state is the (B, m, _MICRO) tile and the (B, m, d) accumulator
+        def micro(i, acc):
+            col0 = c_idx * chunk + i * _MICRO
+            S = jax.vmap(lambda s: gaussian_tile(
+                s, 0, col0.astype(jnp.uint32), (m, _MICRO)))(seeds)
+            a_mu = jax.lax.dynamic_slice_in_dim(
+                A, col0, _MICRO, axis=A.ndim - 2)
+            return acc + contract(S.astype(dtype), a_mu)
+
+        return jax.lax.fori_loop(0, k, micro, acc), None
+
+    acc0 = jnp.zeros((B, m, d), dtype)
+    acc, _ = jax.lax.scan(step, acc0, jnp.arange(steps))
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel — grid (B, n/chunk), S tile generated in VMEM per cell
+# ---------------------------------------------------------------------------
+
+def _gauss_sa_kernel(seed_ref, a_ref, o_ref, *, m: int, chunk: int):
+    c = pl.program_id(1)
+    seed = seed_ref[0]
+    col0 = (c * chunk).astype(jnp.uint32)
+    S = gaussian_tile(seed, 0, col0, (m, chunk))   # VMEM-only, never in HBM
+    a = a_ref[...]
+    if a.ndim == 3:
+        a = a[0]
+    acc = jnp.dot(S.astype(a.dtype), a, preferred_element_type=jnp.float32)
+
+    @pl.when(c == 0)
+    def _init():
+        o_ref[0, ...] = acc.astype(o_ref.dtype)
+
+    @pl.when(c > 0)
+    def _acc():
+        o_ref[0, ...] = (o_ref[0, ...].astype(jnp.float32) + acc).astype(
+            o_ref.dtype)
+
+
+def gaussian_sa_pallas(
+    A: jnp.ndarray,
+    seeds: jnp.ndarray,
+    m: int,
+    *,
+    chunk_cols: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Fused generate-and-multiply Gaussian sketch: (B, m, d) from
+    A (n, d) shared or (B, n, d) per-problem; seeds (B,) uint32.
+
+    Grid (B, n/chunk): each cell generates its (m, chunk) S tile from the
+    counter hash in VMEM and contracts it with the A chunk on the MXU;
+    the output block is revisited over the chunk axis (accumulator
+    pattern). VMEM per step: m·chunk (S) + chunk·d (A) + m·d (acc); with
+    m ≤ 1024, chunk = 512, d ≤ 512 this stays ≤ ~4 MiB. Entries match
+    ``gaussian_sa_ref`` / ``gaussian_s_dense`` bit-for-bit (same counter
+    hash); the contraction differs only in reduction order."""
+    shared = A.ndim == 2
+    n, d = A.shape[-2], A.shape[-1]
+    B = seeds.shape[0]
+    _check_caps(n, m)
+    chunk = max(_MICRO, (chunk_cols // _MICRO) * _MICRO)
+    chunk = min(chunk, -(-n // _MICRO) * _MICRO)  # never pad past one chunk
+    pad = (-n) % chunk
+    if pad:
+        A = jnp.pad(A, ((0, pad), (0, 0)) if shared
+                    else ((0, 0), (0, pad), (0, 0)))
+        n = n + pad
+    grid = (B, n // chunk)
+    a_spec = (
+        pl.BlockSpec((chunk, d), lambda b, c: (c, 0))
+        if shared
+        else pl.BlockSpec((1, chunk, d), lambda b, c: (b, c, 0))
+    )
+    return pl.pallas_call(
+        functools.partial(_gauss_sa_kernel, m=m, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, c: (b,)),
+            a_spec,
+        ],
+        out_specs=pl.BlockSpec((1, m, d), lambda b, c: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, m, d), A.dtype),
+        interpret=interpret,
+    )(seeds.astype(jnp.uint32), A)

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from . import ref
 from .fwht import fwht_pallas
+from .gaussian_gram import gaussian_sa_pallas, gaussian_sa_ref
 from .sjlt import sjlt_pallas, sjlt_pallas_batched
 
 _FWHT_VMEM_MAX_N = 16_384  # n · 128 cols · 4 B ≈ 8 MiB
@@ -87,6 +88,36 @@ def sjlt_apply_batched(A: jnp.ndarray, rows: jnp.ndarray, signs: jnp.ndarray,
     if not use_pallas:
         return ref.sjlt_ref_batched(A, rows, signs, m)
     return sjlt_pallas_batched(A, rows, signs, m, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "chunk_cols", "use_pallas",
+                                             "interpret"))
+def gaussian_sa(A: jnp.ndarray, seeds: jnp.ndarray, m: int, *,
+                chunk_cols: int | None = None,
+                use_pallas: bool | None = None,
+                interpret: bool | None = None) -> jnp.ndarray:
+    """Streamed Gaussian sketch S @ A (B, m, d) without materializing S:
+    A (n, d) shared or (B, n, d) per-problem, seeds (B,) uint32 — the fused
+    generate-and-multiply Pallas kernel on TPU, the chunked ``lax.scan``
+    oracle elsewhere. Sketch entries are identical on both paths (the same
+    counter hash); only matmul reduction order differs."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if interpret is None:
+        interpret = not _on_tpu()
+    if not use_pallas:
+        return gaussian_sa_ref(A, seeds, m,
+                               chunk_cols=chunk_cols or 2048)
+    return gaussian_sa_pallas(A, seeds, m, chunk_cols=chunk_cols or 512,
+                              interpret=interpret)
+
+
+def fwht_cols(X: jnp.ndarray, *, use_pallas: bool | None = None,
+              interpret: bool | None = None) -> jnp.ndarray:
+    """FWHT along axis -2 of a batched (B, n, d) stack (n a power of two):
+    one vmapped kernel call on TPU, the jnp butterfly elsewhere."""
+    return jax.vmap(lambda x: fwht(x, use_pallas=use_pallas,
+                                   interpret=interpret))(X)
 
 
 def srht_sketch(A: jnp.ndarray, key: jax.Array, m: int, *,

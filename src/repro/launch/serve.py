@@ -35,7 +35,7 @@ def serve_ridge(args):
     from repro.serve.solver_service import SolverService
 
     svc = SolverService(batch_size=args.batch if args.batch > 1 else 16,
-                        method="pcg", sketch="gaussian")
+                        method="pcg", sketch=args.sketch)
     rng = np.random.default_rng(0)
     truth = {}
     for i in range(args.requests):
@@ -56,8 +56,10 @@ def serve_ridge(args):
           f"({args.requests / dt:.1f} req/s incl. compile) — "
           f"{svc.stats['batches']} batches, "
           f"{svc.stats['padded_slots']} padded slots")
-    print(f"certificates: m_final min/median/max = {min(m_finals)}/"
-          f"{sorted(m_finals)[len(m_finals) // 2]}/{max(m_finals)}, "
+    fams = sorted({s.sketch for s in sols.values()})
+    print(f"certificates ({'/'.join(fams)}): m_final min/median/max = "
+          f"{min(m_finals)}/{sorted(m_finals)[len(m_finals) // 2]}/"
+          f"{max(m_finals)}, "
           f"max residual δ̃ = {max(s.delta_tilde for s in sols.values()):.2e}")
 
 
@@ -74,6 +76,11 @@ def main(argv=None):
                     help="serve ridge-solve requests instead of LM decode")
     ap.add_argument("--requests", type=int, default=48,
                     help="number of synthetic ridge requests (--ridge)")
+    from repro.core.level_grams import PADDED_SKETCHES
+
+    ap.add_argument("--sketch", default="gaussian",
+                    choices=PADDED_SKETCHES,
+                    help="sketch family for the ridge service (--ridge)")
     args = ap.parse_args(argv)
 
     if args.ridge:

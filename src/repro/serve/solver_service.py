@@ -15,7 +15,10 @@ service
    converge at initialization);
 3. **solves** the batch in one call of the fully-jitted multi-problem
    adaptive engine (``core.adaptive_padded``) — per-problem doubling, one
-   executable per shape class;
+   executable per shape class, with a per-class ``sketch=`` family
+   (streamed gaussian / sjlt / srht; the streaming providers keep the
+   precompute at O(B·d²·L) live bytes, which is what lets large-n shape
+   classes exist at all);
 4. **returns** per-request solutions with their adaptivity *certificates*
    (δ̃, m_final, iterations, doublings) so callers can audit convergence.
 
@@ -41,6 +44,13 @@ class ShapeClass(NamedTuple):
     n: int       # padded row count
     d: int       # padded feature count
     m_max: int   # padded sketch budget for the class
+    sketch: str | None = None   # per-class sketch family (None → service
+                                # default): large-n classes pick ``srht``
+                                # (one FWHT pass) or keep the streamed
+                                # ``gaussian`` — both run in O(B·d²·L) live
+                                # memory, where the old dense Gaussian
+                                # needed O(B·m_max·n) and could not hold
+                                # these shapes
 
 
 DEFAULT_SHAPE_CLASSES = (
@@ -48,6 +58,8 @@ DEFAULT_SHAPE_CLASSES = (
     ShapeClass(n=1024, d=64, m_max=128),
     ShapeClass(n=2048, d=128, m_max=256),
     ShapeClass(n=4096, d=256, m_max=512),
+    # large-n tail: viable only with streaming sketch→Gram providers
+    ShapeClass(n=16384, d=256, m_max=512, sketch="srht"),
 )
 
 
@@ -70,6 +82,7 @@ class RidgeSolution:
     doublings: int
     shape_class: ShapeClass
     batch_index: int         # slot in the packed batch (observability)
+    sketch: str = "gaussian"  # sketch family that produced the certificate
 
 
 class SolverService:
@@ -172,9 +185,10 @@ class SolverService:
 
     def _solve_chunk(self, cls: ShapeClass, reqs: list[RidgeRequest]):
         q, keys = self._pack(cls, reqs)
+        sketch = cls.sketch or self.sketch
         t0 = time.perf_counter()
         x, stats = padded_adaptive_solve_batched(
-            q, keys, m_max=cls.m_max, method=self.method, sketch=self.sketch,
+            q, keys, m_max=cls.m_max, method=self.method, sketch=sketch,
             max_iters=self.max_iters, rho=self.rho, tol=self.tol)
         x = jax.block_until_ready(x)
         self.stats["solve_seconds"] += time.perf_counter() - t0
@@ -192,6 +206,7 @@ class SolverService:
                 doublings=int(stats["doublings"][i]),
                 shape_class=cls,
                 batch_index=i,
+                sketch=sketch,
             )
         return out
 

@@ -10,6 +10,11 @@ import pytest
 import repro.kernels.ops as ops
 from repro.kernels import ref
 from repro.kernels.fwht import fwht_pallas
+from repro.kernels.gaussian_gram import (
+    gaussian_s_dense,
+    gaussian_sa_pallas,
+    gaussian_sa_ref,
+)
 from repro.kernels.sjlt import sjlt_pallas
 
 
@@ -59,6 +64,48 @@ def test_sjlt_kernel_matches_ref(n, d, m, br):
     want = ref.sjlt_ref(A, rows, signs, m)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("shared", [False, True])
+@pytest.mark.parametrize("n,d,m,chunk", [
+    (300, 17, 24, 256), (1024, 64, 128, 512), (777, 5, 8, 256),
+])
+def test_gaussian_sa_kernel_matches_ref(shared, n, d, m, chunk):
+    """Fused generate-and-multiply kernel (interpret mode = TPU semantics)
+    vs the chunked scan oracle: identical sketch entries by construction,
+    contraction to fp reduction error."""
+    B = 3
+    seeds = jnp.asarray([1, 77, 123456789], jnp.uint32)
+    A = jax.random.normal(jax.random.PRNGKey(0), (n, d) if shared
+                          else (B, n, d))
+    got = gaussian_sa_pallas(A, seeds, m, chunk_cols=chunk, interpret=True)
+    want = gaussian_sa_ref(A, seeds, m)
+    assert got.shape == (B, m, d)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_gaussian_sa_identity_recovers_sketch():
+    """A = I makes the contraction exact: the kernel's in-VMEM tiles are
+    bit-for-bit the counter-hash sketch that gaussian_s_dense materializes."""
+    n = d = 64
+    m = 24
+    seeds = jnp.asarray([5, 6], jnp.uint32)
+    out = gaussian_sa_pallas(jnp.eye(n), seeds, m, interpret=True)
+    S = gaussian_s_dense(seeds, m, n)
+    assert bool(jnp.all(out == S))
+
+
+def test_gaussian_sketch_is_standard_normal():
+    """Counter-hash + Box–Muller entries pass basic moment checks."""
+    S = np.asarray(gaussian_s_dense(jnp.asarray([3], jnp.uint32), 256, 1024))
+    assert abs(S.mean()) < 5e-3
+    assert abs(S.std() - 1.0) < 5e-3
+    assert abs((S**4).mean() - 3.0) < 0.05        # kurtosis of N(0,1)
+    # distinct seeds decorrelate
+    S2 = np.asarray(gaussian_s_dense(jnp.asarray([4], jnp.uint32), 256, 1024))
+    corr = float(np.abs(np.corrcoef(S.ravel(), S2.ravel())[0, 1]))
+    assert corr < 5e-3
 
 
 def test_srht_sketch_end_to_end():
