@@ -1,0 +1,143 @@
+"""Sharded one-touch sketch pass + padded adaptive solve vs device count.
+
+Measures, for each data-shard count K, the wall time of (a) the sharded
+ladder precompute (``shard_level_grams``: per-shard one-touch pass + ONE
+psum of the (L, B, d, d) level Grams) and (b) the full sharded
+``padded_adaptive_solve_batched`` — against the K=1 single-device engine
+with the ``BlockEmulationProvider`` reference (identical math, no mesh).
+
+Each K runs in a SUBPROCESS with
+``XLA_FLAGS=--xla_force_host_platform_device_count=K``: forced host
+devices time-slice one CPU, so K>1 wall times measure the *overhead* of
+the sharded program (collective + partitioning cost), not a speedup — the
+point on this box is that the overhead stays small and the collective
+inventory is exactly one psum(L·B·d²) in the precompute (asserted by
+tests/test_sharded.py); on a real multi-chip mesh the same program shards
+the O(n) sketch pass K ways. Rows land in ``BENCH_solver.json`` via
+``benchmarks/run.py --json``.
+
+    PYTHONPATH=src python -m benchmarks.bench_sharded [--devices 1,2,4,8]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+from benchmarks.common import emit
+
+_CHILD = """
+    import json, time
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core.adaptive_padded import (doubling_ladder,
+                                            padded_adaptive_solve_batched)
+    from repro.core.distributed import shard_level_grams, shard_quadratic
+    from repro.core.level_grams import BlockEmulationProvider, get_provider
+    from repro.core.quadratic import from_least_squares_batch
+
+    cfg = json.loads({cfg!r})
+    B, n, d, m_max = cfg["B"], cfg["n"], cfg["d"], cfg["m_max"]
+    K, sketch, reps, seed = cfg["K"], cfg["sketch"], cfg["reps"], cfg["seed"]
+
+    A = jax.random.normal(jax.random.PRNGKey(seed), (B, n, d)) / np.sqrt(n)
+    Y = jax.random.normal(jax.random.PRNGKey(seed + 1), (B, n))
+    nus = 0.1 + 0.1 * jnp.arange(B, dtype=jnp.float32) / max(B - 1, 1)
+    q = from_least_squares_batch(A, Y, nus)
+    keys = jax.random.split(jax.random.PRNGKey(seed + 2), B)
+    ladder = doubling_ladder(m_max)
+
+    def best_of(fn, *args):
+        jax.block_until_ready(fn(*args))          # compile + warm
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    if K == 1:
+        # single-device baseline: identical concatenated-block math via the
+        # emulation provider (K_emu shards of the largest mesh in the sweep)
+        prov = BlockEmulationProvider(sketch, cfg["K_emu"])
+        pass_fn = jax.jit(lambda q, ks: prov.level_grams(
+            prov.sample(ks, m_max, q.n, q.A.dtype), q, ladder))
+        solve_fn = lambda q, ks: padded_adaptive_solve_batched(
+            q, ks, m_max=m_max, method="pcg", sketch=prov, tol=1e-8,
+            max_iters=100)
+        qd = q
+    else:
+        mesh = jax.make_mesh((K,), ("data",))
+        prov = get_provider(sketch)
+        qd = shard_quadratic(q, mesh)
+        pass_fn = jax.jit(lambda q, ks: shard_level_grams(
+            prov, ks, q, ladder, mesh), static_argnames=())
+        solve_fn = lambda q, ks: padded_adaptive_solve_batched(
+            q, ks, m_max=m_max, method="pcg", sketch=sketch, tol=1e-8,
+            max_iters=100, mesh=mesh)
+
+    sketch_pass_s = best_of(pass_fn, qd, keys)
+    solve_s = best_of(lambda q, ks: solve_fn(q, ks)[0], qd, keys)
+    x, stats = solve_fn(qd, keys)
+    print("ROW " + json.dumps({{
+        "bench": "sharded", "sketch": sketch, "devices": K,
+        "B": B, "n": n, "d": d, "m_max": m_max, "seed": seed,
+        "sketch_pass_s": round(sketch_pass_s, 4),
+        "solve_s": round(solve_s, 4),
+        "m_final_max": int(np.asarray(stats["m_final"]).max()),
+        "dtilde_max": float(np.asarray(stats["dtilde"]).max()),
+    }}))
+"""
+
+
+def _run_child(cfg: dict) -> dict:
+    env = {**os.environ,
+           "XLA_FLAGS": f"--xla_force_host_platform_device_count={cfg['K']}",
+           "PYTHONPATH": "src" + (
+               os.pathsep + os.environ["PYTHONPATH"]
+               if os.environ.get("PYTHONPATH") else "")}
+    code = textwrap.dedent(_CHILD).format(cfg=json.dumps(cfg))
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=900)
+    if r.returncode != 0:
+        raise RuntimeError(f"K={cfg['K']} child failed:\n{r.stderr[-3000:]}")
+    for line in r.stdout.splitlines():
+        if line.startswith("ROW "):
+            return json.loads(line[4:])
+    raise RuntimeError(f"K={cfg['K']} child printed no ROW:\n{r.stdout}")
+
+
+def run(B: int = 4, n: int = 4096, d: int = 64, m_max: int = 128,
+        devices: tuple[int, ...] = (1, 2, 4, 8), sketch: str = "gaussian",
+        reps: int = 3, seed: int = 0) -> list[dict]:
+    rows = []
+    k_emu = max(devices)
+    for k in devices:
+        row = _run_child({"B": B, "n": n, "d": d, "m_max": m_max, "K": k,
+                          "K_emu": k_emu, "sketch": sketch, "reps": reps,
+                          "seed": seed})
+        emit(row)
+        rows.append(row)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--B", type=int, default=4)
+    ap.add_argument("--n", type=int, default=4096)
+    ap.add_argument("--d", type=int, default=64)
+    ap.add_argument("--m-max", type=int, default=128)
+    ap.add_argument("--devices", default="1,2,4,8")
+    ap.add_argument("--sketch", default="gaussian")
+    ap.add_argument("--reps", type=int, default=3)
+    args = ap.parse_args()
+    run(B=args.B, n=args.n, d=args.d, m_max=args.m_max,
+        devices=tuple(int(x) for x in args.devices.split(",")),
+        sketch=args.sketch, reps=args.reps)
+
+
+if __name__ == "__main__":
+    main()

@@ -51,6 +51,12 @@ for every m_t (ν²Λ ≻ 0 keeps it SPD below d). In exchange for the padded
 d×d factor there is exactly ONE executable and no host round-trips — the
 right trade on real TPU pods where launch latency and recompiles dominate
 at small m.
+
+Sharding: ``mesh=`` row-shards A over the mesh's data axes and swaps ONLY
+the precompute for the sharded one-touch pass (each shard runs its
+family's ladder pass on its rows with independent per-shard randomness;
+ONE psum of the (L, B, d, d) level Grams — ``distributed.shard_level_grams``,
+DESIGN.md §5); the while_loop and all of the above are unchanged.
 """
 
 from __future__ import annotations
@@ -146,7 +152,7 @@ def _gather_pinv(pinvs: jnp.ndarray, level: jnp.ndarray) -> jnp.ndarray:
 
 @partial(jax.jit,
          static_argnames=("m_max", "method", "sketch", "max_iters", "rho",
-                          "gram_hvp"))
+                          "gram_hvp", "mesh"))
 def padded_adaptive_solve_batched(
     q: Quadratic,
     keys: jax.Array,
@@ -158,6 +164,7 @@ def padded_adaptive_solve_batched(
     rho: float = 0.5,
     tol: float = 1e-10,
     gram_hvp: bool | None = None,
+    mesh=None,
 ):
     """One-executable adaptive solve of a batch of B problems.
 
@@ -172,6 +179,17 @@ def padded_adaptive_solve_batched(
     the serving regime (n ≫ d, many iterations), and no more than the
     sketch pass we already pay; large-d problems keep the matrix-free O(nd)
     hvp of the paper.
+
+    ``mesh`` (static): a ``jax.sharding.Mesh`` whose data axes row-shard A
+    (``distributed.shard_quadratic`` places it). The ONLY thing that
+    changes is the precompute: the one-touch ladder pass runs per shard
+    with independent per-shard randomness and combines the (L, B, d, d)
+    level Grams in ONE psum (``distributed.shard_level_grams``,
+    DESIGN.md §5); the while_loop is byte-identical, operating on the
+    replicated d-sized state. With ``gram_hvp`` (the serving default) the
+    AᵀA precompute is the only other data-axis collective and the loop
+    itself is collective-free; matrix-free mode keeps one psum(B·d) per
+    hvp, inserted by GSPMD.
     """
     if not q.batched:
         raise ValueError("use padded_adaptive_solve for single problems")
@@ -181,9 +199,14 @@ def padded_adaptive_solve_batched(
     if _is_single_key(keys):
         keys = jax.random.split(keys, B)
     provider = get_provider(sketch)
-    data = provider.sample(keys, m_max, q.n, q.A.dtype)
     ladder = doubling_ladder(m_max)
-    grams = provider.level_grams(data, q, ladder)
+    if mesh is None:
+        data = provider.sample(keys, m_max, q.n, q.A.dtype)
+        grams = provider.level_grams(data, q, ladder)
+    else:
+        from .distributed import shard_level_grams
+
+        grams = shard_level_grams(provider, keys, q, ladder, mesh)
     pinvs = _precompute_pinvs(grams, q)
     ladder_m = jnp.asarray(ladder, jnp.int32)
     top = len(ladder) - 1

@@ -1,24 +1,41 @@
 """Distributed (row-sharded) quadratic problems and block sketches.
 
 Layout: A ∈ R^{n×d} is row-sharded over the mesh's data axes (the layout
-backbone activations already have under DP), x/b replicated. Then:
+backbone activations already have under DP) — batched problems shard the
+row axis of each problem's (B, n, d) block, shared-A batches shard the one
+(n, d) matrix. x/b/ν/Λ are replicated. Then:
 
-* H·v      = AᵀA v + ν²Λv  — local matmuls + one psum(d) over data axes.
-* sketch   = S·A with *independent per-shard randomness* (block sketching):
-             SA = Σ_k S_k A_k — local sketch + one psum(m×d). For the SRHT
-             this is the block-SRHT (per-shard sign diagonal + FWHT, global
-             row budget split across shards); embedding properties hold up
-             to constants (DESIGN.md §5).
+* H·v      = AᵀA v + ν²Λv  — local matmuls + one psum(d) over data axes
+             (or collective-free in-loop when the Gram is precomputed).
+* sketch   — block sketching with *independent per-shard randomness*
+             (``fold_in(key, shard_index)``), in two equivalent-in-
+             expectation constructions (DESIGN.md §5):
+
+             - **summed** (``block_sketch_gram``): SA = Σ_k S_k A_k, one
+               local sketch + one psum(m×d). Because each S_k is an
+               independent zero-mean embedding with E[S_kᵀS_k] = I on its
+               block, E[(SA)ᵀSA] = Σ_k A_kᵀA_k = AᵀA with NO rescale —
+               cross terms vanish in expectation.
+             - **concatenated** (``shard_level_grams``): S = blockdiag(S_k),
+               so (SA)ᵀ(SA) = Σ_k (S_k A_k)ᵀ(S_k A_k) exactly — each shard
+               runs its family's one-touch ladder pass locally and the
+               (L, B, d, d) level Grams are combined by ONE psum. Again no
+               rescale: per-shard Gaussian entries are already N(0, 1/m),
+               and SJLT/SRHT blocks satisfy E[S_kᵀS_k] = I on their block.
+
 * factorization / iterations — replicated (m, d ≪ n).
 
 Two execution paths, same math:
 
-1. **GSPMD path** (production): jit the plain ``Quadratic`` ops with
-   ``in_shardings`` placing A as P(data_axes, None); XLA inserts the
-   collectives. Used by the dry-run and the large-scale configs.
-2. **shard_map path** (explicit collectives): used where we want manual
-   control of the reduction placement — the sketch+Gram hot path — and by
-   the multi-device tests.
+1. **GSPMD path** (production): jit the solver with A placed
+   P(data_axes, None); XLA inserts the collectives. The padded adaptive
+   engine takes ``mesh=`` (``sharded_padded_solve``) and swaps only its
+   precompute for the explicit one-touch pass below — the in-loop hvp's
+   AᵀA·v reduction is the only per-iteration collective (and none at all
+   when the Gram is precomputed, the serving default).
+2. **shard_map path** (explicit collectives): manual control of the
+   reduction placement for the sketch+Gram hot path — ``shard_level_grams``
+   is what the engine's precompute calls under ``mesh=``.
 """
 
 from __future__ import annotations
@@ -29,9 +46,25 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from .level_grams import LevelGramProvider
 from .precond import factorize
 from .quadratic import Quadratic
 from .sketches import make_sketch
+
+# jax ≥ 0.6 exposes jax.shard_map(check_vma=...); 0.4.x/0.5.x only the
+# experimental entry point with the older check_rep spelling.
+if hasattr(jax, "shard_map"):
+    _shard_map_fn, _CHECK_KW = jax.shard_map, "check_vma"
+else:  # pragma: no cover - depends on installed jax
+    from jax.experimental.shard_map import shard_map as _shard_map_fn
+
+    _CHECK_KW = "check_rep"
+
+
+def _smap(f, mesh: Mesh, in_specs, out_specs):
+    """shard_map with replication checking off, on every supported jax."""
+    return _shard_map_fn(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, **{_CHECK_KW: False})
 
 
 def data_axes(mesh: Mesh) -> tuple[str, ...]:
@@ -39,21 +72,114 @@ def data_axes(mesh: Mesh) -> tuple[str, ...]:
     return tuple(a for a in mesh.axis_names if a != "model")
 
 
-def shard_quadratic(q: Quadratic, mesh: Mesh) -> Quadratic:
-    """Place A row-sharded over the data axes, everything else replicated."""
+def n_data_shards(mesh: Mesh) -> int:
+    """Number of row shards = product of the data-axis sizes."""
+    k = 1
+    for a in data_axes(mesh):
+        k *= mesh.shape[a]
+    return k
+
+
+def _a_row_spec(q: Quadratic, mesh: Mesh) -> P:
+    """PartitionSpec sharding A's row axis over the data axes."""
     da = data_axes(mesh)
-    a_sh = NamedSharding(mesh, P(da, None))
+    if q.batched and not q.shared_A:
+        return P(None, da, None)          # (B, n, d): shard axis 1
+    return P(da, None)                    # (n, d): shard axis 0
+
+
+def shard_quadratic(q: Quadratic, mesh: Mesh) -> Quadratic:
+    """Place A row-sharded over the data axes, everything else replicated.
+
+    Works for single problems, per-problem batches (B, n, d) and shared-A
+    batches alike; the ``batched`` flag is preserved."""
+    a_sh = NamedSharding(mesh, _a_row_spec(q, mesh))
     rep = NamedSharding(mesh, P())
     return Quadratic(
         A=jax.device_put(q.A, a_sh),
         b=jax.device_put(q.b, rep),
         nu=jax.device_put(q.nu, rep),
         lam_diag=jax.device_put(q.lam_diag, rep),
+        batched=q.batched,
     )
 
 
+def _check_divisible(n: int, mesh: Mesh) -> int:
+    k = n_data_shards(mesh)
+    if n % k:
+        raise ValueError(f"n={n} not divisible by {k} data shards")
+    return k
+
+
 # ---------------------------------------------------------------------------
-# Explicit shard_map path for the sketch + factorize hot path
+# Sharded one-touch ladder precompute (the padded engine's mesh= path)
+# ---------------------------------------------------------------------------
+
+def shard_level_grams(
+    provider: LevelGramProvider,
+    keys: jax.Array,
+    q: Quadratic,
+    ladder: tuple[int, ...],
+    mesh: Mesh,
+) -> jnp.ndarray:
+    """(L, B, d, d) ladder-level Grams of the *concatenated* block sketch.
+
+    Each data shard runs the family's one-touch pass — streamed gaussian /
+    sjlt fold / srht FWHT — on its local row block A_k with independent
+    randomness ``fold_in(keys[b], shard_index)``, producing the local
+    partial Grams (S_m^{(k)} A_k)ᵀ(S_m^{(k)} A_k) at every ladder level;
+    ONE psum over the data axes yields the global Grams, because the
+    concatenated sketch S_m = blockdiag(S_m^{(1)}, …, S_m^{(K)}) has
+
+        (S_m A)ᵀ(S_m A) = Σ_k (S_m^{(k)} A_k)ᵀ(S_m^{(k)} A_k)
+
+    exactly (no cross terms), and each block is already correctly
+    normalized (Gaussian entries N(0, 1/m); E[S_kᵀS_k] = I for SJLT/SRHT)
+    so NO per-shard rescale is applied (DESIGN.md §5). Per shard nothing
+    larger than the (L, B, d, d) Gram stack and the family's local
+    O(B·m_max·d) row stream is materialized, and the psum payload is
+    exactly L·B·d² per level stack.
+
+    ``keys`` must be a (B,)-batch of per-problem keys (the engine splits a
+    single key before calling); ``q`` must be batched, with n divisible by
+    the data-shard count.
+    """
+    if not q.batched:
+        raise ValueError("shard_level_grams expects a batched Quadratic")
+    da = data_axes(mesh)
+    _check_divisible(q.n, mesh)
+    m_max = ladder[-1]
+
+    def local_pass(A_blk, b, nu, lam, ks):
+        idx = jax.lax.axis_index(da)
+        k_loc = jax.vmap(lambda k: jax.random.fold_in(k, idx))(ks)
+        q_loc = Quadratic(A=A_blk, b=b, nu=nu, lam_diag=lam, batched=True)
+        data = provider.sample(k_loc, m_max, A_blk.shape[-2], A_blk.dtype)
+        g = provider.level_grams(data, q_loc, ladder)
+        return jax.lax.psum(g, axis_name=da)
+
+    fn = _smap(
+        local_pass, mesh,
+        in_specs=(_a_row_spec(q, mesh), P(), P(), P(), P()),
+        out_specs=P(),
+    )
+    return fn(q.A, q.b, q.nu, q.lam_diag, keys)
+
+
+def sharded_padded_solve(q: Quadratic, keys: jax.Array, mesh: Mesh, **kw):
+    """GSPMD path: place a batched problem's A over the mesh's data axes
+    and run the padded adaptive engine with the sharded one-touch
+    precompute (``mesh=`` swaps only the provider call; the while_loop is
+    unchanged and the in-loop hvp's AᵀA·v reduction — when ``gram_hvp`` is
+    off — is the only per-iteration collective)."""
+    from .adaptive_padded import padded_adaptive_solve_batched
+
+    qd = shard_quadratic(q, mesh)
+    return padded_adaptive_solve_batched(qd, keys, mesh=mesh, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Explicit shard_map path for the summed block sketch + factorize
 # ---------------------------------------------------------------------------
 
 def block_sketch_gram(
@@ -70,32 +196,23 @@ def block_sketch_gram(
     Returns the replicated (m, d) sketched matrix. The per-shard sketch uses
     ``jax.random.fold_in(key, shard_index)`` so shards are independent, and
     the row budget m is kept global (each shard contributes to all m rows —
-    this is summing sketches, not concatenating).
+    this is summing sketches, not concatenating). No rescale is applied:
+    each S_k has E[S_kᵀS_k] = I on its block and the blocks are independent
+    and zero-mean, so E[(SA)ᵀSA] = Σ_k A_kᵀA_k = AᵀA already. (A previous
+    revision divided by √K, which shrank the sketched Gram — and therefore
+    the AᵀA part of the preconditioner H_S — K-fold; the regression test in
+    tests/test_sharded.py pins the corrected normalization.)
     """
     da = data_axes(mesh)
-    n_shards = 1
-    for a in da:
-        n_shards *= mesh.shape[a]
-    n = A.shape[0]
-    if n % n_shards:
-        raise ValueError(f"n={n} not divisible by {n_shards} data shards")
+    _check_divisible(A.shape[0], mesh)
 
     def local_sketch(A_blk: jnp.ndarray) -> jnp.ndarray:
         idx = jax.lax.axis_index(da)
         k = jax.random.fold_in(key, idx)
         sk = make_sketch(kind, m, A_blk.shape[0], k, dtype=A_blk.dtype, s=s)
-        partial_SA = sk.apply(A_blk) / jnp.sqrt(
-            jnp.asarray(n_shards, A_blk.dtype)
-        )
-        return jax.lax.psum(partial_SA, axis_name=da)
+        return jax.lax.psum(sk.apply(A_blk), axis_name=da)
 
-    fn = jax.shard_map(
-        local_sketch,
-        mesh=mesh,
-        in_specs=P(da, None),
-        out_specs=P(),
-        check_vma=False,
-    )
+    fn = _smap(local_sketch, mesh, in_specs=P(da, None), out_specs=P())
     return fn(A)
 
 
@@ -112,12 +229,18 @@ def distributed_sketch_and_factorize(
 # these and XLA inserts the data-axis collectives.
 # ---------------------------------------------------------------------------
 
-def quadratic_shardings(mesh: Mesh) -> Quadratic:
-    """Sharding pytree matching Quadratic: A row-sharded, rest replicated."""
+def quadratic_shardings(mesh: Mesh, q: Quadratic | None = None) -> Quadratic:
+    """Sharding pytree matching Quadratic: A row-sharded, rest replicated.
+
+    Pass ``q`` to pick the batched layouts (per-problem A shards axis 1);
+    without it the single-problem (n, d) layout is assumed."""
     da = data_axes(mesh)
+    a_spec = _a_row_spec(q, mesh) if q is not None else P(da, None)
+    batched = bool(q.batched) if q is not None else False
     return Quadratic(
-        A=NamedSharding(mesh, P(da, None)),
+        A=NamedSharding(mesh, a_spec),
         b=NamedSharding(mesh, P()),
         nu=NamedSharding(mesh, P()),
         lam_diag=NamedSharding(mesh, P()),
+        batched=batched,
     )

@@ -159,7 +159,16 @@ class SJLTProvider:
 
 
 class SRHTProvider:
-    """SRHT ladder: one FWHT pass, level-m = first m of a fixed row stream."""
+    """SRHT ladder: one FWHT pass, level-m = first m of a fixed row stream.
+
+    Row-sampling law: rows are i.i.d. uniform over the padded index space
+    WITH replacement (``randint``) — a prefix of an i.i.d. stream is a
+    valid m-row sample for EVERY ladder level, which is what makes the
+    one-touch ladder work. ``kernels.ops.srht_sketch`` (the fixed-size
+    sketch) instead samples WITHOUT replacement, the classical SRHT; both
+    satisfy E[SᵀS] = I, and the laws agree in the sparse regime
+    m ≪ n_pad where collisions are rare. Pinned by tests/test_sharded.py.
+    """
 
     name = "srht"
 
@@ -186,6 +195,47 @@ class SRHTProvider:
         return prefix_level_grams(picked, ladder, inv_m_scale=True)
 
 
+class BlockEmulationProvider:
+    """Single-device emulation of the sharded *concatenated* block sketch
+    (DESIGN.md §5): shard k applies ``inner`` with ``fold_in(key, k)``
+    randomness to rows [k·n/K, (k+1)·n/K) and the level Grams sum — the
+    replicated reference for ``distributed.shard_level_grams`` (identical
+    math, identical per-shard keys, no mesh), used by the multi-device
+    tests and as the 1-device baseline in ``benchmarks/bench_sharded.py``.
+    Pass the instance itself as the engine's ``sketch=``."""
+
+    def __init__(self, inner: "LevelGramProvider | str", n_shards: int):
+        self.inner = get_provider(inner)
+        self.n_shards = n_shards
+        self.name = f"block[{self.inner.name}x{n_shards}]"
+
+    def _check(self, n: int) -> int:
+        if n % self.n_shards:
+            raise ValueError(
+                f"n={n} not divisible by {self.n_shards} emulated shards")
+        return n // self.n_shards
+
+    def sample(self, keys, m_max, n, dtype):
+        n_loc = self._check(n)
+        return {"shards": [
+            self.inner.sample(
+                jax.vmap(lambda kb: jax.random.fold_in(kb, k))(keys),
+                m_max, n_loc, dtype)
+            for k in range(self.n_shards)
+        ]}
+
+    def level_grams(self, data, q, ladder):
+        n_loc = self._check(q.n)
+        out = None
+        for k, dk in enumerate(data["shards"]):
+            A_k = q.A[..., k * n_loc:(k + 1) * n_loc, :]
+            q_k = Quadratic(A=A_k, b=q.b, nu=q.nu, lam_diag=q.lam_diag,
+                            batched=q.batched)
+            g_k = self.inner.level_grams(dk, q_k, ladder)
+            out = g_k if out is None else out + g_k
+        return out
+
+
 _PROVIDERS: dict[str, LevelGramProvider] = {
     p.name: p for p in (
         GaussianStreamedProvider(),
@@ -198,8 +248,11 @@ _PROVIDERS: dict[str, LevelGramProvider] = {
 PADDED_SKETCHES = tuple(_PROVIDERS)
 
 
-def get_provider(sketch: str) -> LevelGramProvider:
-    """Resolve a sketch-family name to its (stateless) provider."""
+def get_provider(sketch) -> LevelGramProvider:
+    """Resolve a sketch-family name to its (stateless) provider; provider
+    instances (e.g. a ``BlockEmulationProvider``) pass through unchanged."""
+    if not isinstance(sketch, str):
+        return sketch
     try:
         return _PROVIDERS[sketch]
     except KeyError:

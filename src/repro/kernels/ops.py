@@ -123,7 +123,17 @@ def fwht_cols(X: jnp.ndarray, *, use_pallas: bool | None = None,
 def srht_sketch(A: jnp.ndarray, key: jax.Array, m: int, *,
                 use_pallas: bool | None = None,
                 interpret: bool | None = None) -> jnp.ndarray:
-    """Full SRHT sketch √(n_pad/m)·R·H·E·A using the FWHT kernel."""
+    """Full SRHT sketch √(n_pad/m)·R·H·E·A using the FWHT kernel.
+
+    Row-sampling law: the m rows of H are sampled WITHOUT replacement
+    (``jax.random.choice``, the classical SRHT — every row distinct while
+    m ≤ n_pad), which has slightly better embedding constants at large
+    m/n_pad. This deliberately differs from ``level_grams.SRHTProvider``,
+    whose rows are i.i.d. uniform WITH replacement: the ladder needs a
+    fixed row *stream* whose every prefix is a valid sample, and prefixes
+    of a without-replacement draw are not exchangeable across levels.
+    Both are unbiased (E[SᵀS] = I); tests/test_sharded.py pins the two
+    laws."""
     n, d = A.shape
     n_pad = 1 << max(0, (n - 1).bit_length())
     k_sign, k_rows = jax.random.split(key)

@@ -10,7 +10,11 @@ heterogeneous ridge-solve requests, bucketed into shape classes and solved
 in fixed-shape batches by the multi-problem adaptive engine
 (serve/solver_service.py, DESIGN.md §6):
 
-    PYTHONPATH=src python -m repro.launch.serve --ridge --requests 64
+    PYTHONPATH=src python -m repro.launch.serve --ridge --requests 64 \
+        --ridge-batch 16 [--sketch srht] [--mesh 8]
+
+(``--ridge-batch`` sizes the packed solver batches; ``--mesh K`` runs the
+sharded engine over a K-device data mesh — see DESIGN.md §5.)
 """
 
 from __future__ import annotations
@@ -29,13 +33,23 @@ from repro.serve.step import greedy_generate
 
 def serve_ridge(args):
     """Ridge-solve serving demo: random-shape requests through the
-    shape-class bucketing + batched adaptive engine."""
+    shape-class bucketing + batched adaptive engine. ``--mesh K`` places
+    each packed batch's A row-sharded over a K-device data mesh (run under
+    XLA_FLAGS=--xla_force_host_platform_device_count=K to demo on CPU)."""
     import numpy as np
 
     from repro.serve.solver_service import SolverService
 
-    svc = SolverService(batch_size=args.batch if args.batch > 1 else 16,
-                        method="pcg", sketch=args.sketch)
+    mesh = None
+    if args.mesh:
+        if args.mesh > jax.device_count():
+            raise SystemExit(
+                f"--mesh {args.mesh} needs {args.mesh} devices but only "
+                f"{jax.device_count()} exist; on CPU set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={args.mesh}")
+        mesh = jax.make_mesh((args.mesh,), ("data",))
+    svc = SolverService(batch_size=args.ridge_batch, method="pcg",
+                        sketch=args.sketch, mesh=mesh)
     rng = np.random.default_rng(0)
     truth = {}
     for i in range(args.requests):
@@ -52,10 +66,13 @@ def serve_ridge(args):
         print("ridge service: no requests")
         return
     m_finals = [s.m_final for s in sols.values()]
+    mesh_note = f", {args.mesh}-way data mesh" if mesh is not None else ""
     print(f"ridge service: {args.requests} requests in {dt:.2f}s "
           f"({args.requests / dt:.1f} req/s incl. compile) — "
-          f"{svc.stats['batches']} batches, "
-          f"{svc.stats['padded_slots']} padded slots")
+          f"{svc.stats['batches']} batches of {svc.batch_size}, "
+          f"{svc.stats['padded_slots']} padded slots "
+          f"({100 * svc.slot_utilization():.0f}% slot utilization"
+          f"{mesh_note})")
     fams = sorted({s.sketch for s in sols.values()})
     print(f"certificates ({'/'.join(fams)}): m_final min/median/max = "
           f"{min(m_finals)}/{sorted(m_finals)[len(m_finals) // 2]}/"
@@ -63,11 +80,12 @@ def serve_ridge(args):
           f"max residual δ̃ = {max(s.delta_tilde for s in sols.values()):.2e}")
 
 
-def main(argv=None):
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-0.5b")
     ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="LM-decode batch size (NOT the ridge batch)")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--ckpt-dir", default="",
@@ -76,12 +94,23 @@ def main(argv=None):
                     help="serve ridge-solve requests instead of LM decode")
     ap.add_argument("--requests", type=int, default=48,
                     help="number of synthetic ridge requests (--ridge)")
+    ap.add_argument("--ridge-batch", type=int, default=16,
+                    help="packed batch size per shape class (--ridge); "
+                         "its own flag so the LM --batch default of 4 "
+                         "cannot silently leave 3/4 of the slots padded")
+    ap.add_argument("--mesh", type=int, default=0,
+                    help="row-shard each packed batch's A over this many "
+                         "data-mesh devices (--ridge); 0 = single device")
     from repro.core.level_grams import PADDED_SKETCHES
 
     ap.add_argument("--sketch", default="gaussian",
                     choices=PADDED_SKETCHES,
                     help="sketch family for the ridge service (--ridge)")
-    args = ap.parse_args(argv)
+    return ap
+
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
 
     if args.ridge:
         return serve_ridge(args)

@@ -30,6 +30,7 @@ CPU-scale demo wiring lives in ``launch/serve.py --ridge`` and
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Iterable, NamedTuple
 
@@ -37,6 +38,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.adaptive_padded import padded_adaptive_solve_batched
+from repro.core.distributed import n_data_shards, shard_quadratic
 from repro.core.quadratic import Quadratic
 
 
@@ -60,6 +62,16 @@ DEFAULT_SHAPE_CLASSES = (
     ShapeClass(n=4096, d=256, m_max=512),
     # large-n tail: viable only with streaming sketch→Gram providers
     ShapeClass(n=16384, d=256, m_max=512, sketch="srht"),
+)
+
+# Sharded services (mesh=...) additionally serve the pod-scale tail: a
+# single device cannot hold the packed (B, n, d) batch at n=65536, but
+# each data shard only sees n/K rows and the one-touch pass psums the
+# (L, B, d, d) level Grams (DESIGN.md §5). This is the default for
+# SolverService(mesh=...); a mesh-less service keeps rejecting such
+# requests with the clear "no shape class fits" error.
+SHARDED_SHAPE_CLASSES = DEFAULT_SHAPE_CLASSES + (
+    ShapeClass(n=65536, d=256, m_max=512, sketch="srht"),
 )
 
 
@@ -91,12 +103,23 @@ class SolverService:
     ``submit`` enqueues; ``flush`` drains every bucket in fixed-size batches
     through one compiled executable per shape class and returns solutions
     keyed by request id. The service is deterministic: request k is solved
-    with ``fold_in(base_key, k)`` regardless of what it is packed with.
+    with ``fold_in(base_key, k)`` regardless of what it is packed with;
+    padded slots draw from the reserved top-of-range id stream
+    ``fold_in(base_key, 2³²−1−slot)`` — disjoint from any realistic
+    request id — so a padded slot can never alias a real request's sketch
+    (previously every padded slot shared the all-zeros key).
+
+    ``mesh``: a ``jax.sharding.Mesh`` turns on the sharded mode — each
+    packed batch's A is placed row-sharded over the mesh's data axes and
+    the engine runs with ``mesh=`` (the sharded one-touch ladder precompute
+    + GSPMD loop, DESIGN.md §5). Every shape class's n must divide by the
+    data-shard count; the large-n tail classes only fit devices at all
+    this way.
     """
 
     def __init__(
         self,
-        shape_classes: Iterable[ShapeClass] = DEFAULT_SHAPE_CLASSES,
+        shape_classes: Iterable[ShapeClass] | None = None,
         *,
         batch_size: int = 16,
         method: str = "pcg",
@@ -105,7 +128,13 @@ class SolverService:
         tol: float = 1e-10,
         max_iters: int = 200,
         seed: int = 0,
+        mesh=None,
     ):
+        if shape_classes is None:
+            # the pod-scale n=65536 tail only exists where the batch is
+            # actually sharded; a 1-device service must keep failing fast
+            shape_classes = (SHARDED_SHAPE_CLASSES if mesh is not None
+                             else DEFAULT_SHAPE_CLASSES)
         self.shape_classes = sorted(shape_classes,
                                     key=lambda c: (c.n, c.d, c.m_max))
         self.batch_size = batch_size
@@ -114,12 +143,27 @@ class SolverService:
         self.rho = rho
         self.tol = tol
         self.max_iters = max_iters
+        self.mesh = mesh
+        if mesh is not None:
+            k = n_data_shards(mesh)
+            bad = [c for c in self.shape_classes if c.n % k]
+            if bad:
+                raise ValueError(
+                    f"shape classes {bad} have n not divisible by the "
+                    f"mesh's {k} data shards")
         self._base_key = jax.random.PRNGKey(seed)
         self._queues: dict[ShapeClass, list[RidgeRequest]] = {
             c: [] for c in self.shape_classes}
         self._next_id = 0
         self.stats = {"requests": 0, "batches": 0, "padded_slots": 0,
                       "solve_seconds": 0.0}
+
+    def slot_utilization(self) -> float:
+        """Fraction of solved batch slots that held a real request."""
+        total = self.stats["batches"] * self.batch_size
+        if not total:
+            return 1.0
+        return 1.0 - self.stats["padded_slots"] / total
 
     # -- bucketing ---------------------------------------------------------
     def bucket_for(self, n: int, d: int) -> ShapeClass:
@@ -132,10 +176,25 @@ class SolverService:
             f"largest is {self.shape_classes[-1]}")
 
     def submit(self, A, y, nu, lam_diag=None) -> int:
-        """Enqueue one ridge problem; returns its request id."""
+        """Enqueue one ridge problem; returns its request id.
+
+        ν must be a positive finite float: the service pads requests to the
+        class shape with zero A-columns and Λ = 1 on padded coordinates, so
+        H restricted to the padded block is ν²·I — with ν = 0 that block is
+        singular, its Cholesky is NaN, and the NaN silently poisons the
+        problem's solution AND its δ̃/m_final certificates (no exception is
+        ever raised inside the jitted engine). Rejecting here is the only
+        place the failure is observable before it becomes a wrong answer.
+        """
+        nu = float(nu)
+        if not math.isfinite(nu) or nu <= 0.0:
+            raise ValueError(
+                f"nu must be a positive finite float, got {nu!r}: padded "
+                "coordinates carry H = ν²·I, so ν = 0 makes the padded "
+                "block singular and NaN-poisons the certificates")
         A = jnp.asarray(A)
         y = jnp.asarray(y)
-        req = RidgeRequest(req_id=self._next_id, A=A, y=y, nu=float(nu),
+        req = RidgeRequest(req_id=self._next_id, A=A, y=y, nu=nu,
                            lam_diag=lam_diag)
         self._next_id += 1
         self._queues[self.bucket_for(*A.shape)].append(req)
@@ -149,7 +208,11 @@ class SolverService:
 
         Staged in host numpy buffers (in-place writes) with ONE device
         transfer per field — out-of-jit `.at[i].set` would copy the full
-        padded batch buffer once per request."""
+        padded batch buffer once per request. Per-slot keys are one vmapped
+        ``fold_in`` over the slot-id vector (real slots: req_id; padded
+        slots: the reserved top-of-range id 2³²−1−slot, so padding never
+        aliases a real request's sketch) — no per-request host↔device
+        round trips."""
         import numpy as np
 
         B = self.batch_size
@@ -158,8 +221,6 @@ class SolverService:
         b = np.zeros((B, cls.d), dtype)
         nu = np.ones((B,), dtype)
         lam = np.ones((B, cls.d), dtype)
-        keys = np.zeros((B,) + self._base_key.shape,
-                        np.asarray(self._base_key).dtype)
         for i, r in enumerate(reqs):
             ni, di = r.A.shape
             A[i, :ni, :di] = np.asarray(r.A, dtype)
@@ -167,11 +228,16 @@ class SolverService:
             nu[i] = r.nu
             if r.lam_diag is not None:
                 lam[i, :di] = np.asarray(r.lam_diag, dtype)
-            keys[i] = np.asarray(
-                jax.random.fold_in(self._base_key, r.req_id))
+        slot_ids = jnp.asarray(
+            [r.req_id for r in reqs]
+            + [0xFFFFFFFF - s for s in range(len(reqs), B)], jnp.uint32)
+        keys = jax.vmap(
+            lambda i: jax.random.fold_in(self._base_key, i))(slot_ids)
         q = Quadratic(A=jnp.asarray(A), b=jnp.asarray(b), nu=jnp.asarray(nu),
                       lam_diag=jnp.asarray(lam), batched=True)
-        return q, jnp.asarray(keys)
+        if self.mesh is not None:
+            q = shard_quadratic(q, self.mesh)
+        return q, keys
 
     # -- solving -----------------------------------------------------------
     def flush(self) -> dict[int, RidgeSolution]:
@@ -189,7 +255,8 @@ class SolverService:
         t0 = time.perf_counter()
         x, stats = padded_adaptive_solve_batched(
             q, keys, m_max=cls.m_max, method=self.method, sketch=sketch,
-            max_iters=self.max_iters, rho=self.rho, tol=self.tol)
+            max_iters=self.max_iters, rho=self.rho, tol=self.tol,
+            mesh=self.mesh)
         x = jax.block_until_ready(x)
         self.stats["solve_seconds"] += time.perf_counter() - t0
         self.stats["batches"] += 1
