@@ -1,0 +1,121 @@
+"""GLM sketched-Newton driver vs unpreconditioned Newton-CG (DESIGN.md §8).
+
+The serving question for the GLM layer: given a batch of B logistic-ridge
+problems, how much does the adaptively-sketched inner preconditioner buy
+over the standard matrix-free baseline (Newton with plain CG inner solves,
+the same outer line-searched loop)? Also reports the adaptivity evidence:
+the warm-started per-step m trajectory next to the weighted effective
+dimension d_e(W) at the solution — the quantity Theorem 5-style bounds say
+the adapted m should track (computed by the exact-eigen oracle
+``effective_dimension_weighted_exact``; the solver itself never needs it).
+
+Note on theory columns: where d_e(W) is turned into a predicted m via
+``m_delta_sjlt``-style Table-1 forms, the leading constant is implicitly 1
+(the paper states only the order) — treat any such column as an order-of-
+magnitude anchor, not a sharp prediction (see m_delta_sjlt's docstring).
+
+    PYTHONPATH=src python benchmarks/bench_newton.py [--B 8] [--reps 3]
+
+Emits one CSV-ish row per (family, sketch); rows land in BENCH_solver.json
+via ``run.py --json --only newton``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.effective_dim import effective_dimension_weighted_exact
+from repro.core.newton import (
+    adaptive_newton_solve_batched,
+    newton_cg_reference,
+)
+from repro.core.objectives import get_objective, glm_grad_and_weights
+from repro.core.quadratic import _as_batched_reg
+
+
+def logistic_batch(B: int, n: int, d: int, seed: int = 0):
+    """Shared data law (``objectives.synthetic_logistic_batch``), at
+    scale 1.5 so the margins saturate and the Hessian weights vary across
+    rows — the thing the weighted sketch has to get right."""
+    from repro.core.objectives import synthetic_logistic_batch
+
+    return synthetic_logistic_batch(jax.random.PRNGKey(seed), B, n, d,
+                                    scale=1.5)
+
+
+def time_best(fn, reps: int) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(B: int = 8, n: int = 2048, d: int = 64, m_max: int = 128,
+        reps: int = 3, nu: float = 0.3, seed: int = 7) -> list[dict]:
+    A, Y = logistic_batch(B, n, d, seed=seed)
+    keys = jax.random.PRNGKey(seed)
+    rows = []
+    for family, sketch in [("logistic", "gaussian"), ("logistic", "sjlt")]:
+        solve = lambda: adaptive_newton_solve_batched(
+            family, A, Y, nu, m_max=m_max, sketch=sketch, keys=keys)[0]
+        x, stats = adaptive_newton_solve_batched(      # warm + certificates
+            family, A, Y, nu, m_max=m_max, sketch=sketch, keys=keys)
+        t_newton = time_best(solve, reps)
+
+        cg = lambda: newton_cg_reference(family, A, Y, nu, cg_iters=200)
+        x_cg = jax.block_until_ready(cg())             # warm-up IS the result
+        t_cg = time_best(cg, reps)
+        rel = float(jnp.max(jnp.linalg.norm(x - x_cg, axis=1)
+                            / (jnp.linalg.norm(x_cg, axis=1) + 1e-30)))
+
+        # weighted effective dimension at the solution, per problem
+        obj = get_objective(family)
+        nu_b, lam_b = _as_batched_reg(nu, None, B, d, A.dtype)
+        _, w = glm_grad_and_weights(obj, A, Y, nu_b, lam_b, x)
+        d_e = [effective_dimension_weighted_exact(A[i], w[i], nu)
+               for i in range(B)]
+        mf = np.asarray(stats["m_final"])
+        outer = np.asarray(stats["newton_iters"])
+        traj0 = stats["m_trajectory"][:, 0]
+        row = {
+            "bench": "newton_glm", "family": family, "sketch": sketch,
+            "B": B, "n": n, "d": d, "m_max": m_max, "nu": nu, "seed": seed,
+            "newton_s": round(t_newton, 4),
+            "newton_cg_s": round(t_cg, 4),
+            "speedup_vs_newton_cg": round(t_cg / t_newton, 2),
+            "max_rel_err_vs_cg": float(f"{rel:.2e}"),
+            "outer_iters_max": int(outer.max()),
+            "m_final_min": int(mf.min()), "m_final_max": int(mf.max()),
+            "m_traj_p0": "/".join(str(int(m)) for m in traj0 if m > 0),
+            "d_e_w_min": round(min(d_e), 1),
+            "d_e_w_max": round(max(d_e), 1),
+            "max_decrement": float(
+                f"{float(jnp.max(stats['decrement'])):.2e}"),
+            "all_converged": bool(np.all(np.asarray(stats["converged"]))),
+        }
+        emit(row)
+        rows.append(row)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--B", type=int, default=8)
+    ap.add_argument("--n", type=int, default=2048)
+    ap.add_argument("--d", type=int, default=64)
+    ap.add_argument("--m-max", type=int, default=128)
+    ap.add_argument("--reps", type=int, default=3)
+    args = ap.parse_args()
+    run(B=args.B, n=args.n, d=args.d, m_max=args.m_max, reps=args.reps)
+
+
+if __name__ == "__main__":
+    main()

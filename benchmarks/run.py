@@ -26,7 +26,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma list: fig1,table1,table2,table3,fig4,"
-                         "kernels,batched,sketch_gram,sharded")
+                         "kernels,batched,sketch_gram,sharded,newton")
     ap.add_argument("--fast", action="store_true",
                     help="smaller grids (CI-scale)")
     ap.add_argument("--json", action="store_true",
@@ -34,9 +34,10 @@ def main() -> None:
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
-    from . import (bench_batched, bench_sharded, bench_sketch_gram,
-                   fig1_synthetic, fig4_realistic, kernels_bench,
-                   table1_mdelta, table2_complexity, table3_polyak)
+    from . import (bench_batched, bench_newton, bench_sharded,
+                   bench_sketch_gram, fig1_synthetic, fig4_realistic,
+                   kernels_bench, table1_mdelta, table2_complexity,
+                   table3_polyak)
 
     jobs = {
         "fig1": lambda: fig1_synthetic.run(
@@ -61,6 +62,11 @@ def main() -> None:
             B=2 if args.fast else 4, d=64 if args.fast else 128,
             m_max=128 if args.fast else 512,
             ns=(1024, 2048) if args.fast else (2048, 8192),
+            reps=1 if args.fast else 3,
+        ),
+        "newton": lambda: bench_newton.run(
+            B=4 if args.fast else 8, n=512 if args.fast else 2048,
+            d=24 if args.fast else 64, m_max=48 if args.fast else 128,
             reps=1 if args.fast else 3,
         ),
         "sharded": lambda: bench_sharded.run(

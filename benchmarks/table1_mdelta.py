@@ -42,6 +42,11 @@ def run(n=4096, d=512, rho=0.25, reps=3):
     theory = {
         "gaussian": lambda de: m_delta_gaussian(de) / rho_g,
         "srht": lambda de: m_delta_srht(de, n) / rho,
+        # m_delta_sjlt is the Table-1 O(d_e²/δ) form with the implicit
+        # leading constant taken as EXACTLY 1 (the paper states only the
+        # order): the sjlt theory column is an order-of-magnitude upper
+        # bound, not a sharp prediction — a different constant would
+        # rescale it verbatim. See m_delta_sjlt's docstring.
         "sjlt": lambda de: m_delta_sjlt(de) / rho,
     }
     rows = []

@@ -10,9 +10,12 @@ Layout:
                     batch-polymorphic multi-problem engine (DESIGN.md §6)
   effective_dim.py  d_e and critical sketch sizes (Table 1 / Thm 5.1)
   distributed.py    row-sharded A: block sketches + GSPMD solver steps
+  objectives.py     regularized GLM losses (logistic/poisson/huber/quadratic)
+  newton.py         adaptive sketched-Newton driver over the padded engine
 
 Every core op accepts an optional leading problem axis (batched
-``Quadratic``) — see quadratic.py and DESIGN.md §6.
+``Quadratic``) — see quadratic.py and DESIGN.md §6. Weighted Grams AᵀWA
+(GLM Newton systems) ride through ``Quadratic.row_weights`` — DESIGN.md §8.
 """
 
 from .adaptive import AdaptiveConfig, AdaptiveResult, adaptive_solve, k_max
@@ -20,11 +23,19 @@ from .adaptive_padded import padded_adaptive_solve, padded_adaptive_solve_batche
 from .effective_dim import (
     effective_dimension,
     effective_dimension_exact,
+    effective_dimension_weighted_exact,
     exp_decay_singular_values,
     m_delta_gaussian,
     m_delta_sjlt,
     m_delta_srht,
 )
+from .newton import (
+    adaptive_newton_solve,
+    adaptive_newton_solve_batched,
+    irls_reference,
+    newton_cg_reference,
+)
+from .objectives import GLM_FAMILIES, GLMObjective, get_objective
 from .precond import SketchedPrecond, factorize, factorize_shared
 from .quadratic import (
     Quadratic,
@@ -33,6 +44,7 @@ from .quadratic import (
     from_least_squares_batch,
     lambda_sweep,
     stack_quadratics,
+    weighted_gram,
 )
 from .sketches import Sketch, fwht, make_sketch
 from .solvers import cg_solve, newton_solve, run_fixed
@@ -46,6 +58,7 @@ __all__ = [
     "k_max",
     "effective_dimension",
     "effective_dimension_exact",
+    "effective_dimension_weighted_exact",
     "exp_decay_singular_values",
     "m_delta_gaussian",
     "m_delta_sjlt",
@@ -59,6 +72,14 @@ __all__ = [
     "from_least_squares_batch",
     "lambda_sweep",
     "stack_quadratics",
+    "weighted_gram",
+    "GLM_FAMILIES",
+    "GLMObjective",
+    "get_objective",
+    "adaptive_newton_solve",
+    "adaptive_newton_solve_batched",
+    "irls_reference",
+    "newton_cg_reference",
     "Sketch",
     "fwht",
     "make_sketch",

@@ -83,11 +83,16 @@ def _step_state(q: Quadratic, P: SketchedPrecond, st, method: str, rho: float):
 @partial(jax.jit, static_argnames=("kind", "m", "s"))
 def _sketch_and_factorize(q: Quadratic, key, kind: str, m: int, s: int
                           ) -> SketchedPrecond:
+    # Weighted problems sketch W^{1/2}A so H_S estimates AᵀWA + ν²Λ. The
+    # host path may materialize the weighted matrix (it is small-scale by
+    # design); the streaming-fused weighted pass is the padded engine's.
+    A = (q.A if q.row_weights is None
+         else jnp.sqrt(q.row_weights)[:, None] * q.A)
     if m >= q.n:
         # Graceful ceiling: S = I_n makes H_S = H exactly (one-step solve).
-        return factorize(q.A, q.nu, q.lam_diag)
-    sk = make_sketch(kind, m, q.n, key, dtype=q.A.dtype, s=s)
-    SA = sk.apply(q.A)
+        return factorize(A, q.nu, q.lam_diag)
+    sk = make_sketch(kind, m, q.n, key, dtype=A.dtype, s=s)
+    SA = sk.apply(A)
     return factorize(SA, q.nu, q.lam_diag)
 
 

@@ -32,9 +32,16 @@ every m and pow2 levels fold pairwise from ONE dispatch), and ``srht``
 (one sign flip + one FWHT pass; level-m = the first m rows of a fixed
 uniform row-sample stream).
 
-Methods: ``ihs`` (Thm 3.2 thresholds: φ(ρ)=ρ, α=1) and ``pcg``
-(Alg 4.2 thresholds: φ(ρ)=(1−√(1−ρ))/(1+√(1−ρ)), α=4); the method restarts
-at the current iterate on every doubling, as in Algorithm 4.1.
+Methods: ``ihs`` (Thm 3.2 thresholds: φ(ρ)=ρ, α=1), ``pcg``
+(Alg 4.2 thresholds: φ(ρ)=(1−√(1−ρ))/(1+√(1−ρ)), α=4) and ``polyak``
+(heavy-ball, Appendix A — same thresholds as PCG, with the momentum
+anchor x_prev reset on every doubling); the method restarts at the
+current iterate on every doubling, as in Algorithm 4.1.
+
+Weighted problems (``q.row_weights``) and warm-started ladders
+(``init_level``) serve the GLM Newton driver (``core.newton``,
+DESIGN.md §8): the sketch pass embeds W^{1/2}A in the same one touch of A
+and the doubling ladder resumes where the previous Newton step left it.
 
 Cost model: m_t only ever visits the doubling ladder {1, 2, 4, …, m_max},
 so the sketched Gram (SA)ᵀ(SA) is PRECOMPUTED at every ladder level before
@@ -61,6 +68,7 @@ DESIGN.md §5); the while_loop and all of the above are unchanged.
 
 from __future__ import annotations
 
+import math
 from functools import partial
 from typing import NamedTuple
 
@@ -68,14 +76,15 @@ import jax
 import jax.numpy as jnp
 
 from .level_grams import PADDED_SKETCHES, get_provider
-from .quadratic import Quadratic
+from .quadratic import Quadratic, weighted_gram
 from .solvers import c_alpha_rho, rho_to_rate
 
-PADDED_METHODS = ("ihs", "pcg")
+PADDED_METHODS = ("ihs", "pcg", "polyak")
 
 
 class PaddedState(NamedTuple):
     x: jnp.ndarray            # (B, d) iterates
+    x_prev: jnp.ndarray       # (B, d) previous iterate (Polyak momentum)
     r: jnp.ndarray            # (B, d) PCG residual (zeros for IHS)
     rt: jnp.ndarray           # (B, d) PCG preconditioned residual
     p: jnp.ndarray            # (B, d) PCG search direction
@@ -165,13 +174,29 @@ def padded_adaptive_solve_batched(
     tol: float = 1e-10,
     gram_hvp: bool | None = None,
     mesh=None,
+    init_level: jax.Array | None = None,
 ):
     """One-executable adaptive solve of a batch of B problems.
 
     ``q`` must be batched (per-problem A (B,n,d) or shared A (n,d));
     ``keys`` is a single PRNG key (split internally) or a (B,)-batch of keys
     — problem b's sketch depends only on keys[b]. Returns (x, stats) with
-    x (B, d) and per-problem stats vectors (m_final, iters, doublings, δ̃).
+    x (B, d) and per-problem stats vectors (m_final, iters, doublings, δ̃,
+    and the final ladder ``level`` index — what a warm restart passes back).
+
+    ``q.row_weights`` (B, n) solves the *weighted* problem
+    H = AᵀWA + ν²Λ: the providers sketch W^{1/2}A inside their one
+    streaming pass (scaling generated S tiles / sign streams by w^{1/2} —
+    never an (n, d) weighted copy of A, DESIGN.md §8) and the hvp applies
+    the weight on the (B, n) intermediate. This is the GLM Newton
+    subproblem layout (``core.newton``).
+
+    ``init_level`` (B,) int32 starts each problem's doubling ladder at the
+    given level instead of 0 — the warm-started m_t of the adaptive Newton
+    sketch (arXiv:2105.07291): a Newton driver passes the previous outer
+    step's final level so the inner solve does not re-climb the ladder it
+    already discovered. Values are clipped to the ladder; a traced array,
+    so warm restarts reuse the same executable.
 
     ``gram_hvp`` (default: auto, on when d ≤ min(n, 1024)): precompute the
     per-problem Gram AᵀA once so every in-loop H·v is a (B,d,d)·(B,d)
@@ -214,7 +239,20 @@ def padded_adaptive_solve_batched(
     if gram_hvp is None:
         gram_hvp = q.d <= min(q.n, 1024)
     if gram_hvp:
-        if q.shared_A:
+        w = q.row_weights
+        if w is not None:
+            # AᵀWA once, via the chunked streaming Gram (or its sharded
+            # psum variant) — per-problem even with shared A, and never
+            # through an (n, d) weighted copy of A
+            if mesh is None:
+                G_full = weighted_gram(q.A, w)               # (B, d, d)
+            else:
+                from .distributed import shard_weighted_gram
+
+                G_full = shard_weighted_gram(q, mesh)
+            hvp = lambda v: jnp.einsum("bde,be->bd", G_full, v) + (
+                (q.nu**2)[:, None] * q.lam_diag * v)
+        elif q.shared_A:
             G_full = q.A.T @ q.A                             # (d, d) once
             hvp = lambda v: v @ G_full + (q.nu**2)[:, None] * q.lam_diag * v
         else:
@@ -228,17 +266,24 @@ def padded_adaptive_solve_batched(
     phi, alpha = rho_to_rate(method, rho)
     c = c_alpha_rho(alpha, rho)
     mu = 1.0 - rho
+    # Polyak heavy-ball constants (Appendix A), matching core.solvers
+    _sq = math.sqrt(1.0 - rho)
+    mu_p = 2.0 * (1.0 - rho) / (1.0 + _sq)
+    beta_p = (1.0 - _sq) / (1.0 + _sq)
     fdtype = q.A.dtype
 
     x0 = jnp.zeros((B, d), fdtype)
-    lvl0 = jnp.zeros((B,), jnp.int32)
+    if init_level is None:
+        lvl0 = jnp.zeros((B,), jnp.int32)
+    else:
+        lvl0 = jnp.clip(init_level.astype(jnp.int32), 0, top)
     pinv0 = _gather_pinv(pinvs, lvl0)
     g0 = grad_f(x0)                                  # = −b
     rt0 = _apply_pinv(pinv0, -g0)
     dt0 = 0.5 * _pdot(-g0, rt0)
 
     init = PaddedState(
-        x=x0, r=-g0, rt=rt0, p=rt0, grad=g0,
+        x=x0, x_prev=x0, r=-g0, rt=rt0, p=rt0, grad=g0,
         level=lvl0, t_rel=jnp.zeros((B,), jnp.int32),
         dtilde_I=dt0, dtilde=dt0, dtilde0=dt0,
         x_best=x0, dt_best=dt0, pinv=pinv0,
@@ -258,11 +303,15 @@ def padded_adaptive_solve_batched(
         active = ~st.done
         pinv = st.pinv
         # ---- one step of the method under the current preconditioner ----
-        if method == "ihs":
+        if method in ("ihs", "polyak"):
             # rt caches H_S⁻¹(b − Hx) = −H_S⁻¹∇f from the previous trip's
             # δ̃ evaluation (or the restart), so each trip applies the
-            # preconditioner once, not twice.
-            x_new = st.x + mu * st.rt
+            # preconditioner once, not twice. Polyak adds the heavy-ball
+            # momentum β(x − x_prev); x_prev resets on every restart.
+            if method == "ihs":
+                x_new = st.x + mu * st.rt
+            else:
+                x_new = st.x + mu_p * st.rt + beta_p * (st.x - st.x_prev)
             g_new = grad_f(x_new)
             rt_new = _apply_pinv(pinv, -g_new)
             dt_new = 0.5 * _pdot(-g_new, rt_new)
@@ -301,6 +350,7 @@ def padded_adaptive_solve_batched(
         improved = accept & (dt_new < st.dt_best)
         st1 = PaddedState(
             x=jnp.where(aB, x_new, st.x),
+            x_prev=jnp.where(aB, st.x, st.x_prev),
             r=jnp.where(aB, r_new, st.r),
             rt=jnp.where(aB, rt_new, st.rt),
             p=jnp.where(aB, p_new, st.p),
@@ -338,6 +388,7 @@ def padded_adaptive_solve_batched(
                 r=jnp.where(rB, res, s.r),
                 rt=jnp.where(rB, rt_re, s.rt),
                 p=jnp.where(rB, rt_re, s.p),
+                x_prev=jnp.where(rB, s.x, s.x_prev),   # momentum restart
                 t_rel=jnp.where(reject, 0, s.t_rel),
                 # δ̃ is metric-dependent: restart best-tracking in the new
                 # preconditioner's metric at the current iterate
@@ -353,7 +404,7 @@ def padded_adaptive_solve_batched(
     st = jax.lax.while_loop(cond, body, init)
     stats = {"m_final": ladder_m[st.level], "iters": st.iters,
              "doublings": st.doublings, "dtilde": st.dt_best,
-             "trips": st.trips}
+             "level": st.level, "trips": st.trips}
     return st.x_best, stats
 
 
@@ -387,7 +438,10 @@ def padded_adaptive_solve(
         keys = key[None] if _is_single_key(key) else key
     nu = jnp.broadcast_to(jnp.atleast_1d(q.nu), (B,))
     lam = jnp.broadcast_to(q.lam_diag, (B, q.d))
-    qb = Quadratic(A=q.A, b=b, nu=nu, lam_diag=lam, batched=True)
+    w = (None if q.row_weights is None
+         else jnp.broadcast_to(q.row_weights, (B, q.n)))
+    qb = Quadratic(A=q.A, b=b, nu=nu, lam_diag=lam, batched=True,
+                   row_weights=w)
     x, stats = padded_adaptive_solve_batched(
         qb, keys, m_max=m_max, method=method, sketch=sketch,
         max_iters=max_iters, rho=rho, tol=tol)

@@ -88,19 +88,32 @@ def _a_row_spec(q: Quadratic, mesh: Mesh) -> P:
     return P(da, None)                    # (n, d): shard axis 0
 
 
+def _w_row_spec(q: Quadratic, mesh: Mesh) -> P:
+    """PartitionSpec for row_weights: the row axis shards with A's."""
+    da = data_axes(mesh)
+    if q.batched:
+        return P(None, da)                # (B, n): shard axis 1
+    return P(da)                          # (n,)
+
+
 def shard_quadratic(q: Quadratic, mesh: Mesh) -> Quadratic:
-    """Place A row-sharded over the data axes, everything else replicated.
+    """Place A (and any row_weights) row-sharded over the data axes,
+    everything else replicated.
 
     Works for single problems, per-problem batches (B, n, d) and shared-A
     batches alike; the ``batched`` flag is preserved."""
     a_sh = NamedSharding(mesh, _a_row_spec(q, mesh))
     rep = NamedSharding(mesh, P())
+    w = q.row_weights
+    if w is not None:
+        w = jax.device_put(w, NamedSharding(mesh, _w_row_spec(q, mesh)))
     return Quadratic(
         A=jax.device_put(q.A, a_sh),
         b=jax.device_put(q.b, rep),
         nu=jax.device_put(q.nu, rep),
         lam_diag=jax.device_put(q.lam_diag, rep),
         batched=q.batched,
+        row_weights=w,
     )
 
 
@@ -149,21 +162,57 @@ def shard_level_grams(
     da = data_axes(mesh)
     _check_divisible(q.n, mesh)
     m_max = ladder[-1]
+    weighted = q.row_weights is not None
 
-    def local_pass(A_blk, b, nu, lam, ks):
+    def local_pass(A_blk, w_blk, b, nu, lam, ks):
         idx = jax.lax.axis_index(da)
         k_loc = jax.vmap(lambda k: jax.random.fold_in(k, idx))(ks)
-        q_loc = Quadratic(A=A_blk, b=b, nu=nu, lam_diag=lam, batched=True)
+        # each shard's one-touch pass sketches W^{1/2}_blk · A_blk locally:
+        # the weight is row-diagonal, so it splits over row blocks exactly
+        # like A does and the concatenated-block Gram identity is unchanged
+        q_loc = Quadratic(A=A_blk, b=b, nu=nu, lam_diag=lam, batched=True,
+                          row_weights=w_blk)
         data = provider.sample(k_loc, m_max, A_blk.shape[-2], A_blk.dtype)
         g = provider.level_grams(data, q_loc, ladder)
         return jax.lax.psum(g, axis_name=da)
 
+    if weighted:
+        fn = _smap(
+            local_pass, mesh,
+            in_specs=(_a_row_spec(q, mesh), _w_row_spec(q, mesh),
+                      P(), P(), P(), P()),
+            out_specs=P(),
+        )
+        return fn(q.A, q.row_weights, q.b, q.nu, q.lam_diag, keys)
     fn = _smap(
-        local_pass, mesh,
+        lambda A_blk, b, nu, lam, ks: local_pass(A_blk, None, b, nu, lam, ks),
+        mesh,
         in_specs=(_a_row_spec(q, mesh), P(), P(), P(), P()),
         out_specs=P(),
     )
     return fn(q.A, q.b, q.nu, q.lam_diag, keys)
+
+
+def shard_weighted_gram(q: Quadratic, mesh: Mesh) -> jnp.ndarray:
+    """(B, d, d) AᵀWA for a row-sharded weighted batch: each shard runs the
+    chunked streaming Gram (``quadratic.weighted_gram``) on its local row
+    block — no (n, d) weighted copy of A anywhere — and ONE psum combines
+    the block Grams (AᵀWA = Σ_k A_kᵀW_kA_k exactly: W is row-diagonal)."""
+    from .quadratic import weighted_gram
+
+    if not q.batched or q.row_weights is None:
+        raise ValueError("shard_weighted_gram expects a batched, weighted "
+                         "Quadratic")
+    da = data_axes(mesh)
+    _check_divisible(q.n, mesh)
+
+    def local_gram(A_blk, w_blk):
+        return jax.lax.psum(weighted_gram(A_blk, w_blk), axis_name=da)
+
+    fn = _smap(local_gram, mesh,
+               in_specs=(_a_row_spec(q, mesh), _w_row_spec(q, mesh)),
+               out_specs=P())
+    return fn(q.A, q.row_weights)
 
 
 def sharded_padded_solve(q: Quadratic, keys: jax.Array, mesh: Mesh, **kw):
@@ -237,10 +286,13 @@ def quadratic_shardings(mesh: Mesh, q: Quadratic | None = None) -> Quadratic:
     da = data_axes(mesh)
     a_spec = _a_row_spec(q, mesh) if q is not None else P(da, None)
     batched = bool(q.batched) if q is not None else False
+    weighted = q is not None and q.row_weights is not None
     return Quadratic(
         A=NamedSharding(mesh, a_spec),
         b=NamedSharding(mesh, P()),
         nu=NamedSharding(mesh, P()),
         lam_diag=NamedSharding(mesh, P()),
         batched=batched,
+        row_weights=(NamedSharding(mesh, _w_row_spec(q, mesh))
+                     if weighted else None),
     )

@@ -30,6 +30,21 @@ def effective_dimension_exact(A: jnp.ndarray, nu: float, lam_diag=None) -> float
     return float(jnp.sum(eig) / jnp.max(eig))
 
 
+def effective_dimension_weighted_exact(A: jnp.ndarray, w: jnp.ndarray,
+                                       nu: float, lam_diag=None) -> float:
+    """d_e(W) = tr(M)/‖M‖₂ for M = AᵀWA (AᵀWA + ν²Λ)⁻¹ — the effective
+    dimension governing the sketch size of a *weighted* system, i.e. the
+    GLM Newton subproblem at weights w = ℓ''(t, y) (DESIGN.md §8). Along a
+    Newton path this drifts with W(x_t), which is exactly what the warm-
+    started ladder of ``core.newton`` tracks instead of recomputing.
+
+    Direct eigen-decomposition: testing / benchmarks / small problems only
+    (the solver never needs d_e — it discovers m adaptively), so
+    materializing W^{1/2}A and delegating through AᵀWA = (W^{1/2}A)ᵀW^{1/2}A
+    is fine here — one copy of the eigen/trace logic."""
+    return effective_dimension_exact(jnp.sqrt(w)[:, None] * A, nu, lam_diag)
+
+
 # -- Critical sketch sizes (Table 1 / Thm 5.1), with explicit constants -------
 
 def m_delta_srht(d_e: float, n: int, delta: float = 0.1) -> float:
@@ -46,7 +61,16 @@ def m_delta_gaussian(d_e: float, delta: float = 0.1) -> float:
 
 
 def m_delta_sjlt(d_e: float, delta: float = 0.1) -> float:
-    """Table 1: O(d_e²/δ) — constant taken as 1 (paper leaves it implicit)."""
+    """Table 1: O(d_e²/δ) — the paper states only the order, leaving the
+    leading constant implicit; this implementation takes it to be EXACTLY 1.
+
+    That choice is load-bearing wherever m_delta_sjlt is compared against
+    a *measured* critical sketch size (benchmarks/table1_mdelta.py,
+    benchmarks/bench_newton.py): with constant 1 the d_e²/δ form is a
+    conservative upper bound on every grid point we measure, but a
+    different constant would shift the "theory" column verbatim — the
+    benchmark call sites repeat this caveat so the comparison is never
+    read as a sharp prediction."""
     return max(d_e, 1.0) ** 2 / delta
 
 

@@ -41,6 +41,15 @@ Families:
   space, so a prefix of the stream is a valid m-row sample for EVERY m —
   the same argument as the SJLT's ⌊u·m⌋. The 1/√m rescale folds into 1/m
   on the prefix-summed row-Grams, exactly as for the Gaussian.
+
+Row weights (DESIGN.md §8): when the problem carries ``row_weights`` w
+(the GLM Newton subproblem's Hessian weights), every family sketches
+W^{1/2}A instead of A *inside the same single pass*: the Gaussian scales
+its generated S tiles by w^{1/2} in-stream, the SJLT folds w^{1/2} into
+its one-nonzero-per-column sign stream, and the SRHT folds w^{1/2} into
+the sign flip that precedes the FWHT. No family materializes an (n, d)
+weighted copy of A, and the one-touch ladder algebra is untouched — the
+weight is a property of the sketch application, not of the ladder.
 """
 
 from __future__ import annotations
@@ -66,9 +75,16 @@ class LevelGramProvider(Protocol):
         ...
 
     def level_grams(self, data: dict, q: Quadratic,
-                    ladder: tuple[int, ...]) -> jnp.ndarray:
-        """(L, B, d, d) Grams (S_m A)ᵀ(S_m A); touches A exactly once."""
+                    ladder: tuple[int, ...],
+                    row_weights: jnp.ndarray | None = None) -> jnp.ndarray:
+        """(L, B, d, d) Grams (S_m W^{1/2}A)ᵀ(S_m W^{1/2}A); touches A
+        exactly once. ``row_weights`` (B, n) overrides ``q.row_weights``
+        (defaulting to it); W = I when both are None."""
         ...
+
+
+def _weights(q: Quadratic, row_weights) -> jnp.ndarray | None:
+    return q.row_weights if row_weights is None else row_weights
 
 
 def prefix_level_grams(R: jnp.ndarray, ladder: tuple[int, ...], *,
@@ -100,8 +116,9 @@ class GaussianStreamedProvider:
     def sample(self, keys, m_max, n, dtype):
         return {"seeds": _uint32_seeds(keys)}
 
-    def level_grams(self, data, q, ladder):
-        SA = ops.gaussian_sa(q.A, data["seeds"], ladder[-1])
+    def level_grams(self, data, q, ladder, row_weights=None):
+        SA = ops.gaussian_sa(q.A, data["seeds"], ladder[-1],
+                             row_weights=_weights(q, row_weights))
         return prefix_level_grams(SA, ladder, inv_m_scale=True)
 
 
@@ -113,9 +130,14 @@ class GaussianDenseProvider:
     def sample(self, keys, m_max, n, dtype):
         return {"seeds": _uint32_seeds(keys)}
 
-    def level_grams(self, data, q, ladder):
+    def level_grams(self, data, q, ladder, row_weights=None):
         m_max = ladder[-1]
         S = gaussian_s_dense(data["seeds"], m_max, q.n).astype(q.A.dtype)
+        w = _weights(q, row_weights)
+        if w is not None:
+            # the dense baseline may materialize: scale S columns by w^{1/2}
+            # (same entries law as the streamed provider's in-tile scaling)
+            S = S * jnp.sqrt(w).astype(S.dtype)[:, None, :]
         if q.shared_A:
             SA = jnp.einsum("bmn,nd->bmd", S, q.A)
         else:
@@ -135,14 +157,15 @@ class SJLTProvider:
             jax.random.fold_in(k, 1), (n,), dtype))(keys)
         return {"u": u, "signs": signs}
 
-    def level_grams(self, data, q, ladder):
+    def level_grams(self, data, q, ladder, row_weights=None):
         u, signs = data["u"], data["signs"]
         m_max = ladder[-1]
         M = 1 << max(0, (m_max - 1).bit_length())   # top pow2 ≥ m_max
         rows = jnp.clip(
             jnp.floor(u * jnp.asarray(M, u.dtype)).astype(jnp.int32),
             0, M - 1)
-        SA = ops.sjlt_apply_batched(q.A, rows, signs, M)   # the ONE touch
+        SA = ops.sjlt_apply_batched(                       # the ONE touch
+            q.A, rows, signs, M, row_weights=_weights(q, row_weights))
         by_m = {M: SA}
         m = M
         while m > 1:                    # ⌊u·m⌋ = ⌊⌊u·2m⌋/2⌋: pairwise fold
@@ -180,17 +203,23 @@ class SRHTProvider:
             jax.random.fold_in(k, 1), (m_max,), 0, n_pad))(keys)
         return {"signs": signs, "rows": rows}
 
-    def level_grams(self, data, q, ladder):
+    def level_grams(self, data, q, ladder, row_weights=None):
         signs, rows = data["signs"], data["rows"]
         n, d = q.n, q.d
+        B = signs.shape[0]
         n_pad = 1 << max(0, (n - 1).bit_length())
-        if q.shared_A:
-            X = q.A[None, :, :] * signs[:, :, None]        # (B, n, d)
-        else:
-            X = q.A * signs[:, :, None]
+        w = _weights(q, row_weights)
+        # signs (and, when weighted, w^{1/2}) fold into ONE per-row scale
+        # fused into the FWHT kernel's VMEM tile — the sign-flipped /
+        # weighted copy of A never round-trips HBM on the Pallas path
+        scale = signs if w is None else signs * jnp.sqrt(w).astype(
+            signs.dtype)
+        X = q.A if not q.shared_A else jnp.broadcast_to(
+            q.A[None, :, :], (B, n, d))
         if n_pad != n:
             X = jnp.pad(X, ((0, 0), (0, n_pad - n), (0, 0)))
-        HX = ops.fwht_cols(X)                              # the ONE touch
+            scale = jnp.pad(scale, ((0, 0), (0, n_pad - n)))
+        HX = ops.fwht_cols(X, row_scale=scale)             # the ONE touch
         picked = jnp.take_along_axis(HX, rows[:, :, None], axis=1)
         return prefix_level_grams(picked, ladder, inv_m_scale=True)
 
@@ -224,13 +253,15 @@ class BlockEmulationProvider:
             for k in range(self.n_shards)
         ]}
 
-    def level_grams(self, data, q, ladder):
+    def level_grams(self, data, q, ladder, row_weights=None):
         n_loc = self._check(q.n)
+        w = q.row_weights if row_weights is None else row_weights
         out = None
         for k, dk in enumerate(data["shards"]):
             A_k = q.A[..., k * n_loc:(k + 1) * n_loc, :]
+            w_k = None if w is None else w[:, k * n_loc:(k + 1) * n_loc]
             q_k = Quadratic(A=A_k, b=q.b, nu=q.nu, lam_diag=q.lam_diag,
-                            batched=q.batched)
+                            batched=q.batched, row_weights=w_k)
             g_k = self.inner.level_grams(dk, q_k, ladder)
             out = g_k if out is None else out + g_k
         return out

@@ -1,0 +1,192 @@
+"""Regularized GLM objectives for the sketched-Newton layer (DESIGN.md §8).
+
+The paper's solvers address the quadratic (1.1); its adaptive-sketch-size
+machinery extends to regularized convex GLMs through the sketched Newton
+step (Hessian sketch: Pilanci–Wainwright 2016; adaptive Newton sketch:
+Lacotte–Wang–Pilanci 2021, arXiv:2105.07291). Every objective here is a
+separable per-row loss plus the same ν²Λ ridge:
+
+    F(x) = Σ_i ℓ(a_iᵀx, y_i) + ν²/2 · xᵀΛx ,
+
+so the Newton system at x is exactly a *weighted* instance of (1.1):
+
+    (AᵀW(x)A + ν²Λ) Δ = −∇F(x),   W(x) = diag(ℓ''(a_iᵀx, y_i)) ≥ 0 .
+
+``GLMObjective`` packages the three per-row scalar maps (value, ℓ', ℓ'')
+each family needs; everything acting on a batch of problems is derived
+from them here with one margins pass t = Ax per evaluation. Families:
+
+* ``logistic`` — y ∈ {0, 1}; ℓ = softplus(t) − y·t (stable via
+  ``logaddexp``), ℓ' = σ(t) − y, ℓ'' = σ(t)(1 − σ(t)) ∈ (0, ¼].
+* ``poisson``  — counts y ≥ 0, log link; ℓ = eᵗ − y·t, ℓ' = eᵗ − y,
+  ℓ'' = eᵗ (margins are clipped at ``POISSON_CLIP`` so a wild line-search
+  candidate cannot overflow f32 — the clip is far outside any sane
+  operating range and is documented rather than hidden).
+* ``huber``    — robust regression, residual r = t − y, threshold δ:
+  ℓ = r²/2 for |r| ≤ δ else δ|r| − δ²/2; ℓ' = clip(r, ±δ),
+  ℓ'' = 1{|r| ≤ δ} (the Newton weight simply drops outlier rows).
+* ``quadratic``— ℓ = (t − y)²/2: W ≡ 1, one Newton step reproduces the
+  ridge solve — the special case the rest of the repo is built on, kept
+  as the consistency anchor between the GLM layer and the quadratic core.
+
+ν²Λ ≻ 0 keeps every Newton system SPD even where ℓ'' vanishes (huber
+outlier rows, saturated logistic margins) — the same reason the padded
+engine's masked factorization stays SPD below d.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+POISSON_CLIP = 30.0     # e³⁰ ≈ 1e13: far beyond sane Poisson rates, finite
+
+
+@dataclasses.dataclass(frozen=True)
+class GLMObjective:
+    """Per-row maps of a separable GLM loss ℓ(t, y) (t = aᵀx the margin).
+
+    ``value``/``dloss``/``d2loss`` are elementwise (broadcasting) scalar
+    maps; ``d2loss`` is the Newton Hessian weight w_i = ℓ''(t_i, y_i) that
+    turns the Newton system into the weighted quadratic the sketch
+    providers embed (``Quadratic.row_weights``)."""
+
+    name: str
+    value: Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
+    dloss: Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
+    d2loss: Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
+
+
+def _logistic_value(t, y):
+    # softplus(t) − y·t, computed as logaddexp(0, t) for large-|t| stability
+    return jnp.logaddexp(0.0, t) - y * t
+
+
+def _logistic_d2(t, y):
+    s = jax.nn.sigmoid(t)
+    return s * (1.0 - s)
+
+
+def _poisson_t(t):
+    return jnp.clip(t, -POISSON_CLIP, POISSON_CLIP)
+
+
+def _huber(delta: float) -> GLMObjective:
+    def value(t, y):
+        r = t - y
+        a = jnp.abs(r)
+        return jnp.where(a <= delta, 0.5 * r * r,
+                         delta * a - 0.5 * delta * delta)
+
+    def dloss(t, y):
+        return jnp.clip(t - y, -delta, delta)
+
+    def d2loss(t, y):
+        return (jnp.abs(t - y) <= delta).astype(t.dtype)
+
+    return GLMObjective(name=f"huber[{delta:g}]", value=value, dloss=dloss,
+                        d2loss=d2loss)
+
+
+OBJECTIVES: dict[str, GLMObjective] = {
+    "logistic": GLMObjective(
+        name="logistic",
+        value=_logistic_value,
+        dloss=lambda t, y: jax.nn.sigmoid(t) - y,
+        d2loss=_logistic_d2,
+    ),
+    "poisson": GLMObjective(
+        name="poisson",
+        value=lambda t, y: jnp.exp(_poisson_t(t)) - y * t,
+        dloss=lambda t, y: jnp.exp(_poisson_t(t)) - y,
+        d2loss=lambda t, y: jnp.exp(_poisson_t(t)),
+    ),
+    "huber": _huber(1.0),
+    "quadratic": GLMObjective(
+        name="quadratic",
+        value=lambda t, y: 0.5 * (t - y) ** 2,
+        dloss=lambda t, y: t - y,
+        d2loss=lambda t, y: jnp.ones_like(t),
+    ),
+}
+
+GLM_FAMILIES = tuple(OBJECTIVES)
+
+
+def get_objective(family: "GLMObjective | str") -> GLMObjective:
+    """Resolve a family name ("huber:0.5" picks the δ); objective instances
+    pass through unchanged."""
+    if isinstance(family, GLMObjective):
+        return family
+    if family.startswith("huber:"):
+        return _huber(float(family.split(":", 1)[1]))
+    try:
+        return OBJECTIVES[family]
+    except KeyError:
+        raise ValueError(
+            f"GLM families are {GLM_FAMILIES} (or 'huber:<delta>'), "
+            f"got {family!r}") from None
+
+
+# ---------------------------------------------------------------------------
+# Batched objective evaluations (one margins pass t = Ax each)
+# ---------------------------------------------------------------------------
+
+def margins(A: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """t = Ax, (B, n); A (B, n, d) per-problem or (n, d) shared."""
+    if A.ndim == 2:
+        return x @ A.T
+    return jnp.einsum("bnd,bd->bn", A, x)
+
+
+def glm_value(obj: GLMObjective, A, y, nu, lam_diag, x) -> jnp.ndarray:
+    """F(x) − Σ_i ℓ(0, y_i) per problem, (B,): the loss is measured
+    relative to x = 0. The per-row constant ℓ(0, y) cancels from every
+    comparison the optimizer makes, but subtracting it matters in f32:
+    all-zero padded rows (the serving path) contribute exactly 0 instead
+    of n_pad·ℓ(0, 0), so the magnitude the line search must resolve is the
+    actual loss decrease, not an O(n) constant that swamps its ulps."""
+    t = margins(A, x)
+    loss = jnp.sum(obj.value(t, y) - obj.value(jnp.zeros_like(t), y),
+                   axis=-1)
+    reg = 0.5 * (nu**2) * jnp.sum(lam_diag * x * x, axis=-1)
+    return loss + reg
+
+
+def synthetic_logistic_problem(key, n: int, d: int, *, scale: float = 1.0,
+                               dtype=jnp.float32):
+    """One synthetic logistic design: Gaussian A/√d and Bernoulli labels
+    from planted coefficients (margins O(scale), so the Hessian weights
+    vary across rows). The single data law shared by the tests, the
+    quickstart, the serving demo and ``benchmarks/bench_newton.py``."""
+    kA, kx, ky = jax.random.split(key, 3)
+    A = jax.random.normal(kA, (n, d), dtype) / jnp.sqrt(
+        jnp.asarray(d, dtype))
+    p = jax.nn.sigmoid(A @ (scale * jax.random.normal(kx, (d,), dtype)))
+    y = (jax.random.uniform(ky, (n,), dtype) < p).astype(dtype)
+    return A, y
+
+
+def synthetic_logistic_batch(key, B: int, n: int, d: int, *,
+                             scale: float = 1.0, dtype=jnp.float32):
+    """(A (B, n, d), y (B, n)) stacked from ``synthetic_logistic_problem``."""
+    pairs = [synthetic_logistic_problem(k, n, d, scale=scale, dtype=dtype)
+             for k in jax.random.split(key, B)]
+    return (jnp.stack([a for a, _ in pairs]),
+            jnp.stack([y for _, y in pairs]))
+
+
+def glm_grad_and_weights(obj: GLMObjective, A, y, nu, lam_diag, x):
+    """(∇F(x), W(x)) in one margins pass: ∇F = Aᵀℓ'(t, y) + ν²Λx (B, d),
+    W = ℓ''(t, y) (B, n) — the Newton subproblem's ``row_weights``."""
+    t = margins(A, x)
+    g_row = obj.dloss(t, y)                              # (B, n)
+    if A.ndim == 2:
+        g = g_row @ A
+    else:
+        g = jnp.einsum("bnd,bn->bd", A, g_row)
+    g = g + (nu**2)[:, None] * lam_diag * x
+    return g, obj.d2loss(t, y)

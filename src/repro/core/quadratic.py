@@ -1,8 +1,16 @@
-"""Problem container for  min_x ½⟨x, Hx⟩ − bᵀx,  H = AᵀA + ν²Λ  (paper (1.1)).
+"""Problem container for  min_x ½⟨x, Hx⟩ − bᵀx,  H = AᵀW A + ν²Λ  (paper (1.1)).
 
 ``Quadratic`` is matrix-free: it exposes Hv, ∇f, f, and the sketch of A.
 It supports matrix right-hand sides B ∈ R^{d×c} (multi-class heads — the
 paper's experiments use one-hot label matrices).
+
+Row weights (DESIGN.md §8): an optional ``row_weights`` w ≥ 0 turns the
+Gram into AᵀWA with W = diag(w) — the Hessian of every regularized GLM's
+Newton subproblem (AᵀW(x)A + ν²Λ) Δ = −∇F. The container stays matrix-free
+about it: ``hvp`` computes Aᵀ(w ⊙ (Av)) so the weighted matrix W^{1/2}A is
+NEVER materialized; the sketch providers (``core.level_grams``) fuse w^{1/2}
+into their one streaming pass over A the same way. w is (n,) for single
+problems and (B, n) — per problem, even with shared A — when batched.
 
 Batch polymorphism (DESIGN.md §6): every op also accepts a *leading problem
 axis*. A batched ``Quadratic`` (``batched=True``) holds B independent
@@ -51,13 +59,16 @@ class Quadratic:
     lam_diag: jnp.ndarray   # (d,) diagonal of Λ ⪰ I; (B, d) when batched
     batched: bool = False   # static: leading problem axis on b/ν/Λ (and A
                             # unless shared)
+    row_weights: jnp.ndarray | None = None  # W = diag(w): (n,); (B, n) when
+                            # batched (per problem even with shared A)
 
     def tree_flatten(self):
-        return (self.A, self.b, self.nu, self.lam_diag), (self.batched,)
+        return (self.A, self.b, self.nu, self.lam_diag,
+                self.row_weights), (self.batched,)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children, batched=aux[0])
+        return cls(*children[:4], batched=aux[0], row_weights=children[4])
 
     # -- dimensions --------------------------------------------------------
     @property
@@ -89,16 +100,25 @@ class Quadratic:
         return (self.nu**2) * lam[:, None] * v
 
     def hvp(self, v: jnp.ndarray) -> jnp.ndarray:
-        """H v = AᵀA v + ν²Λ v  in O(nd) per problem (never forms H)."""
+        """H v = AᵀWA v + ν²Λ v  in O(nd) per problem (never forms H or
+        W^{1/2}A: the weight lands on the (·, n) intermediate Av)."""
+        w = self.row_weights
         if self.batched:
             if self.shared_A:
                 Av = v @ self.A.T                      # (B, n)
+                if w is not None:
+                    Av = w * Av
                 AtAv = Av @ self.A                     # (B, d)
             else:
                 Av = jnp.einsum("bnd,bd->bn", self.A, v)
+                if w is not None:
+                    Av = w * Av
                 AtAv = jnp.einsum("bnd,bn->bd", self.A, Av)
             return AtAv + self._reg(v)
-        return self.A.T @ (self.A @ v) + self._reg(v)
+        Av = self.A @ v
+        if w is not None:
+            Av = (w[:, None] if Av.ndim == 2 else w) * Av
+        return self.A.T @ Av + self._reg(v)
 
     def grad(self, x: jnp.ndarray) -> jnp.ndarray:
         return self.hvp(x) - self.b
@@ -120,8 +140,23 @@ class Quadratic:
         if not self.batched:
             raise ValueError("not a batched problem")
         A = self.A if self.shared_A else self.A[i]
+        w = None if self.row_weights is None else self.row_weights[i]
         return Quadratic(A=A, b=self.b[i], nu=self.nu[i],
-                         lam_diag=self.lam_diag[i])
+                         lam_diag=self.lam_diag[i], row_weights=w)
+
+    def with_row_weights(self, w: jnp.ndarray | None) -> "Quadratic":
+        """Same problem under the weighted Gram AᵀWA (W = diag(w)).
+
+        ``w`` is (n,) single / (B, n) batched — per problem even when A is
+        shared, which is the Newton-subproblem layout (weights depend on
+        the iterate)."""
+        if w is not None:
+            w = jnp.asarray(w, self.A.dtype)
+            want = (self.batch, self.n) if self.batched else (self.n,)
+            if w.shape != want:
+                raise ValueError(
+                    f"row_weights shape {w.shape} != expected {want}")
+        return dataclasses.replace(self, row_weights=w)
 
 
 def _as_batched_reg(nu, lam_diag, B: int, d: int, dtype):
@@ -172,33 +207,86 @@ def lambda_sweep(A, y, nus, lam_diag=None) -> Quadratic:
 
 
 def stack_quadratics(qs: list[Quadratic]) -> Quadratic:
-    """Stack same-shape single problems along a new leading problem axis."""
+    """Stack same-shape single problems along a new leading problem axis.
+    Row weights stack too (all problems weighted or none — a mix has no
+    faithful batched representation and must not silently drop weights)."""
     if any(q.batched for q in qs):
         raise ValueError("stack_quadratics takes single problems")
+    n_weighted = sum(q.row_weights is not None for q in qs)
+    if n_weighted not in (0, len(qs)):
+        raise ValueError(
+            f"cannot stack {n_weighted} weighted with "
+            f"{len(qs) - n_weighted} unweighted problems")
     A = jnp.stack([q.A for q in qs])
     b = jnp.stack([q.b for q in qs])
     nu = jnp.stack([jnp.asarray(q.nu) for q in qs])
     lam = jnp.stack([q.lam_diag for q in qs])
-    return Quadratic(A=A, b=b, nu=nu, lam_diag=lam, batched=True)
+    w = (jnp.stack([q.row_weights for q in qs]) if n_weighted else None)
+    return Quadratic(A=A, b=b, nu=nu, lam_diag=lam, batched=True,
+                     row_weights=w)
+
+
+def weighted_gram(A: jnp.ndarray, w: jnp.ndarray, *,
+                  chunk: int = 1024) -> jnp.ndarray:
+    """AᵀWA as (B, d, d) without materializing W^{1/2}A: a ``lax.scan``
+    over n-chunks whose only weighted intermediate is the (B, chunk, d)
+    tile — never an (n, d)-sized weighted copy of A (the streaming
+    guarantee the engine's weighted ``gram_hvp`` relies on).
+
+    A is (B, n, d) per-problem or (n, d) shared; w is (B, n)."""
+    shared = A.ndim == 2
+    n, d = A.shape[-2], A.shape[-1]
+    B = w.shape[0]
+    chunk = min(chunk, n)
+    pad = (-n) % chunk
+    if pad:
+        # zero rows carry zero weight: they add exact zeros to the Gram
+        A = jnp.pad(A, ((0, pad), (0, 0)) if shared
+                    else ((0, 0), (0, pad), (0, 0)))
+        w = jnp.pad(w, ((0, 0), (0, pad)))
+    steps = (n + pad) // chunk
+
+    def step(acc, c_idx):
+        r0 = c_idx * chunk
+        a_c = jax.lax.dynamic_slice_in_dim(A, r0, chunk, axis=A.ndim - 2)
+        w_c = jax.lax.dynamic_slice_in_dim(w, r0, chunk, axis=1)
+        if shared:
+            g = jnp.einsum("bc,cd,ce->bde", w_c, a_c, a_c)
+        else:
+            g = jnp.einsum("bc,bcd,bce->bde", w_c, a_c, a_c)
+        return acc + g, None
+
+    acc0 = jnp.zeros((B, d, d), A.dtype)
+    acc, _ = jax.lax.scan(step, acc0, jnp.arange(steps))
+    return acc
 
 
 def direct_solve(q: Quadratic) -> jnp.ndarray:
     """Baseline: dense Cholesky factor-and-solve, O(nd²+d³) (paper baseline).
 
     Batched problems get a batched Cholesky; with shared A the Gram matrix
-    is formed once and only the ν²Λ diagonal varies across the batch."""
+    is formed once and only the ν²Λ diagonal varies across the batch.
+    Weighted problems form AᵀWA (this is the dense oracle — materializing
+    the weighted matrix is fine here)."""
+    w = q.row_weights
     if q.batched:
         from .precond import _chol_solve
 
-        if q.shared_A:
+        if q.shared_A and w is None:
             G = q.A.T @ q.A                                    # (d, d) once
             H = G[None, :, :] + jax.vmap(jnp.diag)((q.nu**2)[:, None]
                                                    * q.lam_diag)
         else:
-            G = jnp.einsum("bnd,bne->bde", q.A, q.A)
+            if q.shared_A:                   # per-problem W breaks sharing
+                G = jnp.einsum("bn,nd,ne->bde", w, q.A, q.A)
+            elif w is None:
+                G = jnp.einsum("bnd,bne->bde", q.A, q.A)
+            else:
+                G = jnp.einsum("bn,bnd,bne->bde", w, q.A, q.A)
             H = G + jax.vmap(jnp.diag)((q.nu**2)[:, None] * q.lam_diag)
         chol = jnp.linalg.cholesky(H)
         return _chol_solve(chol, q.b[..., None])[..., 0]
-    H = q.A.T @ q.A + jnp.diag((q.nu**2) * q.lam_diag)
+    Aw = q.A if w is None else q.A * w[:, None]
+    H = Aw.T @ q.A + jnp.diag((q.nu**2) * q.lam_diag)
     chol, _ = jax.scipy.linalg.cho_factor(H, lower=True)
     return jax.scipy.linalg.cho_solve((chol, True), q.b)

@@ -40,13 +40,31 @@ def _fwht_kernel(x_ref, o_ref, *, n: int):
     o_ref[...] = x.reshape(n, x.shape[-1])
 
 
+def _fwht_kernel_scaled(s_ref, x_ref, o_ref, *, n: int):
+    """Fused H·diag(s)·x: the per-row scale (SRHT signs, optionally folded
+    with GLM weights w^{1/2}) is applied to the VMEM tile before the
+    butterfly — the scaled matrix diag(s)·x never round-trips HBM."""
+    x = x_ref[...] * s_ref[...][:, None]
+    h = 1
+    while h < n:
+        x = x.reshape(n // (2 * h), 2, h, x.shape[-1])
+        a = x[:, 0]
+        b = x[:, 1]
+        x = jnp.concatenate([a + b, a - b], axis=1)
+        h *= 2
+    o_ref[...] = x.reshape(n, x.shape[-1])
+
+
 def fwht_pallas(
     x: jnp.ndarray,
     *,
     block_cols: int = 128,
     interpret: bool = False,
+    row_scale: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
     """Unnormalized FWHT along axis 0 of x (n, d); n must be a power of 2.
+    ``row_scale`` (n,) fuses H·diag(s)·x in one kernel (see
+    ``_fwht_kernel_scaled``).
 
     VMEM budget: n · block_cols · 4 bytes (f32) ≤ ~8 MiB ⇒ block_cols 128
     handles n ≤ 16384; use ``ops.fwht_large`` beyond that.
@@ -60,12 +78,25 @@ def fwht_pallas(
         x = jnp.pad(x, ((0, 0), (0, pad)))
     dp = x.shape[1]
 
-    out = pl.pallas_call(
-        functools.partial(_fwht_kernel, n=n),
-        grid=(dp // bc,),
-        in_specs=[pl.BlockSpec((n, bc), lambda j: (0, j))],
-        out_specs=pl.BlockSpec((n, bc), lambda j: (0, j)),
-        out_shape=jax.ShapeDtypeStruct((n, dp), x.dtype),
-        interpret=interpret,
-    )(x)
+    if row_scale is None:
+        out = pl.pallas_call(
+            functools.partial(_fwht_kernel, n=n),
+            grid=(dp // bc,),
+            in_specs=[pl.BlockSpec((n, bc), lambda j: (0, j))],
+            out_specs=pl.BlockSpec((n, bc), lambda j: (0, j)),
+            out_shape=jax.ShapeDtypeStruct((n, dp), x.dtype),
+            interpret=interpret,
+        )(x)
+    else:
+        out = pl.pallas_call(
+            functools.partial(_fwht_kernel_scaled, n=n),
+            grid=(dp // bc,),
+            in_specs=[
+                pl.BlockSpec((n,), lambda j: (0,)),
+                pl.BlockSpec((n, bc), lambda j: (0, j)),
+            ],
+            out_specs=pl.BlockSpec((n, bc), lambda j: (0, j)),
+            out_shape=jax.ShapeDtypeStruct((n, dp), x.dtype),
+            interpret=interpret,
+        )(row_scale.astype(x.dtype), x)
     return out[:, :d] if pad else out

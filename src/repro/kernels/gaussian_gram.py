@@ -100,7 +100,8 @@ def gaussian_s_dense(seeds: jnp.ndarray, m: int, n: int) -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 
 def gaussian_sa_ref(A: jnp.ndarray, seeds: jnp.ndarray, m: int, *,
-                    chunk_cols: int = 2048) -> jnp.ndarray:
+                    chunk_cols: int = 2048,
+                    row_weights: jnp.ndarray | None = None) -> jnp.ndarray:
     """Streamed S @ A without materializing S: (B, m, d) from A (n, d)
     shared or (B, n, d) per-problem and per-problem uint32 seeds (B,).
 
@@ -109,7 +110,11 @@ def gaussian_sa_ref(A: jnp.ndarray, seeds: jnp.ndarray, m: int, *,
     of partial products — and therefore the result, bit-for-bit — is
     independent of ``chunk_cols`` (which only sets live-memory/pipelining
     granularity). Peak live sketch state is (B, m, _MICRO) + the (B, m, d)
-    accumulator."""
+    accumulator.
+
+    ``row_weights`` (B, n): computes S·W^{1/2}·A by scaling the generated
+    (B, m, _MICRO) S tile columns by w^{1/2} inside the stream — the
+    weighted matrix W^{1/2}A never exists (DESIGN.md §8)."""
     shared = A.ndim == 2
     n, d = A.shape[-2], A.shape[-1]
     B = seeds.shape[0]
@@ -123,12 +128,16 @@ def gaussian_sa_ref(A: jnp.ndarray, seeds: jnp.ndarray, m: int, *,
         # acc + 0.0 is exact, so padding never changes the result
         A = jnp.pad(A, ((0, pad), (0, 0)) if shared
                     else ((0, 0), (0, pad), (0, 0)))
+        if row_weights is not None:
+            row_weights = jnp.pad(row_weights, ((0, 0), (0, pad)))
     steps = (n + pad) // chunk
     if shared:
         contract = lambda S, a: jnp.einsum("bmc,cd->bmd", S, a)
     else:
         contract = lambda S, a: jnp.einsum("bmc,bcd->bmd", S, a)
     dtype = A.dtype
+    w_sqrt = (None if row_weights is None
+              else jnp.sqrt(row_weights).astype(dtype))
 
     def step(acc, c_idx):
         # A is sliced in place (no re-layout copy): the only live sketch
@@ -137,9 +146,14 @@ def gaussian_sa_ref(A: jnp.ndarray, seeds: jnp.ndarray, m: int, *,
             col0 = c_idx * chunk + i * _MICRO
             S = jax.vmap(lambda s: gaussian_tile(
                 s, 0, col0.astype(jnp.uint32), (m, _MICRO)))(seeds)
+            S = S.astype(dtype)
+            if w_sqrt is not None:
+                w_mu = jax.lax.dynamic_slice_in_dim(
+                    w_sqrt, col0, _MICRO, axis=1)
+                S = S * w_mu[:, None, :]
             a_mu = jax.lax.dynamic_slice_in_dim(
                 A, col0, _MICRO, axis=A.ndim - 2)
-            return acc + contract(S.astype(dtype), a_mu)
+            return acc + contract(S, a_mu)
 
         return jax.lax.fori_loop(0, k, micro, acc), None
 
@@ -172,6 +186,32 @@ def _gauss_sa_kernel(seed_ref, a_ref, o_ref, *, m: int, chunk: int):
             o_ref.dtype)
 
 
+def _gauss_sa_kernel_weighted(seed_ref, w_ref, a_ref, o_ref, *, m: int,
+                              chunk: int):
+    """Weighted variant: scale the generated (m, chunk) S tile's columns by
+    w^{1/2} in VMEM before the MXU contraction — S·W^{1/2}·A fused, with
+    neither S nor W^{1/2}A ever in HBM."""
+    c = pl.program_id(1)
+    seed = seed_ref[0]
+    col0 = (c * chunk).astype(jnp.uint32)
+    S = gaussian_tile(seed, 0, col0, (m, chunk))
+    a = a_ref[...]
+    if a.ndim == 3:
+        a = a[0]
+    w = w_ref[0, :]                                 # (chunk,) weights
+    S = S * jnp.sqrt(w.astype(jnp.float32))[None, :]
+    acc = jnp.dot(S.astype(a.dtype), a, preferred_element_type=jnp.float32)
+
+    @pl.when(c == 0)
+    def _init():
+        o_ref[0, ...] = acc.astype(o_ref.dtype)
+
+    @pl.when(c > 0)
+    def _acc():
+        o_ref[0, ...] = (o_ref[0, ...].astype(jnp.float32) + acc).astype(
+            o_ref.dtype)
+
+
 def gaussian_sa_pallas(
     A: jnp.ndarray,
     seeds: jnp.ndarray,
@@ -179,6 +219,7 @@ def gaussian_sa_pallas(
     *,
     chunk_cols: int = 512,
     interpret: bool = False,
+    row_weights: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
     """Fused generate-and-multiply Gaussian sketch: (B, m, d) from
     A (n, d) shared or (B, n, d) per-problem; seeds (B,) uint32.
@@ -189,7 +230,11 @@ def gaussian_sa_pallas(
     pattern). VMEM per step: m·chunk (S) + chunk·d (A) + m·d (acc); with
     m ≤ 1024, chunk = 512, d ≤ 512 this stays ≤ ~4 MiB. Entries match
     ``gaussian_sa_ref`` / ``gaussian_s_dense`` bit-for-bit (same counter
-    hash); the contraction differs only in reduction order."""
+    hash); the contraction differs only in reduction order.
+
+    ``row_weights`` (B, n) switches to the weighted kernel: the S tile is
+    scaled by w^{1/2} in VMEM (one extra (1, chunk) block input per cell);
+    W^{1/2}A never exists in HBM."""
     shared = A.ndim == 2
     n, d = A.shape[-2], A.shape[-1]
     B = seeds.shape[0]
@@ -200,6 +245,8 @@ def gaussian_sa_pallas(
     if pad:
         A = jnp.pad(A, ((0, pad), (0, 0)) if shared
                     else ((0, 0), (0, pad), (0, 0)))
+        if row_weights is not None:
+            row_weights = jnp.pad(row_weights, ((0, 0), (0, pad)))
         n = n + pad
     grid = (B, n // chunk)
     a_spec = (
@@ -207,14 +254,27 @@ def gaussian_sa_pallas(
         if shared
         else pl.BlockSpec((1, chunk, d), lambda b, c: (b, c, 0))
     )
+    if row_weights is None:
+        return pl.pallas_call(
+            functools.partial(_gauss_sa_kernel, m=m, chunk=chunk),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1,), lambda b, c: (b,)),
+                a_spec,
+            ],
+            out_specs=pl.BlockSpec((1, m, d), lambda b, c: (b, 0, 0)),
+            out_shape=jax.ShapeDtypeStruct((B, m, d), A.dtype),
+            interpret=interpret,
+        )(seeds.astype(jnp.uint32), A)
     return pl.pallas_call(
-        functools.partial(_gauss_sa_kernel, m=m, chunk=chunk),
+        functools.partial(_gauss_sa_kernel_weighted, m=m, chunk=chunk),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1,), lambda b, c: (b,)),
+            pl.BlockSpec((1, chunk), lambda b, c: (b, c)),
             a_spec,
         ],
         out_specs=pl.BlockSpec((1, m, d), lambda b, c: (b, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((B, m, d), A.dtype),
         interpret=interpret,
-    )(seeds.astype(jnp.uint32), A)
+    )(seeds.astype(jnp.uint32), row_weights.astype(A.dtype), A)

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from . import ref
 from .fwht import fwht_pallas
 from .gaussian_gram import gaussian_sa_pallas, gaussian_sa_ref
+from .sjlt import fold_row_weights as sjlt_fold_row_weights
 from .sjlt import sjlt_pallas, sjlt_pallas_batched
 
 _FWHT_VMEM_MAX_N = 16_384  # n · 128 cols · 4 B ≈ 8 MiB
@@ -27,17 +28,24 @@ def _on_tpu() -> bool:
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
 def fwht(x: jnp.ndarray, *, use_pallas: bool | None = None,
-         interpret: bool | None = None) -> jnp.ndarray:
-    """Unnormalized FWHT along axis 0 (n power of two)."""
+         interpret: bool | None = None,
+         row_scale: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Unnormalized FWHT along axis 0 (n power of two). ``row_scale`` (n,)
+    computes H·diag(s)·x — fused into the kernel's VMEM tile on the Pallas
+    path (SRHT signs and GLM w^{1/2} ride along for free)."""
     if use_pallas is None:
         use_pallas = _on_tpu()
     if interpret is None:
         interpret = not _on_tpu()
     n = x.shape[0]
     if not use_pallas:
+        if row_scale is not None:
+            x = x * row_scale[:, None].astype(x.dtype)
         return ref.fwht_ref(x)
     if n <= _FWHT_VMEM_MAX_N:
-        return fwht_pallas(x, interpret=interpret)
+        return fwht_pallas(x, interpret=interpret, row_scale=row_scale)
+    if row_scale is not None:
+        x = x * row_scale[:, None].astype(x.dtype)
     return fwht_large(x, interpret=interpret)
 
 
@@ -64,12 +72,15 @@ def fwht_large(x: jnp.ndarray, *, interpret: bool = False) -> jnp.ndarray:
 @functools.partial(jax.jit, static_argnames=("m", "use_pallas", "interpret"))
 def sjlt_apply(A: jnp.ndarray, rows: jnp.ndarray, signs: jnp.ndarray, m: int,
                *, use_pallas: bool | None = None,
-               interpret: bool | None = None) -> jnp.ndarray:
-    """S @ A for an s=1 SJLT given per-row targets/signs."""
+               interpret: bool | None = None,
+               row_weights: jnp.ndarray | None = None) -> jnp.ndarray:
+    """S @ A for an s=1 SJLT given per-row targets/signs. ``row_weights``
+    (n,) computes S·W^{1/2}·A by folding w^{1/2} into the signs."""
     if use_pallas is None:
         use_pallas = _on_tpu()
     if interpret is None:
         interpret = not _on_tpu()
+    signs = sjlt_fold_row_weights(signs, row_weights)
     if not use_pallas:
         return ref.sjlt_ref(A, rows, signs, m)
     return sjlt_pallas(A, rows, signs, m, interpret=interpret)
@@ -78,13 +89,17 @@ def sjlt_apply(A: jnp.ndarray, rows: jnp.ndarray, signs: jnp.ndarray, m: int,
 @functools.partial(jax.jit, static_argnames=("m", "use_pallas", "interpret"))
 def sjlt_apply_batched(A: jnp.ndarray, rows: jnp.ndarray, signs: jnp.ndarray,
                        m: int, *, use_pallas: bool | None = None,
-                       interpret: bool | None = None) -> jnp.ndarray:
+                       interpret: bool | None = None,
+                       row_weights: jnp.ndarray | None = None) -> jnp.ndarray:
     """Batch of SJLT sketches (B, m, d); A per-problem (B, n, d) or shared
-    (n, d) across the batch (one grid cell per problem × row-block on TPU)."""
+    (n, d) across the batch (one grid cell per problem × row-block on TPU).
+    ``row_weights`` (B, n) folds per-problem w^{1/2} into the sign stream
+    — the weighted matrix W^{1/2}A never exists."""
     if use_pallas is None:
         use_pallas = _on_tpu()
     if interpret is None:
         interpret = not _on_tpu()
+    signs = sjlt_fold_row_weights(signs, row_weights)
     if not use_pallas:
         return ref.sjlt_ref_batched(A, rows, signs, m)
     return sjlt_pallas_batched(A, rows, signs, m, interpret=interpret)
@@ -95,35 +110,52 @@ def sjlt_apply_batched(A: jnp.ndarray, rows: jnp.ndarray, signs: jnp.ndarray,
 def gaussian_sa(A: jnp.ndarray, seeds: jnp.ndarray, m: int, *,
                 chunk_cols: int | None = None,
                 use_pallas: bool | None = None,
-                interpret: bool | None = None) -> jnp.ndarray:
+                interpret: bool | None = None,
+                row_weights: jnp.ndarray | None = None) -> jnp.ndarray:
     """Streamed Gaussian sketch S @ A (B, m, d) without materializing S:
     A (n, d) shared or (B, n, d) per-problem, seeds (B,) uint32 — the fused
     generate-and-multiply Pallas kernel on TPU, the chunked ``lax.scan``
     oracle elsewhere. Sketch entries are identical on both paths (the same
-    counter hash); only matmul reduction order differs."""
+    counter hash); only matmul reduction order differs.
+
+    ``row_weights`` (B, n) computes S·W^{1/2}·A with w^{1/2} scaling the
+    generated S tiles inside the stream (DESIGN.md §8) — neither S nor
+    W^{1/2}A is ever materialized."""
     if use_pallas is None:
         use_pallas = _on_tpu()
     if interpret is None:
         interpret = not _on_tpu()
     if not use_pallas:
         return gaussian_sa_ref(A, seeds, m,
-                               chunk_cols=chunk_cols or 2048)
+                               chunk_cols=chunk_cols or 2048,
+                               row_weights=row_weights)
     return gaussian_sa_pallas(A, seeds, m, chunk_cols=chunk_cols or 512,
-                              interpret=interpret)
+                              interpret=interpret, row_weights=row_weights)
 
 
 def fwht_cols(X: jnp.ndarray, *, use_pallas: bool | None = None,
-              interpret: bool | None = None) -> jnp.ndarray:
+              interpret: bool | None = None,
+              row_scale: jnp.ndarray | None = None) -> jnp.ndarray:
     """FWHT along axis -2 of a batched (B, n, d) stack (n a power of two):
-    one vmapped kernel call on TPU, the jnp butterfly elsewhere."""
-    return jax.vmap(lambda x: fwht(x, use_pallas=use_pallas,
-                                   interpret=interpret))(X)
+    one vmapped kernel call on TPU, the jnp butterfly elsewhere.
+    ``row_scale`` (B, n) computes H·diag(s_b)·X_b per problem — the SRHT
+    provider passes signs·w^{1/2} here so the sign-flip (and any GLM
+    weighting) fuses into the transform's VMEM tile on the Pallas path."""
+    if row_scale is None:
+        return jax.vmap(lambda x: fwht(x, use_pallas=use_pallas,
+                                       interpret=interpret))(X)
+    return jax.vmap(lambda x, s: fwht(x, use_pallas=use_pallas,
+                                      interpret=interpret,
+                                      row_scale=s))(X, row_scale)
 
 
 def srht_sketch(A: jnp.ndarray, key: jax.Array, m: int, *,
                 use_pallas: bool | None = None,
-                interpret: bool | None = None) -> jnp.ndarray:
+                interpret: bool | None = None,
+                row_weights: jnp.ndarray | None = None) -> jnp.ndarray:
     """Full SRHT sketch √(n_pad/m)·R·H·E·A using the FWHT kernel.
+    ``row_weights`` (n,) sketches W^{1/2}A by folding w^{1/2} into the
+    sign flip (one fused row scale, no weighted copy of A).
 
     Row-sampling law: the m rows of H are sampled WITHOUT replacement
     (``jax.random.choice``, the classical SRHT — every row distinct while
@@ -138,9 +170,12 @@ def srht_sketch(A: jnp.ndarray, key: jax.Array, m: int, *,
     n_pad = 1 << max(0, (n - 1).bit_length())
     k_sign, k_rows = jax.random.split(key)
     signs = jax.random.rademacher(k_sign, (n,), dtype=A.dtype)
-    X = A * signs[:, None]
+    scale = signs if row_weights is None else signs * jnp.sqrt(
+        row_weights).astype(A.dtype)
+    X = A
     if n_pad != n:
         X = jnp.pad(X, ((0, n_pad - n), (0, 0)))
-    HX = fwht(X, use_pallas=use_pallas, interpret=interpret)
+        scale = jnp.pad(scale, (0, n_pad - n))
+    HX = fwht(X, use_pallas=use_pallas, interpret=interpret, row_scale=scale)
     rows = jax.random.choice(k_rows, n_pad, shape=(m,), replace=m > n_pad)
     return HX[rows] * jnp.asarray(math.sqrt(1.0 / m), A.dtype)

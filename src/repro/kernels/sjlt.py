@@ -33,6 +33,17 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+def fold_row_weights(signs: jnp.ndarray,
+                     row_weights: jnp.ndarray | None) -> jnp.ndarray:
+    """Weighted SJLT = S·diag(w^{1/2}): the sketch has one signed non-zero
+    per column, so scaling column i by w_i^{1/2} is exactly scaling its
+    sign — an O(n) elementwise fold on the (…, n) sign stream, never an
+    (n, d) weighted copy of A (DESIGN.md §8)."""
+    if row_weights is None:
+        return signs
+    return signs * jnp.sqrt(row_weights).astype(signs.dtype)
+
+
 def _sjlt_kernel(rows_ref, signs_ref, a_ref, o_ref, *, m: int):
     i = pl.program_id(0)
     rows = rows_ref[...]            # (br,) int32 target row per A-row
@@ -63,12 +74,16 @@ def sjlt_pallas(
     *,
     block_rows: int = 256,
     interpret: bool = False,
+    row_weights: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
     """S @ A for an s=1 SJLT. A: (n, d); rows/signs: (n,). Returns (m, d).
+    ``row_weights`` (n,) computes S·W^{1/2}·A by folding w^{1/2} into the
+    sign stream (``fold_row_weights``).
 
     VMEM per step: br·d (A tile) + m·br (one-hot) + m·d (accumulator);
     with br=256, m≤2048, d-tile = full d this targets ≤ ~8 MiB for d ≤ 4k.
     """
+    signs = fold_row_weights(signs, row_weights)
     n, d = A.shape
     if n % block_rows:
         pad = (-n) % block_rows
@@ -125,15 +140,20 @@ def sjlt_pallas_batched(
     *,
     block_rows: int = 256,
     interpret: bool = False,
+    row_weights: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
     """Batch of s=1 SJLT sketches: one dispatch-matmul grid cell per
     (problem, row-block). A: (B, n, d) per-problem or (n, d) shared;
-    rows/signs: (B, n). Returns (B, m, d).
+    rows/signs: (B, n). Returns (B, m, d). ``row_weights`` (B, n) folds
+    per-problem w^{1/2} into the sign stream (``fold_row_weights``) — the
+    shared-A fast path survives per-problem weights because the weight
+    lives in the per-problem sketch, not in A.
 
     The problem axis is the outer grid dimension so the per-problem output
     block accumulates over its row-blocks exactly as in ``sjlt_pallas``;
     VMEM per step is unchanged from the single-problem kernel.
     """
+    signs = fold_row_weights(signs, row_weights)
     B, n = rows.shape
     shared = A.ndim == 2
     d = A.shape[-1]

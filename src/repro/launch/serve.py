@@ -11,10 +11,12 @@ in fixed-shape batches by the multi-problem adaptive engine
 (serve/solver_service.py, DESIGN.md §6):
 
     PYTHONPATH=src python -m repro.launch.serve --ridge --requests 64 \
-        --ridge-batch 16 [--sketch srht] [--mesh 8]
+        --ridge-batch 16 [--sketch srht] [--mesh 8] [--glm 16]
 
 (``--ridge-batch`` sizes the packed solver batches; ``--mesh K`` runs the
-sharded engine over a K-device data mesh — see DESIGN.md §5.)
+sharded engine over a K-device data mesh — see DESIGN.md §5; ``--glm N``
+adds N logistic requests served by the adaptive sketched-Newton driver
+with Newton-level certificates — DESIGN.md §8.)
 """
 
 from __future__ import annotations
@@ -48,6 +50,8 @@ def serve_ridge(args):
                 f"{jax.device_count()} exist; on CPU set XLA_FLAGS="
                 f"--xla_force_host_platform_device_count={args.mesh}")
         mesh = jax.make_mesh((args.mesh,), ("data",))
+    from repro.serve.solver_service import GLMSolution
+
     svc = SolverService(batch_size=args.ridge_batch, method="pcg",
                         sketch=args.sketch, mesh=mesh)
     rng = np.random.default_rng(0)
@@ -59,25 +63,48 @@ def serve_ridge(args):
         y = jax.random.normal(jax.random.PRNGKey(2 * i + 1), (n,))
         rid = svc.submit(A, y, nu=float(rng.uniform(0.05, 0.5)))
         truth[rid] = (A, y)
+    from repro.core.objectives import synthetic_logistic_problem
+
+    for i in range(args.glm):
+        n = int(rng.integers(64, 1800))
+        d = int(rng.integers(8, 120))
+        A, y = synthetic_logistic_problem(jax.random.PRNGKey(10_000 + i),
+                                          n, d)
+        svc.submit_glm(A, y, nu=float(rng.uniform(0.1, 0.5)),
+                       family="logistic")
     t0 = time.perf_counter()
     sols = svc.flush()
     dt = time.perf_counter() - t0
     if not sols:
         print("ridge service: no requests")
         return
-    m_finals = [s.m_final for s in sols.values()]
+    ridge_sols = [s for s in sols.values() if not isinstance(s, GLMSolution)]
+    glm_sols = [s for s in sols.values() if isinstance(s, GLMSolution)]
+    n_req = args.requests + args.glm
     mesh_note = f", {args.mesh}-way data mesh" if mesh is not None else ""
-    print(f"ridge service: {args.requests} requests in {dt:.2f}s "
-          f"({args.requests / dt:.1f} req/s incl. compile) — "
+    print(f"solver service: {n_req} requests in {dt:.2f}s "
+          f"({n_req / dt:.1f} req/s incl. compile) — "
           f"{svc.stats['batches']} batches of {svc.batch_size}, "
           f"{svc.stats['padded_slots']} padded slots "
           f"({100 * svc.slot_utilization():.0f}% slot utilization"
           f"{mesh_note})")
-    fams = sorted({s.sketch for s in sols.values()})
-    print(f"certificates ({'/'.join(fams)}): m_final min/median/max = "
-          f"{min(m_finals)}/{sorted(m_finals)[len(m_finals) // 2]}/"
-          f"{max(m_finals)}, "
-          f"max residual δ̃ = {max(s.delta_tilde for s in sols.values()):.2e}")
+    if ridge_sols:
+        m_finals = [s.m_final for s in ridge_sols]
+        fams = sorted({s.sketch for s in ridge_sols})
+        print(f"ridge certificates ({'/'.join(fams)}): "
+              f"m_final min/median/max = "
+              f"{min(m_finals)}/{sorted(m_finals)[len(m_finals) // 2]}/"
+              f"{max(m_finals)}, "
+              f"max residual δ̃ = {max(s.delta_tilde for s in ridge_sols):.2e}")
+    if glm_sols:
+        outer = [s.newton_iters for s in glm_sols]
+        print(f"glm certificates (logistic): "
+              f"{sum(s.converged for s in glm_sols)}/{len(glm_sols)} "
+              f"converged, outer iters min/max = {min(outer)}/{max(outer)}, "
+              f"max decrement λ̃²/2 = "
+              f"{max(s.decrement for s in glm_sols):.2e}, "
+              f"m trajectory (req {glm_sols[0].req_id}): "
+              f"{glm_sols[0].m_trajectory}")
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -94,6 +121,11 @@ def build_parser() -> argparse.ArgumentParser:
                     help="serve ridge-solve requests instead of LM decode")
     ap.add_argument("--requests", type=int, default=48,
                     help="number of synthetic ridge requests (--ridge)")
+    ap.add_argument("--glm", type=int, default=0,
+                    help="additionally serve this many synthetic logistic "
+                         "requests through the sketched-Newton path "
+                         "(--ridge; certificates include outer iterations, "
+                         "Newton decrement and the m trajectory)")
     ap.add_argument("--ridge-batch", type=int, default=16,
                     help="packed batch size per shape class (--ridge); "
                          "its own flag so the LM --batch default of 4 "

@@ -22,9 +22,17 @@ service
 4. **returns** per-request solutions with their adaptivity *certificates*
    (δ̃, m_final, iterations, doublings) so callers can audit convergence.
 
-CPU-scale demo wiring lives in ``launch/serve.py --ridge`` and
-``examples/solve_service.py``; the batched-vs-looped engine comparison is
-``benchmarks/bench_batched.py``. See DESIGN.md §6.
+GLM traffic (DESIGN.md §8): ``submit_glm`` takes the same (A, y, ν) with a
+``family`` — logistic / poisson / huber — and rides the SAME shape-class /
+packing machinery; a packed GLM batch is solved by the adaptive sketched-
+Newton driver (``core.newton``), whose inner weighted subproblems run on
+the padded engine with per-problem warm-started sketch ladders. Solutions
+carry Newton-level certificates: outer iterations, the final Newton
+decrement λ̃²/2, and the per-step m trajectory.
+
+CPU-scale demo wiring lives in ``launch/serve.py --ridge`` (plus ``--glm``)
+and ``examples/solve_service.py``; the batched-vs-looped engine comparison
+is ``benchmarks/bench_batched.py``. See DESIGN.md §6/§8.
 """
 
 from __future__ import annotations
@@ -39,6 +47,8 @@ import jax.numpy as jnp
 
 from repro.core.adaptive_padded import padded_adaptive_solve_batched
 from repro.core.distributed import n_data_shards, shard_quadratic
+from repro.core.newton import adaptive_newton_solve_batched
+from repro.core.objectives import get_objective
 from repro.core.quadratic import Quadratic
 
 
@@ -82,6 +92,32 @@ class RidgeRequest:
     y: jnp.ndarray           # (n,) targets
     nu: float                # regularization ν
     lam_diag: jnp.ndarray | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class GLMRequest:
+    req_id: int
+    A: jnp.ndarray           # (n, d) features
+    y: jnp.ndarray           # (n,) targets (labels / counts / responses)
+    nu: float                # regularization ν
+    family: str              # "logistic" | "poisson" | "huber[:delta]"
+    lam_diag: jnp.ndarray | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class GLMSolution:
+    req_id: int
+    x: jnp.ndarray           # (d,) solution in the request's coordinates
+    family: str
+    decrement: float         # certificate: final Newton decrement λ̃²/2
+    converged: bool          # decrement cleared the service tolerance
+    newton_iters: int        # accepted outer Newton steps
+    m_trajectory: tuple      # certificate: inner m_final after each step
+    m_final: int             # last adapted sketch size
+    inner_iters: int         # total inner (PCG/IHS) iterations
+    shape_class: ShapeClass
+    batch_index: int
+    sketch: str = "gaussian"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -154,7 +190,12 @@ class SolverService:
         self._base_key = jax.random.PRNGKey(seed)
         self._queues: dict[ShapeClass, list[RidgeRequest]] = {
             c: [] for c in self.shape_classes}
+        # GLM traffic buckets by (shape class, family): one Newton-driver
+        # batch per family so the objective stays a static jit argument
+        self._glm_queues: dict[tuple[ShapeClass, str], list[GLMRequest]] = {}
         self._next_id = 0
+        self.newton_iters = 30
+        self.newton_tol = 1e-9
         self.stats = {"requests": 0, "batches": 0, "padded_slots": 0,
                       "solve_seconds": 0.0}
 
@@ -186,18 +227,46 @@ class SolverService:
         ever raised inside the jitted engine). Rejecting here is the only
         place the failure is observable before it becomes a wrong answer.
         """
-        nu = float(nu)
-        if not math.isfinite(nu) or nu <= 0.0:
-            raise ValueError(
-                f"nu must be a positive finite float, got {nu!r}: padded "
-                "coordinates carry H = ν²·I, so ν = 0 makes the padded "
-                "block singular and NaN-poisons the certificates")
+        nu = self._check_nu(nu)
         A = jnp.asarray(A)
         y = jnp.asarray(y)
         req = RidgeRequest(req_id=self._next_id, A=A, y=y, nu=nu,
                            lam_diag=lam_diag)
         self._next_id += 1
         self._queues[self.bucket_for(*A.shape)].append(req)
+        self.stats["requests"] += 1
+        return req.req_id
+
+    @staticmethod
+    def _check_nu(nu) -> float:
+        nu = float(nu)
+        if not math.isfinite(nu) or nu <= 0.0:
+            raise ValueError(
+                f"nu must be a positive finite float, got {nu!r}: padded "
+                "coordinates carry H = ν²·I, so ν = 0 makes the padded "
+                "block singular and NaN-poisons the certificates")
+        return nu
+
+    def submit_glm(self, A, y, nu, family: str = "logistic",
+                   lam_diag=None) -> int:
+        """Enqueue one regularized GLM problem (``family``: logistic /
+        poisson / huber[:delta]); returns its request id.
+
+        Padding is the same block-diagonal argument as ridge: padded
+        COLUMNS never enter the loss (A-columns are zero) and carry
+        ν²Λ = ν²·I, so their optimum is exactly 0 and the solution
+        restricted to the request's coordinates is unchanged; padded ROWS
+        are all-zero data rows whose loss term ℓ(0, 0) is a constant —
+        zero gradient, zero Hessian weight contribution."""
+        nu = self._check_nu(nu)
+        get_objective(family)          # validate the family name up front
+        A = jnp.asarray(A)
+        y = jnp.asarray(y)
+        req = GLMRequest(req_id=self._next_id, A=A, y=y, nu=nu,
+                         family=family, lam_diag=lam_diag)
+        self._next_id += 1
+        key = (self.bucket_for(*A.shape), family)
+        self._glm_queues.setdefault(key, []).append(req)
         self.stats["requests"] += 1
         return req.req_id
 
@@ -239,14 +308,85 @@ class SolverService:
             q = shard_quadratic(q, self.mesh)
         return q, keys
 
+    def _pack_glm(self, cls: ShapeClass, reqs: list[GLMRequest]):
+        """Pad each GLM request to the class shape and stack (A, y, ν, Λ);
+        empty slots are all-zero problems (x = 0 is optimal, decrement 0 ⇒
+        the Newton driver freezes them at step one). Same staging + key
+        scheme as ``_pack``."""
+        import numpy as np
+
+        B = self.batch_size
+        dtype = np.dtype(reqs[0].A.dtype)
+        A = np.zeros((B, cls.n, cls.d), dtype)
+        y = np.zeros((B, cls.n), dtype)
+        nu = np.ones((B,), dtype)
+        lam = np.ones((B, cls.d), dtype)
+        for i, r in enumerate(reqs):
+            ni, di = r.A.shape
+            A[i, :ni, :di] = np.asarray(r.A, dtype)
+            y[i, :ni] = np.asarray(r.y, dtype)
+            nu[i] = r.nu
+            if r.lam_diag is not None:
+                lam[i, :di] = np.asarray(r.lam_diag, dtype)
+        slot_ids = jnp.asarray(
+            [r.req_id for r in reqs]
+            + [0xFFFFFFFF - s for s in range(len(reqs), B)], jnp.uint32)
+        keys = jax.vmap(
+            lambda i: jax.random.fold_in(self._base_key, i))(slot_ids)
+        return (jnp.asarray(A), jnp.asarray(y), jnp.asarray(nu),
+                jnp.asarray(lam), keys)
+
     # -- solving -----------------------------------------------------------
-    def flush(self) -> dict[int, RidgeSolution]:
-        """Solve everything queued; returns {req_id: RidgeSolution}."""
-        out: dict[int, RidgeSolution] = {}
+    def flush(self) -> "dict[int, RidgeSolution | GLMSolution]":
+        """Solve everything queued; returns {req_id: solution} (ridge and
+        GLM requests come back in one map, each with its certificate type).
+        """
+        out: dict[int, RidgeSolution | GLMSolution] = {}
         for cls in self.shape_classes:
             queue, self._queues[cls] = self._queues[cls], []
             for i in range(0, len(queue), self.batch_size):
                 out.update(self._solve_chunk(cls, queue[i: i + self.batch_size]))
+        for (cls, family), queue in list(self._glm_queues.items()):
+            self._glm_queues[(cls, family)] = []
+            for i in range(0, len(queue), self.batch_size):
+                out.update(self._solve_glm_chunk(
+                    cls, family, queue[i: i + self.batch_size]))
+        return out
+
+    def _solve_glm_chunk(self, cls: ShapeClass, family: str,
+                         reqs: list[GLMRequest]):
+        A, y, nu, lam, keys = self._pack_glm(cls, reqs)
+        sketch = cls.sketch or self.sketch
+        t0 = time.perf_counter()
+        x, stats = adaptive_newton_solve_batched(
+            family, A, y, nu, lam_diag=lam, keys=keys, m_max=cls.m_max,
+            method=self.method, sketch=sketch,
+            newton_iters=self.newton_iters, tol=self.newton_tol,
+            inner_max_iters=self.max_iters, rho=self.rho,
+            inner_tol=self.tol, mesh=self.mesh)
+        x = jax.block_until_ready(x)
+        self.stats["solve_seconds"] += time.perf_counter() - t0
+        self.stats["batches"] += 1
+        self.stats["padded_slots"] += self.batch_size - len(reqs)
+        out = {}
+        m_traj = stats["m_trajectory"]                       # (T, B)
+        for i, r in enumerate(reqs):
+            di = r.A.shape[1]
+            traj = tuple(int(m) for m in m_traj[:, i] if m > 0)
+            out[r.req_id] = GLMSolution(
+                req_id=r.req_id,
+                x=x[i, :di],
+                family=family,
+                decrement=float(stats["decrement"][i]),
+                converged=bool(stats["converged"][i]),
+                newton_iters=int(stats["newton_iters"][i]),
+                m_trajectory=traj,
+                m_final=int(stats["m_final"][i]),
+                inner_iters=int(stats["inner_iters"][i]),
+                shape_class=cls,
+                batch_index=i,
+                sketch=sketch,
+            )
         return out
 
     def _solve_chunk(self, cls: ShapeClass, reqs: list[RidgeRequest]):

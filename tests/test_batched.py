@@ -128,6 +128,7 @@ def test_stack_quadratics_roundtrip(batch32):
 
 @pytest.mark.parametrize("method,sketch", [
     ("ihs", "gaussian"), ("pcg", "gaussian"), ("pcg", "sjlt"),
+    ("polyak", "gaussian"),
 ])
 def test_batched_engine_matches_single_solves(batch32, method, sketch):
     """Acceptance: B=32 through the engine matches per-problem single solves
@@ -237,6 +238,34 @@ def test_doubling_ladder():
     assert doubling_ladder(8) == (1, 2, 4, 8)
     assert doubling_ladder(12) == (1, 2, 4, 8, 12)
     assert doubling_ladder(1) == (1,)
+
+
+def test_polyak_padded_engine_agrees_with_host_adaptive(batch32):
+    """Satellite regression: ``polyak`` now dispatches through the padded
+    engine (it previously only existed in the host-orchestrated
+    ``adaptive_solve``). Host and engine draw different sketch randomness,
+    so agreement is at the solution level: both converge to the direct
+    solve, hence to each other."""
+    from repro.core.adaptive import AdaptiveConfig, adaptive_solve
+
+    q, keys = batch32["q"], batch32["keys"]
+    B_small = 4
+    xs_direct = direct_solve(q)
+    for i in range(B_small):
+        q1 = q.problem(i)
+        res = adaptive_solve(
+            q1, AdaptiveConfig(method="polyak", sketch="gaussian",
+                               m_max=64, max_iters=150, tol=1e-12),
+            key=keys[i])
+        qb = Quadratic(A=q.A[i][None], b=q.b[i][None], nu=q.nu[i][None],
+                       lam_diag=q.lam_diag[i][None], batched=True)
+        xp, sp = padded_adaptive_solve_batched(
+            qb, keys[i][None], m_max=64, method="polyak", sketch="gaussian",
+            max_iters=150, rho=0.5, tol=1e-12)
+        assert _rel(res.x, xs_direct[i]) < 1e-4, i       # host converges
+        assert _rel(xp[0], xs_direct[i]) < 1e-4, i       # engine converges
+        assert _rel(xp[0], res.x) < 2e-4, i              # hence agree
+        assert int(sp["m_final"][0]) <= 64
 
 
 # ---------------------------------------------------------------------------

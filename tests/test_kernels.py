@@ -108,6 +108,72 @@ def test_gaussian_sketch_is_standard_normal():
     assert corr < 5e-3
 
 
+@pytest.mark.parametrize("shared", [False, True])
+def test_gaussian_sa_kernel_weighted_matches_ref(shared):
+    """Weighted fused kernel (S·W^{1/2}·A with w^{1/2} scaling the S tile
+    in VMEM) vs the weighted scan oracle vs the explicit W^{1/2}A
+    materialization — all within fp reduction error."""
+    B, n, d, m = 3, 700, 9, 16
+    seeds = jnp.asarray([9, 10, 11], jnp.uint32)
+    A = jax.random.normal(jax.random.PRNGKey(0), (n, d) if shared
+                          else (B, n, d))
+    w = jax.random.uniform(jax.random.PRNGKey(1), (B, n),
+                           minval=0.05, maxval=3.0)
+    got = gaussian_sa_pallas(A, seeds, m, chunk_cols=256, interpret=True,
+                             row_weights=w)
+    want = gaussian_sa_ref(A, seeds, m, row_weights=w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    Aw = jnp.sqrt(w)[:, :, None] * (A[None] if shared else A)
+    explicit = gaussian_sa_ref(Aw, seeds, m)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(explicit),
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_fwht_kernel_fused_row_scale():
+    """H·diag(s)·x fused in the kernel equals scaling then transforming."""
+    n, d = 256, 20
+    x = jax.random.normal(jax.random.PRNGKey(2), (n, d))
+    s = jax.random.normal(jax.random.PRNGKey(3), (n,))
+    got = fwht_pallas(x, interpret=True, row_scale=s)
+    want = ref.fwht_ref(x * s[:, None])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_sjlt_weighted_fold_matches_explicit():
+    """ops.sjlt_apply with row_weights == the unweighted sketch of the
+    materialized W^{1/2}A (one signed nonzero per column ⇒ folding w^{1/2}
+    into the signs is exact)."""
+    n, d, m = 300, 11, 32
+    A = jax.random.normal(jax.random.PRNGKey(4), (n, d))
+    rows = jax.random.randint(jax.random.PRNGKey(5), (n,), 0, m)
+    signs = jax.random.rademacher(jax.random.PRNGKey(6), (n,),
+                                  dtype=A.dtype)
+    w = jax.random.uniform(jax.random.PRNGKey(7), (n,), minval=0.1,
+                           maxval=2.0)
+    got = ops.sjlt_apply(A, rows, signs, m, row_weights=w)
+    want = ref.sjlt_ref(jnp.sqrt(w)[:, None] * A, rows, signs, m)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_srht_sketch_weighted():
+    """ops.srht_sketch(row_weights=w) sketches W^{1/2}A exactly (the fold
+    into the sign flip changes no randomness)."""
+    n, d, m = 200, 8, 64
+    A = jax.random.normal(jax.random.PRNGKey(8), (n, d))
+    w = jax.random.uniform(jax.random.PRNGKey(9), (n,), minval=0.1,
+                           maxval=2.0)
+    key = jax.random.PRNGKey(10)
+    got = ops.srht_sketch(A, key, m, use_pallas=True, interpret=True,
+                          row_weights=w)
+    want = ops.srht_sketch(jnp.sqrt(w)[:, None] * A, key, m,
+                           use_pallas=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
 def test_srht_sketch_end_to_end():
     """kernels.ops.srht_sketch is an unbiased isometry in expectation."""
     n, d, m = 256, 16, 512

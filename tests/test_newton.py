@@ -1,0 +1,270 @@
+"""Sketched-Newton GLM layer (DESIGN.md §8): objectives vs autodiff,
+adaptive Newton vs exact-IRLS references for every family (acceptance:
+B≥8 logistic batch matches IRLS to ≤1e-4 in x), warm-started ladder
+semantics, the quadratic-family consistency anchor, and the GLM serving
+path with Newton-level certificates."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.adaptive_padded import doubling_ladder
+from repro.core.effective_dim import (
+    effective_dimension_exact,
+    effective_dimension_weighted_exact,
+)
+from repro.core.newton import (
+    adaptive_newton_solve,
+    adaptive_newton_solve_batched,
+    irls_reference,
+    newton_cg_reference,
+)
+from repro.core.objectives import (
+    GLM_FAMILIES,
+    get_objective,
+    glm_grad_and_weights,
+    glm_value,
+)
+from repro.core.quadratic import (
+    _as_batched_reg,
+    direct_solve,
+    from_least_squares_batch,
+)
+
+
+def _rel_rows(a, b):
+    return np.max(np.linalg.norm(np.asarray(a - b), axis=1)
+                  / (np.linalg.norm(np.asarray(b), axis=1) + 1e-30))
+
+
+def logistic_batch(B, n, d, seed=0, scale=1.0):
+    from repro.core.objectives import synthetic_logistic_batch
+
+    return synthetic_logistic_batch(jax.random.PRNGKey(seed), B, n, d,
+                                    scale=scale)
+
+
+# ---------------------------------------------------------------------------
+# Objectives
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", GLM_FAMILIES)
+def test_objective_grad_and_weights_match_autodiff(family):
+    """∇F and the Hessian weights ℓ'' agree with jax autodiff of the
+    scalar objective — per family, on a small batch."""
+    obj = get_objective(family)
+    B, n, d = 3, 40, 6
+    A = jax.random.normal(jax.random.PRNGKey(0), (B, n, d)) / np.sqrt(d)
+    y = jnp.abs(jax.random.normal(jax.random.PRNGKey(1), (B, n)))
+    if family == "logistic":
+        y = (y > 0.7).astype(jnp.float32)
+    elif family == "poisson":
+        y = jnp.floor(y * 2)
+    x = 0.3 * jax.random.normal(jax.random.PRNGKey(2), (B, d))
+    nu_b, lam_b = _as_batched_reg(0.2, None, B, d, jnp.float32)
+
+    g, w = glm_grad_and_weights(obj, A, y, nu_b, lam_b, x)
+    g_ad = jax.grad(
+        lambda xx: jnp.sum(glm_value(obj, A, y, nu_b, lam_b, xx)))(x)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g_ad),
+                               rtol=1e-4, atol=1e-5)
+    # ℓ'' = d(ℓ')/dt elementwise (huber's kink: check off the boundary)
+    t = jnp.einsum("bnd,bd->bn", A, x)
+    d2_ad = jax.vmap(jax.vmap(jax.grad(
+        lambda tt, yy: obj.dloss(tt, yy))))(t, y)
+    np.testing.assert_allclose(np.asarray(w), np.asarray(d2_ad),
+                               rtol=1e-4, atol=1e-5)
+    assert bool(jnp.all(w >= 0))
+
+
+def test_get_objective_spellings():
+    assert get_objective("huber:0.5").name == "huber[0.5]"
+    obj = get_objective("logistic")
+    assert get_objective(obj) is obj
+    with pytest.raises(ValueError):
+        get_objective("probit")
+
+
+# ---------------------------------------------------------------------------
+# Adaptive sketched Newton vs exact references
+# ---------------------------------------------------------------------------
+
+def test_acceptance_logistic_batch_matches_irls():
+    """Acceptance criterion: a B=8 logistic-ridge batch through
+    ``adaptive_newton_solve_batched`` (inner = padded engine, warm-started
+    per-problem ladders) matches the exact-IRLS reference to ≤1e-4 in x,
+    with every problem's decrement certificate below tolerance."""
+    B, n, d = 8, 400, 24
+    A, Y = logistic_batch(B, n, d, seed=0)
+    x, stats = adaptive_newton_solve_batched(
+        "logistic", A, Y, 0.3, m_max=64, keys=jax.random.PRNGKey(5))
+    x_ref = irls_reference("logistic", A, Y, 0.3)
+    assert _rel_rows(x, x_ref) < 1e-4
+    assert bool(np.all(np.asarray(stats["converged"])))
+    assert stats["m_trajectory"].shape[1] == B
+    # the m trajectory is the per-step inner m_final — all on the ladder
+    ladder = set(doubling_ladder(64)) | {0}
+    assert set(stats["m_trajectory"].ravel().tolist()) <= ladder
+
+
+@pytest.mark.parametrize("family,nu", [("poisson", 0.3), ("huber", 0.3)])
+def test_newton_other_families_match_irls(family, nu):
+    B, n, d = 4, 300, 12
+    if family == "poisson":
+        ks = jax.random.split(jax.random.PRNGKey(21), 3)
+        A = jax.random.normal(ks[0], (B, n, d)) / np.sqrt(d)
+        xt = 0.3 * jax.random.normal(ks[1], (B, d))
+        lam = jnp.exp(jnp.einsum("bnd,bd->bn", A, xt))
+        Y = jax.random.poisson(ks[2], lam).astype(jnp.float32)
+    else:
+        ks = jax.random.split(jax.random.PRNGKey(31), 3)
+        A = jax.random.normal(ks[0], (B, n, d)) / np.sqrt(d)
+        Y = jnp.einsum("bnd,bd->bn", A, 0.5 * jnp.ones((B, d))) + (
+            0.1 * jax.random.normal(ks[1], (B, n)))
+    x, stats = adaptive_newton_solve_batched(
+        family, A, Y, nu, m_max=32, keys=jax.random.PRNGKey(6))
+    x_ref = irls_reference(family, A, Y, nu)
+    assert _rel_rows(x, x_ref) < 1e-4, family
+    assert bool(np.all(np.asarray(stats["converged"])))
+
+
+def test_quadratic_family_is_the_ridge_anchor():
+    """family="quadratic" reproduces the ridge solution (W ≡ 1 makes every
+    Newton system the original (1.1); the first full step lands on it)."""
+    B, n, d = 4, 300, 16
+    A = jax.random.normal(jax.random.PRNGKey(9), (B, n, d)) / np.sqrt(n)
+    Y = jax.random.normal(jax.random.PRNGKey(10), (B, n))
+    x, stats = adaptive_newton_solve_batched(
+        "quadratic", A, Y, 0.2, m_max=32)
+    x_star = direct_solve(from_least_squares_batch(A, Y, 0.2))
+    assert _rel_rows(x, x_star) < 1e-4
+    assert int(np.max(np.asarray(stats["newton_iters"]))) <= 3
+
+
+def test_single_problem_wrapper():
+    A, Y = logistic_batch(1, 200, 8, seed=4)
+    x, stats = adaptive_newton_solve("logistic", A[0], Y[0], 0.3, m_max=32,
+                                     key=jax.random.PRNGKey(2))
+    assert x.shape == (8,)
+    assert stats["m_trajectory"].ndim == 1
+    assert float(stats["decrement"]) <= 1e-9
+    xb, _ = adaptive_newton_solve_batched(
+        "logistic", A, Y, 0.3, m_max=32, keys=jax.random.PRNGKey(2))
+    # same fixed point regardless of key plumbing
+    assert np.linalg.norm(np.asarray(x - xb[0])) < 1e-3
+
+
+def test_warm_started_ladder_levels_carry_across_steps():
+    """The adaptive-Newton-sketch warm start: pass an ill-conditioned
+    problem whose first Newton step climbs the ladder; subsequent steps
+    must START from the discovered level (their inner doublings are
+    bounded by what remains above it), visible as a non-decreasing per-
+    step m trajectory."""
+    B, n, d = 3, 512, 48
+    ks = jax.random.split(jax.random.PRNGKey(11), B)
+    As, Ys = [], []
+    for i in range(B):
+        kA, kx, ky = jax.random.split(ks[i], 3)
+        # decaying spectrum so the ladder has somewhere to stop below cap
+        U, _ = jnp.linalg.qr(jax.random.normal(kA, (n, d)))
+        sv = 0.9 ** jnp.arange(d, dtype=jnp.float32)
+        A = (U * sv[None, :]) @ jnp.linalg.qr(
+            jax.random.normal(kx, (d, d)))[0].T
+        p = jax.nn.sigmoid(4.0 * A @ jax.random.normal(ky, (d,)))
+        Ys.append((jax.random.uniform(jax.random.fold_in(ky, 1), (n,)) < p
+                   ).astype(jnp.float32))
+        As.append(A)
+    A, Y = jnp.stack(As), jnp.stack(Ys)
+    x, stats = adaptive_newton_solve_batched(
+        "logistic", A, Y, 0.05, m_max=128, keys=jax.random.PRNGKey(3))
+    traj = stats["m_trajectory"]
+    for b in range(B):
+        ms = [m for m in traj[:, b] if m > 0]
+        assert ms == sorted(ms), (b, ms)       # warm start: never re-climbs
+    x_ref = irls_reference("logistic", A, Y, 0.05)
+    assert _rel_rows(x, x_ref) < 1e-3
+
+
+def test_newton_cg_reference_agrees():
+    A, Y = logistic_batch(2, 200, 8, seed=13)
+    x_cg = newton_cg_reference("logistic", A, Y, 0.3)
+    x_ref = irls_reference("logistic", A, Y, 0.3)
+    assert _rel_rows(x_cg, x_ref) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# Weighted effective dimension (satellite)
+# ---------------------------------------------------------------------------
+
+def test_weighted_effective_dimension():
+    A = jax.random.normal(jax.random.PRNGKey(0), (200, 16)) / np.sqrt(200)
+    nu = 0.1
+    d_e = effective_dimension_exact(A, nu)
+    d_e_w1 = effective_dimension_weighted_exact(A, jnp.ones((200,)), nu)
+    assert abs(d_e - d_e_w1) < 1e-4          # W = I recovers the unweighted
+    # scaling all weights by c rescales the spectrum like scaling A by √c:
+    # heavier weights ⇒ larger Gram ⇒ larger d_e (ν fixed)
+    d_e_up = effective_dimension_weighted_exact(
+        A, 4.0 * jnp.ones((200,)), nu)
+    assert d_e_up > d_e_w1
+    # zero weights on half the rows = effective dimension of the kept half
+    w = jnp.concatenate([jnp.ones((100,)), jnp.zeros((100,))])
+    d_e_half = effective_dimension_weighted_exact(A, w, nu)
+    d_e_half_direct = effective_dimension_exact(A[:100], nu)
+    assert abs(d_e_half - d_e_half_direct) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# GLM serving path
+# ---------------------------------------------------------------------------
+
+def test_solver_service_glm_certificates():
+    from repro.serve.solver_service import GLMSolution, ShapeClass, SolverService
+
+    svc = SolverService(batch_size=4, sketch="gaussian",
+                        shape_classes=(ShapeClass(256, 32, 64),
+                                       ShapeClass(1024, 64, 128)))
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i in range(5):
+        n = int(rng.integers(80, 900))
+        d = int(rng.integers(8, 50))
+        kA, kx, ky = jax.random.split(jax.random.PRNGKey(100 + i), 3)
+        A = jax.random.normal(kA, (n, d)) / np.sqrt(d)
+        p = jax.nn.sigmoid(A @ jax.random.normal(kx, (d,)))
+        y = (jax.random.uniform(ky, (n,)) < p).astype(jnp.float32)
+        nu = float(rng.uniform(0.2, 0.5))
+        rid = svc.submit_glm(A, y, nu, family="logistic")
+        reqs.append((rid, A, y, nu))
+    # ridge and glm traffic can coexist in one flush
+    rid_ridge = svc.submit(jnp.asarray(np.ones((100, 8)) / 10.0),
+                           jnp.ones((100,)), 0.3)
+    sols = svc.flush()
+    assert len(sols) == 6
+    assert not isinstance(sols[rid_ridge], GLMSolution)
+    for rid, A, y, nu in reqs:
+        s = sols[rid]
+        assert isinstance(s, GLMSolution)
+        assert s.x.shape == (A.shape[1],)
+        assert s.family == "logistic" and s.converged
+        assert s.newton_iters >= 1 and len(s.m_trajectory) >= 1
+        assert s.m_final == s.m_trajectory[-1]
+        assert s.decrement <= svc.newton_tol
+        x_ref = irls_reference("logistic", A[None], y[None], nu)[0]
+        rel = float(np.linalg.norm(np.asarray(s.x - x_ref))
+                    / np.linalg.norm(np.asarray(x_ref)))
+        assert rel < 1e-3, (rid, rel)
+    assert all(not v for v in svc._glm_queues.values())
+
+
+def test_solver_service_glm_validates():
+    from repro.serve.solver_service import SolverService
+
+    svc = SolverService()
+    A = jnp.ones((64, 8)) / 8.0
+    y = jnp.ones((64,))
+    with pytest.raises(ValueError):
+        svc.submit_glm(A, y, 0.0, family="logistic")   # ν = 0 rejected
+    with pytest.raises(ValueError):
+        svc.submit_glm(A, y, 0.3, family="probit")     # unknown family

@@ -183,6 +183,55 @@ def test_shard_level_grams_match_replicated_reference():
     assert "PROVIDERS_OK" in out
 
 
+def test_weighted_shard_level_grams_and_gram():
+    """GLM-layer sharded path (DESIGN.md §8): with row_weights the one-psum
+    ladder precompute equals the weighted BlockEmulationProvider (identical
+    per-shard keys — W is row-diagonal, so it splits over row blocks
+    exactly like A), shard_weighted_gram psums to AᵀWA, and a weighted
+    sharded engine solve matches the single-device weighted solve."""
+    out = _run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.adaptive_padded import (doubling_ladder,
+                                                padded_adaptive_solve_batched)
+        from repro.core.distributed import (shard_level_grams,
+                                            shard_quadratic,
+                                            shard_weighted_gram)
+        from repro.core.level_grams import BlockEmulationProvider, get_provider
+        from repro.core.quadratic import direct_solve, from_least_squares_batch
+
+        mesh = jax.make_mesh((8,), ("data",))
+        B, n, d, m_max, K = 3, 512, 8, 24, 8
+        ladder = doubling_ladder(m_max)
+        A = jax.random.normal(jax.random.PRNGKey(0), (B, n, d)) / np.sqrt(n)
+        Y = jax.random.normal(jax.random.PRNGKey(1), (B, n))
+        w = jax.random.uniform(jax.random.PRNGKey(2), (B, n),
+                               minval=0.05, maxval=2.0)
+        keys = jax.random.split(jax.random.PRNGKey(42), B)
+        qw = from_least_squares_batch(A, Y, jnp.asarray([0.1, 0.2, 0.3])
+                                      ).with_row_weights(w)
+        qd = shard_quadratic(qw, mesh)
+        for sketch in ("gaussian", "sjlt", "srht"):
+            got = np.asarray(shard_level_grams(get_provider(sketch), keys,
+                                               qd, ladder, mesh))
+            emu = BlockEmulationProvider(sketch, K)
+            want = np.asarray(emu.level_grams(
+                emu.sample(keys, m_max, n, jnp.float32), qw, ladder))
+            rel = np.linalg.norm(got - want) / (np.linalg.norm(want) + 1e-30)
+            assert rel < 1e-5, (sketch, rel)
+        G = np.asarray(shard_weighted_gram(qd, mesh))
+        G_ref = np.asarray(jnp.einsum("bn,bnd,bne->bde", w, A, A))
+        assert np.linalg.norm(G - G_ref) / np.linalg.norm(G_ref) < 1e-5
+        x_sh, s_sh = padded_adaptive_solve_batched(
+            qd, keys, m_max=m_max, method="pcg", sketch="gaussian",
+            max_iters=100, tol=1e-12, mesh=mesh)
+        x_star = np.asarray(direct_solve(qw))
+        rel = np.linalg.norm(np.asarray(x_sh) - x_star) / np.linalg.norm(x_star)
+        assert rel < 1e-4, rel
+        print("WEIGHTED_SHARDED_OK")
+    """)
+    assert "WEIGHTED_SHARDED_OK" in out
+
+
 # ---------------------------------------------------------------------------
 # K=8 engine vs single device (acceptance)
 # ---------------------------------------------------------------------------
