@@ -12,6 +12,8 @@ Layout:
   distributed.py    row-sharded A: block sketches + GSPMD solver steps
   objectives.py     regularized GLM losses (logistic/poisson/huber/quadratic)
   newton.py         adaptive sketched-Newton driver over the padded engine
+  status.py         per-problem SolveStatus failure lattice (DESIGN.md §9)
+  robust.py         retry-with-redrawn-sketch + direct-solve fallback driver
 
 Every core op accepts an optional leading problem axis (batched
 ``Quadratic``) — see quadratic.py and DESIGN.md §6. Weighted Grams AᵀWA
@@ -46,8 +48,15 @@ from .quadratic import (
     stack_quadratics,
     weighted_gram,
 )
+from .robust import robust_padded_solve_batched
 from .sketches import Sketch, fwht, make_sketch
 from .solvers import cg_solve, newton_solve, run_fixed
+from .status import (
+    CONVERGED_STATUSES,
+    ENGINE_FAILURES,
+    SolveStatus,
+    status_name,
+)
 
 __all__ = [
     "AdaptiveConfig",
@@ -86,4 +95,9 @@ __all__ = [
     "cg_solve",
     "newton_solve",
     "run_fixed",
+    "robust_padded_solve_batched",
+    "SolveStatus",
+    "ENGINE_FAILURES",
+    "CONVERGED_STATUSES",
+    "status_name",
 ]

@@ -78,6 +78,7 @@ import jax.numpy as jnp
 from .level_grams import PADDED_SKETCHES, get_provider
 from .quadratic import Quadratic, weighted_gram
 from .solvers import c_alpha_rho, rho_to_rate
+from .status import SolveStatus
 
 PADDED_METHODS = ("ihs", "pcg", "polyak")
 
@@ -100,6 +101,8 @@ class PaddedState(NamedTuple):
     iters: jnp.ndarray        # (B,)  accepted iterations
     doublings: jnp.ndarray    # (B,)
     done: jnp.ndarray         # (B,)  bool
+    converged: jnp.ndarray    # (B,)  bool: δ̃ cleared tol (honest, not "done")
+    nan_hit: jnp.ndarray      # (B,)  bool: a non-finite proposal was seen
     trips: jnp.ndarray        # scalar loop-trip counter
 
 
@@ -159,9 +162,33 @@ def _gather_pinv(pinvs: jnp.ndarray, level: jnp.ndarray) -> jnp.ndarray:
     return pinvs[level, jnp.arange(level.shape[0])]
 
 
+def _valid_level_remap(level_ok: jnp.ndarray):
+    """Per-(level, problem) redirect around invalid ladder levels.
+
+    ``level_ok`` (L, B) marks levels whose sketched Gram AND its factorized
+    inverse are entirely finite. A level can be individually invalid (a
+    rank-deficient low-m sketched Gram under ν ≈ 0 Choleskys to NaN) without
+    the problem being hopeless — the doubling controller should *skip* it,
+    not let one NaN factor poison the whole solve. ``remap[l, b]`` is the
+    nearest valid level ≥ l (the controller only ever moves up the ladder),
+    falling back to the largest valid level below when the top of the
+    ladder is invalid, and −1 when the problem has NO valid level at all
+    (its lattice verdict is ``LEVEL_INVALID``). Both sweeps are one
+    associative scan over the ladder axis — O(L·B), free next to the
+    factorizations themselves."""
+    L = level_ok.shape[0]
+    idx = jnp.arange(L, dtype=jnp.int32)[:, None]
+    up = jnp.where(level_ok, idx, jnp.int32(L))
+    up = jax.lax.associative_scan(jnp.minimum, up, reverse=True, axis=0)
+    down = jnp.where(level_ok, idx, jnp.int32(-1))
+    down = jax.lax.associative_scan(jnp.maximum, down, axis=0)
+    remap = jnp.where(up < L, up, down)          # (L, B); −1 ⇒ none valid
+    return remap, jnp.any(level_ok, axis=0)
+
+
 @partial(jax.jit,
          static_argnames=("m_max", "method", "sketch", "max_iters", "rho",
-                          "gram_hvp", "mesh"))
+                          "gram_hvp", "mesh", "guards"))
 def padded_adaptive_solve_batched(
     q: Quadratic,
     keys: jax.Array,
@@ -175,6 +202,7 @@ def padded_adaptive_solve_batched(
     gram_hvp: bool | None = None,
     mesh=None,
     init_level: jax.Array | None = None,
+    guards: bool = True,
 ):
     """One-executable adaptive solve of a batch of B problems.
 
@@ -204,6 +232,19 @@ def padded_adaptive_solve_batched(
     the serving regime (n ≫ d, many iterations), and no more than the
     sketch pass we already pay; large-d problems keep the matrix-free O(nd)
     hvp of the paper.
+
+    ``guards`` (static, default on): the failure-isolation layer
+    (DESIGN.md §9). Post-Cholesky finiteness checks mark individual ladder
+    levels invalid and the controller *skips* them (``_valid_level_remap``)
+    instead of letting one NaN factor poison the solve; iterate proposals
+    are finiteness-checked so a non-finite step is rejected (doubling below
+    the cap, circuit-breaking at it) and the best FINITE iterate is always
+    what is returned; every problem exits with a truthful per-problem
+    ``status`` ∈ {OK, STALLED, LEVEL_INVALID, NAN_POISONED} plus explicit
+    ``converged``/``stalled`` flags. ``guards=False`` restores the
+    pre-guard hot path (no level remap, δ̃-only finiteness) for overhead
+    benchmarking (``benchmarks/bench_guard.py``); statuses are still
+    reported but ladder validity is assumed.
 
     ``mesh`` (static): a ``jax.sharding.Mesh`` whose data axes row-shard A
     (``distributed.shard_quadratic`` places it). The ONLY thing that
@@ -235,6 +276,31 @@ def padded_adaptive_solve_batched(
     pinvs = _precompute_pinvs(grams, q)
     ladder_m = jnp.asarray(ladder, jnp.int32)
     top = len(ladder) - 1
+
+    if guards:
+        # Post-Cholesky validity: a level is usable only if its Gram and
+        # its factorized inverse are entirely finite. Invalid levels are
+        # skipped via the remap (gathers below go through the redirected
+        # table); problems with NO valid level get identity "inverses" so
+        # their lanes stay finite — they are frozen at x₀ before the loop
+        # and reported LEVEL_INVALID.
+        gram_ok = jnp.all(jnp.isfinite(grams), axis=(-1, -2))       # (L, B)
+        level_ok = gram_ok & jnp.all(jnp.isfinite(pinvs), axis=(-1, -2))
+        # non-finite Grams mean poisoned data or a poisoned sketch pass —
+        # distinguishes NAN_POISONED from the finite-but-singular
+        # LEVEL_INVALID verdict when the whole ladder is unusable
+        gram_poisoned = jnp.any(~gram_ok, axis=0)                   # (B,)
+        remap, any_valid = _valid_level_remap(level_ok)
+        pinvs = jnp.take_along_axis(
+            pinvs, jnp.maximum(remap, 0)[:, :, None, None], axis=0)
+        pinvs = jnp.where(any_valid[None, :, None, None], pinvs,
+                          jnp.eye(q.d, dtype=pinvs.dtype))
+        invalid_levels = jnp.sum(~level_ok, axis=0).astype(jnp.int32)
+    else:
+        remap = None
+        any_valid = jnp.ones((B,), bool)
+        gram_poisoned = jnp.zeros((B,), bool)
+        invalid_levels = jnp.zeros((B,), jnp.int32)
 
     if gram_hvp is None:
         gram_hvp = q.d <= min(q.n, 1024)
@@ -281,6 +347,7 @@ def padded_adaptive_solve_batched(
     g0 = grad_f(x0)                                  # = −b
     rt0 = _apply_pinv(pinv0, -g0)
     dt0 = 0.5 * _pdot(-g0, rt0)
+    conv0 = dt0 <= tol * dt0                         # trivially-solved (b=0)
 
     init = PaddedState(
         x=x0, x_prev=x0, r=-g0, rt=rt0, p=rt0, grad=g0,
@@ -289,7 +356,9 @@ def padded_adaptive_solve_batched(
         x_best=x0, dt_best=dt0, pinv=pinv0,
         iters=jnp.zeros((B,), jnp.int32),
         doublings=jnp.zeros((B,), jnp.int32),
-        done=dt0 <= tol * dt0,                       # trivially-solved (b=0)
+        done=conv0 | ~any_valid,         # no valid level ⇒ frozen at x₀
+        converged=conv0,
+        nan_hit=jnp.zeros((B,), bool),
         trips=jnp.asarray(0, jnp.int32),
     )
     # Rejects per problem are bounded by the ladder length; the trip cap is
@@ -332,7 +401,16 @@ def padded_adaptive_solve_batched(
 
         # ---- per-problem improvement test (Alg 4.1 line 6) ----
         threshold = c * (phi ** (st.t_rel + 1).astype(fdtype)) * st.dtilde_I
-        bad = jnp.logical_or(~jnp.isfinite(dt_new), dt_new > threshold)
+        if guards:
+            # a proposal is only acceptable if the iterate itself is finite,
+            # not just its δ̃ — the pair (Inf, −Inf) can produce a finite
+            # inner product, and an accepted non-finite x would defeat the
+            # best-finite-iterate guarantee below
+            finite_prop = jnp.isfinite(dt_new) & jnp.all(
+                jnp.isfinite(x_new), axis=-1)
+        else:
+            finite_prop = jnp.isfinite(dt_new)
+        bad = ~finite_prop | (dt_new > threshold)
         at_cap = st.level >= top
         reject = bad & active & ~at_cap
         # At the ladder cap the rate test is unenforceable (no further
@@ -342,9 +420,15 @@ def padded_adaptive_solve_batched(
         # capped preconditioner, e.g. IHS) stalls the problem — the caller
         # reads the shortfall off the returned δ̃ certificate. Without the
         # safeguard a diverging iteration would be "accepted" to overflow.
+        # A non-finite proposal at the cap is the per-problem circuit
+        # breaker: the problem freezes at its best finite iterate (a
+        # non-finite proposal is NEVER accepted, so x_best stays finite for
+        # finite inputs) and ``nan_hit`` records the poisoning for the
+        # status verdict.
         stalled = active & at_cap & (
-            ~jnp.isfinite(dt_new) | (dt_new > 1e6 * st.dt_best))
+            ~finite_prop | (dt_new > 1e6 * st.dt_best))
         accept = active & ~reject & ~stalled
+        conv_now = accept & (dt_new <= tol * st.dtilde0)
 
         aB = accept[:, None]
         improved = accept & (dt_new < st.dt_best)
@@ -365,8 +449,10 @@ def padded_adaptive_solve_batched(
             pinv=st.pinv,
             iters=st.iters + accept.astype(jnp.int32),
             doublings=st.doublings + reject.astype(jnp.int32),
-            done=st.done | stalled | (accept & (dt_new <= tol * st.dtilde0))
+            done=st.done | stalled | conv_now
                  | (st.iters + accept.astype(jnp.int32) >= max_iters),
+            converged=st.converged | conv_now,
+            nan_hit=st.nan_hit | (active & ~finite_prop),
             trips=st.trips + 1,
         )
 
@@ -402,9 +488,26 @@ def padded_adaptive_solve_batched(
         return jax.lax.cond(jnp.any(reject), do_refactor, lambda s: s, st1)
 
     st = jax.lax.while_loop(cond, body, init)
-    stats = {"m_final": ladder_m[st.level], "iters": st.iters,
+    if guards:
+        # report the level actually used (the remapped gather target), so
+        # m_final and warm-start tokens reflect the sketch that produced
+        # the certificate rather than a skipped invalid level
+        eff_level = jnp.maximum(
+            remap[st.level, jnp.arange(B)], 0).astype(jnp.int32)
+    else:
+        eff_level = st.level
+    status = jnp.where(
+        st.converged, jnp.int32(SolveStatus.OK),
+        jnp.where(st.nan_hit | gram_poisoned,
+                  jnp.int32(SolveStatus.NAN_POISONED),
+                  jnp.where(~any_valid, jnp.int32(SolveStatus.LEVEL_INVALID),
+                            jnp.int32(SolveStatus.STALLED))))
+    stats = {"m_final": ladder_m[eff_level], "iters": st.iters,
              "doublings": st.doublings, "dtilde": st.dt_best,
-             "level": st.level, "trips": st.trips}
+             "level": eff_level, "trips": st.trips,
+             "status": status, "converged": st.converged,
+             "stalled": status == jnp.int32(SolveStatus.STALLED),
+             "invalid_levels": invalid_levels}
     return st.x_best, stats
 
 

@@ -231,12 +231,29 @@ class BlockEmulationProvider:
     replicated reference for ``distributed.shard_level_grams`` (identical
     math, identical per-shard keys, no mesh), used by the multi-device
     tests and as the 1-device baseline in ``benchmarks/bench_sharded.py``.
-    Pass the instance itself as the engine's ``sketch=``."""
+    Pass the instance itself as the engine's ``sketch=``.
 
-    def __init__(self, inner: "LevelGramProvider | str", n_shards: int):
+    ``drop_shards``: simulate shard dropout (DESIGN.md §9) — the listed
+    shard indices contribute NOTHING to the level-Gram sum, exactly the
+    K−1-block re-psum a pod performs after losing a data shard. The
+    resulting Grams are still valid sketches of the SURVIVING rows, so the
+    preconditioner is merely weaker, not wrong — unless the lost rows
+    carried the dominant mass, in which case the engine's guards (stall
+    detection → retry → fallback) are what keep the answer honest; the
+    chaos suite (``tests/test_faults.py``) exercises both regimes."""
+
+    def __init__(self, inner: "LevelGramProvider | str", n_shards: int,
+                 drop_shards: tuple[int, ...] = ()):
         self.inner = get_provider(inner)
         self.n_shards = n_shards
-        self.name = f"block[{self.inner.name}x{n_shards}]"
+        self.drop_shards = tuple(sorted(set(drop_shards)))
+        if any(k < 0 or k >= n_shards for k in self.drop_shards):
+            raise ValueError(
+                f"drop_shards {drop_shards} out of range for {n_shards}")
+        if len(self.drop_shards) >= n_shards:
+            raise ValueError("cannot drop every shard")
+        drop = (f"-drop{list(self.drop_shards)}" if self.drop_shards else "")
+        self.name = f"block[{self.inner.name}x{n_shards}{drop}]"
 
     def _check(self, n: int) -> int:
         if n % self.n_shards:
@@ -258,6 +275,8 @@ class BlockEmulationProvider:
         w = q.row_weights if row_weights is None else row_weights
         out = None
         for k, dk in enumerate(data["shards"]):
+            if k in self.drop_shards:       # lost shard: absent from psum
+                continue
             A_k = q.A[..., k * n_loc:(k + 1) * n_loc, :]
             w_k = None if w is None else w[:, k * n_loc:(k + 1) * n_loc]
             q_k = Quadratic(A=A_k, b=q.b, nu=q.nu, lam_diag=q.lam_diag,

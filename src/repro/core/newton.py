@@ -47,6 +47,7 @@ from .objectives import (
     glm_value,
 )
 from .quadratic import Quadratic, _as_batched_reg
+from .status import SolveStatus
 
 
 @partial(jax.jit, static_argnames=("obj",))
@@ -155,6 +156,7 @@ def _newton_loop(family, A, y, nu, lam_diag, inner_solve, *,
     dec = jnp.full((B,), jnp.inf, A.dtype)
     iters = jnp.zeros((B,), jnp.int32)
     inner_total = jnp.zeros((B,), jnp.int32)
+    inner_status = jnp.zeros((B,), jnp.int32)   # last active inner verdict
     m_traj = []
 
     for t in range(newton_iters):
@@ -173,6 +175,8 @@ def _newton_loop(family, A, y, nu, lam_diag, inner_solve, *,
             # carry the discovered ladder level across steps (warm m_t)
             level = jnp.where(~done, s_in["level"], level)
             inner_total = inner_total + jnp.where(~done, s_in["iters"], 0)
+            if "status" in s_in:
+                inner_status = jnp.where(~done, s_in["status"], inner_status)
             m_traj.append(np.asarray(jnp.where(~done, s_in["m_final"], 0)))
         dec = jnp.where(~done, 0.5 * dec_t, dec)
         iters = iters + active.astype(jnp.int32)
@@ -184,14 +188,27 @@ def _newton_loop(family, A, y, nu, lam_diag, inner_solve, *,
     m_last = np.zeros((B,), np.int32)
     for row in m_traj_arr:                     # last non-frozen m per problem
         m_last = np.where(row > 0, row, m_last)
+    converged = dec <= tol
+    # GLM verdict (DESIGN.md §9): convergence of the *outer* decrement is
+    # what certifies the answer; a non-converged problem inherits its last
+    # active inner engine failure (a poisoned/unusable Newton system is the
+    # cause), and otherwise stalled — frozen by the line search or the
+    # outer budget.
+    engine_fail = (inner_status == jnp.int32(SolveStatus.LEVEL_INVALID)) | (
+        inner_status == jnp.int32(SolveStatus.NAN_POISONED))
+    status = jnp.where(
+        converged, jnp.int32(SolveStatus.OK),
+        jnp.where(engine_fail, inner_status, jnp.int32(SolveStatus.STALLED)))
     stats = {
         "newton_iters": iters,
         "decrement": dec,
-        "converged": dec <= tol,
+        "converged": converged,
         "m_trajectory": m_traj_arr,
         "m_final": jnp.asarray(m_last),
         "level": level,
         "inner_iters": inner_total,
+        "status": status,
+        "stalled": status == jnp.int32(SolveStatus.STALLED),
     }
     return x, stats
 

@@ -1,0 +1,189 @@
+"""Retry / fallback driver over the padded adaptive engine (DESIGN.md §9).
+
+``padded_adaptive_solve_batched`` with ``guards=True`` terminates every
+problem with a truthful per-problem verdict — but the engine itself never
+*recovers* a failed problem: a stall at the ladder cap or a poisoned ladder
+is terminal within one sketch draw. This module adds the host-side policy
+layer that turns those engine failures into finished answers:
+
+1. **Retry with a redrawn sketch.** An engine failure (``STALLED`` /
+   ``LEVEL_INVALID`` / ``NAN_POISONED``) is, for clean data, most likely a
+   bad draw — the adaptive theory (arXiv 2006.05874) only bounds the
+   failure probability per draw. Failed problems are gathered into a
+   padded sub-batch of the SAME (B, …) shape (unused slots get b = 0 and
+   converge at x₀, so the retry reuses the already-compiled executable),
+   their keys are redrawn with ``fold_in(key, retry)``, and the ladder is
+   warm-started at the level the failed attempt reached (the PR 5
+   ``init_level`` hook — a retry should not re-climb a ladder it already
+   paid for). Bounded at ``max_retries``; a retry that converges is
+   reported ``RETRIED`` with its attempt count, and a retry that merely
+   improves δ̃ is adopted as the new best iterate while remaining failed.
+
+2. **Graceful degradation.** Problems still failed after the retry budget
+   go to the dense ``direct_solve`` oracle (host path, O(nd²+d³) — rare by
+   construction). A finite direct answer is adopted with status
+   ``FELL_BACK`` and a NaN δ̃ (the fallback carries no sketched
+   certificate); a non-finite one (truly poisoned data — no solver can fix
+   a NaN row) keeps the engine's best finite iterate and its honest
+   engine verdict.
+
+The invariant downstream layers rely on: **the returned x is always
+finite, and the status tells the truth about where it came from.**
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .adaptive_padded import _is_single_key, padded_adaptive_solve_batched
+from .quadratic import Quadratic, direct_solve
+from .status import CONVERGED_STATUSES, ENGINE_FAILURES, SolveStatus
+
+
+def _gather_quadratic(q: Quadratic, idx: jax.Array,
+                      dead_mask: np.ndarray | None = None) -> Quadratic:
+    """Sub-batch q[idx]; slots where ``dead_mask`` is True get b = 0 so the
+    engine converges on them at x₀ (padding lanes of a retry batch)."""
+    b = q.b[idx]
+    if dead_mask is not None:
+        b = jnp.where(jnp.asarray(dead_mask)[:, None], jnp.zeros_like(b), b)
+    return Quadratic(
+        A=q.A if q.shared_A else q.A[idx],
+        b=b,
+        nu=q.nu[idx],
+        lam_diag=q.lam_diag[idx],
+        batched=True,
+        row_weights=None if q.row_weights is None else q.row_weights[idx],
+    )
+
+
+def robust_padded_solve_batched(
+    q: Quadratic,
+    keys: jax.Array,
+    *,
+    m_max: int,
+    method: str = "pcg",
+    sketch: str = "gaussian",
+    max_iters: int = 100,
+    rho: float = 0.5,
+    tol: float = 1e-10,
+    gram_hvp: bool | None = None,
+    mesh=None,
+    init_level: jax.Array | None = None,
+    max_retries: int = 2,
+    fallback: bool = True,
+):
+    """Solve a batch with engine guards + sketch-redraw retries + fallback.
+
+    Same contract as ``padded_adaptive_solve_batched`` (which it calls with
+    ``guards=True``), plus the recovery policy above. Returns ``(x, stats)``
+    where x (B, d) is finite for every problem that admits a finite answer,
+    and ``stats`` carries per-problem vectors:
+
+    * ``status``     — final ``SolveStatus`` codes (int32)
+    * ``retries``    — redraw attempts consumed (0 ⇒ first draw sufficed)
+    * ``fell_back``  — bool, answer came from ``direct_solve``
+    * ``converged``/``stalled`` — convenience masks over ``status``
+    * engine certificates (``dtilde``, ``m_final``, ``iters`` — accumulated
+      across attempts — ``doublings``, ``level``, ``invalid_levels``);
+      ``dtilde`` is NaN on fallen-back slots (no sketched certificate).
+
+    ``max_retries=0`` disables redraws (straight to fallback);
+    ``fallback=False`` disables the dense oracle — failures then keep the
+    engine's best finite iterate and verdict (useful in tests and when the
+    O(nd²) host path is unaffordable).
+    """
+    B = q.batch
+    if _is_single_key(keys):
+        keys = jax.random.split(keys, B)
+
+    solve = lambda qq, kk, lvl: padded_adaptive_solve_batched(
+        qq, kk, m_max=m_max, method=method, sketch=sketch,
+        max_iters=max_iters, rho=rho, tol=tol, gram_hvp=gram_hvp,
+        mesh=mesh, init_level=lvl, guards=True)
+
+    x_dev, stats_dev = solve(q, keys, init_level)
+
+    x = np.array(x_dev)
+    status = np.array(stats_dev["status"])
+    dtilde = np.array(stats_dev["dtilde"])
+    m_final = np.array(stats_dev["m_final"])
+    iters = np.array(stats_dev["iters"])
+    doublings = np.array(stats_dev["doublings"])
+    level = np.array(stats_dev["level"])
+    invalid_levels = np.array(stats_dev["invalid_levels"])
+    trips = int(stats_dev["trips"])
+
+    retries = np.zeros(B, dtype=np.int32)
+    fell_back = np.zeros(B, dtype=bool)
+    failure_codes = np.array([int(s) for s in ENGINE_FAILURES])
+    failed = np.isin(status, failure_codes)
+
+    for attempt in range(1, max_retries + 1):
+        fidx = np.flatnonzero(failed)
+        if fidx.size == 0:
+            break
+        # Same-shape padded gather: the retry reuses the compiled executable.
+        pad = np.full(B, fidx[0], dtype=np.int64)
+        pad[: fidx.size] = fidx
+        live = np.zeros(B, dtype=bool)
+        live[: fidx.size] = True
+        idx = jnp.asarray(pad)
+        q_sub = _gather_quadratic(q, idx, dead_mask=~live)
+        keys_sub = jax.vmap(
+            lambda k: jax.random.fold_in(k, attempt))(keys[idx])
+        warm = jnp.asarray(level[pad], dtype=jnp.int32)
+
+        x_sub, s_sub = solve(q_sub, keys_sub, warm)
+        x_sub = np.array(x_sub)
+        st_sub = np.array(s_sub["status"])
+        dt_sub = np.array(s_sub["dtilde"])
+
+        for j, g in enumerate(fidx):
+            retries[g] = attempt
+            iters[g] += int(np.array(s_sub["iters"])[j])
+            adopted = st_sub[j] in [int(s) for s in CONVERGED_STATUSES]
+            improved = np.isfinite(dt_sub[j]) and (
+                not np.isfinite(dtilde[g]) or dt_sub[j] < dtilde[g])
+            if adopted or improved:
+                x[g] = x_sub[j]
+                dtilde[g] = dt_sub[j]
+                m_final[g] = np.array(s_sub["m_final"])[j]
+                doublings[g] = np.array(s_sub["doublings"])[j]
+                level[g] = np.array(s_sub["level"])[j]
+                invalid_levels[g] = np.array(s_sub["invalid_levels"])[j]
+            status[g] = (int(SolveStatus.RETRIED) if adopted
+                         else int(st_sub[j]))
+            failed[g] = not adopted
+        trips += int(s_sub["trips"])
+
+    fidx = np.flatnonzero(failed)
+    if fallback and fidx.size:
+        q_f = _gather_quadratic(q, jnp.asarray(fidx))
+        x_fb = np.array(direct_solve(q_f))
+        finite = np.all(np.isfinite(x_fb), axis=-1)
+        for j, g in enumerate(fidx):
+            if finite[j]:
+                x[g] = x_fb[j]
+                status[g] = int(SolveStatus.FELL_BACK)
+                fell_back[g] = True
+                dtilde[g] = np.nan  # no sketched certificate on this path
+
+    conv_codes = np.array([int(s) for s in CONVERGED_STATUSES])
+    stats = {
+        "status": jnp.asarray(status, dtype=jnp.int32),
+        "retries": jnp.asarray(retries),
+        "fell_back": jnp.asarray(fell_back),
+        "converged": jnp.asarray(np.isin(status, conv_codes)),
+        "stalled": jnp.asarray(status == int(SolveStatus.STALLED)),
+        "dtilde": jnp.asarray(dtilde),
+        "m_final": jnp.asarray(m_final),
+        "iters": jnp.asarray(iters),
+        "doublings": jnp.asarray(doublings),
+        "level": jnp.asarray(level),
+        "invalid_levels": jnp.asarray(invalid_levels),
+        "trips": trips,
+    }
+    return jnp.asarray(x), stats

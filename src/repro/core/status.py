@@ -1,0 +1,74 @@
+"""Per-problem solve statuses — the failure lattice (DESIGN.md §9).
+
+Every request that enters the stack terminates with a finite iterate and
+exactly one of these verdicts. The engine (``core.adaptive_padded``) emits
+the first four; the retry/fallback driver (``core.robust``) refines failed
+problems into ``RETRIED`` / ``FELL_BACK``; the serving layer
+(``serve.solver_service``) adds the two admission/deadline codes that never
+reach the engine at all. Codes are plain int32 values inside jitted state
+(an ``IntEnum`` compares/selects fine under ``jnp.where``).
+
+Lattice, from best to worst:
+
+* ``OK``                — converged to tolerance under the first sketch draw.
+* ``RETRIED``           — converged, but only after ≥1 sketch redraw
+                          (``fold_in(key, retry)``); retry count rides in the
+                          separate ``retries`` certificate.
+* ``FELL_BACK``         — the adaptive engine never converged (stall at the
+                          ladder cap, poisoned ladder) and the answer comes
+                          from the dense ``direct_solve`` fallback instead;
+                          finite and usually accurate, but carries NO δ̃
+                          certificate.
+* ``STALLED``           — terminated without reaching tolerance (divergence
+                          stall at the ladder cap, or iteration budget
+                          exhausted) and no fallback produced a finite
+                          answer; the returned x is the best finite iterate
+                          and δ̃ states the shortfall honestly.
+* ``LEVEL_INVALID``     — every ladder level's factorization was non-finite
+                          (numerically singular H_S at all sizes); nothing
+                          to iterate with. Individual invalid levels are
+                          *skipped*, not fatal — this code means the whole
+                          ladder was unusable.
+* ``NAN_POISONED``      — non-finite arithmetic was observed (NaN/Inf in the
+                          data, the sketch pass, or an iterate proposal) and
+                          the problem never converged; the per-problem
+                          circuit breaker froze it at its best finite
+                          iterate (x₀ = 0 if nothing finite ever improved).
+* ``REJECTED``          — failed submit-time validation (non-finite A/y/Λ,
+                          ν ≤ 0); quarantined before packing, never solved.
+* ``DEADLINE_EXCEEDED`` — the flush deadline ran out before this request's
+                          batch dispatched; returned unsolved.
+"""
+
+from __future__ import annotations
+
+from enum import IntEnum
+
+
+class SolveStatus(IntEnum):
+    OK = 0
+    STALLED = 1
+    LEVEL_INVALID = 2
+    NAN_POISONED = 3
+    RETRIED = 4
+    FELL_BACK = 5
+    REJECTED = 6
+    DEADLINE_EXCEEDED = 7
+
+
+#: Engine-level terminal failures — retryable with a redrawn sketch, then
+#: eligible for the direct-solve fallback (core.robust).
+ENGINE_FAILURES = (
+    SolveStatus.STALLED,
+    SolveStatus.LEVEL_INVALID,
+    SolveStatus.NAN_POISONED,
+)
+
+#: Statuses whose solution converged under an adaptive sketch and carries a
+#: trustworthy δ̃ certificate.
+CONVERGED_STATUSES = (SolveStatus.OK, SolveStatus.RETRIED)
+
+
+def status_name(code) -> str:
+    """Human-readable name for a status code (int, numpy or jnp scalar)."""
+    return SolveStatus(int(code)).name

@@ -1,4 +1,12 @@
 from .checkpoint import CheckpointManager
+from .faults import (
+    AdversarialKeyProvider,
+    dropout_provider,
+    ill_conditioned_matrix,
+    inject_inf_entry,
+    inject_nan_row,
+    rank_deficient_matrix,
+)
 from .resilience import (
     ElasticPlan,
     PreemptionHandler,

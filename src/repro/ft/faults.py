@@ -1,0 +1,122 @@
+"""Fault-injection harness for the solve pipeline (DESIGN.md §9).
+
+The failure model's claims — per-slot isolation, bounded retries, truthful
+statuses, finite answers — are only worth anything if they are *exercised*:
+this module provides the injectors the chaos suite (``tests/test_faults.py``
+and the CI chaos job) drives against the engine, the robust driver and the
+serving layer. Fault classes:
+
+* data faults — NaN rows / Inf entries in A or y (``inject_nan_row``,
+  ``inject_inf_entry``), rank-deficient A (``rank_deficient_matrix``),
+  κ ≈ 1e10 conditioning (``ill_conditioned_matrix``);
+* sketch faults — adversarially-chosen sketch keys
+  (``AdversarialKeyProvider``): the serving layer's key schedule is the
+  DETERMINISTIC ``fold_in(base_key, req_id)``, so a key whose draw is bad
+  for a given problem is reproducibly bad — the wrapper poisons exactly
+  the slots whose key matches a black-list, emulating the worst-case draw
+  for that schedule, and the retry driver's ``fold_in(key, attempt)``
+  redraw is precisely what escapes it;
+* infrastructure faults — simulated shard dropout: a
+  ``BlockEmulationProvider(..., drop_shards=...)`` whose dropped shards
+  contribute nothing to the level-Gram psum, the single-device emulation
+  of a pod re-psumming over K−1 surviving data shards.
+
+Everything here is build-time injection into otherwise-ordinary inputs;
+nothing in this module is imported by the production path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.level_grams import BlockEmulationProvider, get_provider
+
+
+# -- data faults -----------------------------------------------------------
+def inject_nan_row(A: jnp.ndarray, problem: int, row: int = 0) -> jnp.ndarray:
+    """Return A (B, n, d) with every entry of one problem's row set to NaN
+    (a corrupted feature record)."""
+    return A.at[problem, row, :].set(jnp.nan)
+
+
+def inject_inf_entry(y: jnp.ndarray, problem: int, idx: int = 0,
+                     sign: float = 1.0) -> jnp.ndarray:
+    """Return y (B, n) with one target entry of one problem set to ±Inf
+    (an overflowed label)."""
+    return y.at[problem, idx].set(sign * jnp.inf)
+
+
+def rank_deficient_matrix(key: jax.Array, n: int, d: int,
+                          rank: int) -> jnp.ndarray:
+    """(n, d) matrix of exact rank ``rank`` < d (duplicated factor columns:
+    collinear features, the classic degenerate design)."""
+    if not 0 < rank < d:
+        raise ValueError(f"need 0 < rank < d, got rank={rank}, d={d}")
+    L = jax.random.normal(key, (n, rank)) / jnp.sqrt(n)
+    R = jax.random.normal(jax.random.fold_in(key, 1), (rank, d))
+    return L @ R
+
+
+def ill_conditioned_matrix(key: jax.Array, n: int, d: int,
+                           cond: float = 1e10) -> jnp.ndarray:
+    """(n, d) matrix with singular values log-spaced over κ = ``cond``."""
+    ku, kv = jax.random.split(key)
+    U, _ = jnp.linalg.qr(jax.random.normal(ku, (n, d)))
+    V, _ = jnp.linalg.qr(jax.random.normal(kv, (d, d)))
+    sv = jnp.logspace(0.0, -jnp.log10(cond), d)
+    return (U * sv[None, :]) @ V.T
+
+
+# -- sketch faults ---------------------------------------------------------
+def _key_bits(keys: jax.Array) -> jnp.ndarray:
+    """Raw uint32 bits for typed (jax.random.key) or legacy keys."""
+    if jnp.issubdtype(keys.dtype, jax.dtypes.prng_key):
+        return jax.random.key_data(keys)
+    return keys
+
+
+class AdversarialKeyProvider:
+    """Level-Gram provider wrapper that NaN-poisons the sketch of exactly
+    the problems whose per-problem key is on a black-list.
+
+    This models the adversarial-draw threat for a *deterministic* key
+    schedule (the serving layer derives slot keys as
+    ``fold_in(base_key, req_id)``): an adversary who knows the schedule can
+    craft a request whose assigned draw is catastrophically bad. Poisoning
+    is lanewise over the batch axis of the (L, B, d, d) level Grams —
+    neighbors' Grams are bit-identical to a clean pass, which is what the
+    isolation assertions in the chaos suite check — and traceable (a key
+    comparison under jit), so the wrapped provider runs inside the same
+    compiled engine. A redrawn key (``fold_in(key, attempt)``, the retry
+    driver) no longer matches the black-list: retries recover, exactly the
+    designed escape hatch.
+    """
+
+    def __init__(self, inner, bad_keys: jax.Array):
+        self.inner = get_provider(inner)
+        bits = _key_bits(jnp.asarray(bad_keys))
+        self._bad_bits = bits[None] if bits.ndim == 1 else bits  # (K, 2)
+        self.name = f"adversarial[{self.inner.name}]"
+
+    def sample(self, keys, m_max, n, dtype):
+        bits = _key_bits(keys)                                   # (B, 2)
+        hit = jnp.all(bits[:, None, :] == self._bad_bits[None, :, :],
+                      axis=-1)                                   # (B, K)
+        return {"inner": self.inner.sample(keys, m_max, n, dtype),
+                "_poisoned": jnp.any(hit, axis=-1)}              # (B,)
+
+    def level_grams(self, data, q, ladder, row_weights=None):
+        g = self.inner.level_grams(data["inner"], q, ladder,
+                                   row_weights=row_weights)      # (L, B, d, d)
+        return jnp.where(data["_poisoned"][None, :, None, None],
+                         jnp.nan, g)
+
+
+# -- infrastructure faults -------------------------------------------------
+def dropout_provider(inner, n_shards: int,
+                     drop_shards: tuple[int, ...]) -> BlockEmulationProvider:
+    """Block-sketch provider emulating a pod that lost ``drop_shards`` of
+    its ``n_shards`` data shards and re-psums level Grams over the
+    survivors (DESIGN.md §5/§9)."""
+    return BlockEmulationProvider(inner, n_shards, drop_shards=drop_shards)

@@ -53,7 +53,8 @@ def serve_ridge(args):
     from repro.serve.solver_service import GLMSolution
 
     svc = SolverService(batch_size=args.ridge_batch, method="pcg",
-                        sketch=args.sketch, mesh=mesh)
+                        sketch=args.sketch, mesh=mesh,
+                        strict=not args.faulty)
     rng = np.random.default_rng(0)
     truth = {}
     for i in range(args.requests):
@@ -63,6 +64,11 @@ def serve_ridge(args):
         y = jax.random.normal(jax.random.PRNGKey(2 * i + 1), (n,))
         rid = svc.submit(A, y, nu=float(rng.uniform(0.05, 0.5)))
         truth[rid] = (A, y)
+    for i in range(args.faulty):
+        # quarantine-path demo: NaN-poisoned requests ride the same flush
+        # and come back REJECTED without touching their packed neighbors
+        A = jnp.full((128, 16), jnp.nan)
+        svc.submit(A, jnp.zeros(128), nu=0.1)
     from repro.core.objectives import synthetic_logistic_problem
 
     for i in range(args.glm):
@@ -88,14 +94,26 @@ def serve_ridge(args):
           f"{svc.stats['padded_slots']} padded slots "
           f"({100 * svc.slot_utilization():.0f}% slot utilization"
           f"{mesh_note})")
-    if ridge_sols:
-        m_finals = [s.m_final for s in ridge_sols]
-        fams = sorted({s.sketch for s in ridge_sols})
+    # only converged solutions carry a trustworthy δ̃ certificate; rejected /
+    # fallen-back / expired ones report NaN there by design
+    ridge_ok = [s for s in ridge_sols if s.converged]
+    if ridge_ok:
+        m_finals = [s.m_final for s in ridge_ok]
+        fams = sorted({s.sketch for s in ridge_ok})
         print(f"ridge certificates ({'/'.join(fams)}): "
               f"m_final min/median/max = "
               f"{min(m_finals)}/{sorted(m_finals)[len(m_finals) // 2]}/"
               f"{max(m_finals)}, "
-              f"max residual δ̃ = {max(s.delta_tilde for s in ridge_sols):.2e}")
+              f"max residual δ̃ = {max(s.delta_tilde for s in ridge_ok):.2e}")
+    # failure-model report (DESIGN.md §9): every request has a verdict
+    counts: dict[str, int] = {}
+    for s in sols.values():
+        counts[s.status] = counts.get(s.status, 0) + 1
+    verdicts = ", ".join(f"{k}={v}" for k, v in sorted(counts.items()))
+    print(f"statuses: {verdicts}; retries={svc.stats['retries']}, "
+          f"fallbacks={svc.stats['fallbacks']}, "
+          f"rejected={svc.stats['rejected']}, "
+          f"deadline_exceeded={svc.stats['deadline_exceeded']}")
     if glm_sols:
         outer = [s.newton_iters for s in glm_sols]
         print(f"glm certificates (logistic): "
@@ -130,6 +148,11 @@ def build_parser() -> argparse.ArgumentParser:
                     help="packed batch size per shape class (--ridge); "
                          "its own flag so the LM --batch default of 4 "
                          "cannot silently leave 3/4 of the slots padded")
+    ap.add_argument("--faulty", type=int, default=0,
+                    help="additionally submit this many NaN-poisoned ridge "
+                         "requests (--ridge); runs the service with "
+                         "strict=False so they exercise the quarantine → "
+                         "REJECTED path instead of raising at submit")
     ap.add_argument("--mesh", type=int, default=0,
                     help="row-shard each packed batch's A over this many "
                          "data-mesh devices (--ridge); 0 = single device")

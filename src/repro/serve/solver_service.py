@@ -45,11 +45,12 @@ from typing import Iterable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.adaptive_padded import padded_adaptive_solve_batched
 from repro.core.distributed import n_data_shards, shard_quadratic
 from repro.core.newton import adaptive_newton_solve_batched
 from repro.core.objectives import get_objective
 from repro.core.quadratic import Quadratic
+from repro.core.robust import robust_padded_solve_batched
+from repro.core.status import SolveStatus, status_name
 
 
 class ShapeClass(NamedTuple):
@@ -118,6 +119,12 @@ class GLMSolution:
     shape_class: ShapeClass
     batch_index: int
     sketch: str = "gaussian"
+    # failure-lattice verdict (DESIGN.md §9); names from SolveStatus
+    status: str = "OK"
+    stalled: bool = False    # terminated above tolerance (distinct from
+                             # "done": frozen line search / outer budget)
+    retries: int = 0         # sketch redraws consumed (0 on the GLM path)
+    fell_back: bool = False  # answer from the dense fallback, no certificate
 
 
 @dataclasses.dataclass(frozen=True)
@@ -131,6 +138,14 @@ class RidgeSolution:
     shape_class: ShapeClass
     batch_index: int         # slot in the packed batch (observability)
     sketch: str = "gaussian"  # sketch family that produced the certificate
+    # failure-lattice verdict (DESIGN.md §9); names from SolveStatus
+    status: str = "OK"
+    converged: bool = True   # δ̃ cleared the service tolerance
+    stalled: bool = False    # terminated above tolerance — previously this
+                             # was folded into "done" and indistinguishable
+                             # from convergence without re-deriving it from δ̃
+    retries: int = 0         # sketch redraws consumed before this answer
+    fell_back: bool = False  # answer from direct_solve, no δ̃ certificate
 
 
 class SolverService:
@@ -165,6 +180,10 @@ class SolverService:
         max_iters: int = 200,
         seed: int = 0,
         mesh=None,
+        strict: bool = True,
+        max_retries: int = 2,
+        fallback: bool = True,
+        flush_deadline_s: float | None = None,
     ):
         if shape_classes is None:
             # the pod-scale n=65536 tail only exists where the batch is
@@ -196,8 +215,20 @@ class SolverService:
         self._next_id = 0
         self.newton_iters = 30
         self.newton_tol = 1e-9
+        # failure-model knobs (DESIGN.md §9): strict=True raises on invalid
+        # data at submit; strict=False quarantines the request and returns a
+        # REJECTED solution at flush so one bad tenant cannot crash the
+        # caller's whole submit loop. max_retries / fallback parameterize
+        # core.robust; flush_deadline_s is the default per-flush budget.
+        self.strict = strict
+        self.max_retries = max_retries
+        self.fallback = fallback
+        self.flush_deadline_s = flush_deadline_s
+        self._quarantined: dict[int, "RidgeSolution | GLMSolution"] = {}
+        self.rejection_reasons: dict[int, str] = {}
         self.stats = {"requests": 0, "batches": 0, "padded_slots": 0,
-                      "solve_seconds": 0.0}
+                      "solve_seconds": 0.0, "retries": 0, "fallbacks": 0,
+                      "rejected": 0, "deadline_exceeded": 0}
 
     def slot_utilization(self) -> float:
         """Fraction of solved batch slots that held a real request."""
@@ -224,18 +255,66 @@ class SolverService:
         H restricted to the padded block is ν²·I — with ν = 0 that block is
         singular, its Cholesky is NaN, and the NaN silently poisons the
         problem's solution AND its δ̃/m_final certificates (no exception is
-        ever raised inside the jitted engine). Rejecting here is the only
-        place the failure is observable before it becomes a wrong answer.
+        ever raised inside the jitted engine). The same argument applies to
+        NaN/Inf entries in A, y or Λ — submit is the only place the failure
+        is observable before it becomes a wrong answer, so admission
+        validates all of them: ``strict=True`` raises naming the request,
+        ``strict=False`` quarantines it into a ``REJECTED`` solution at
+        flush (the engine guards remain the backstop either way).
         """
-        nu = self._check_nu(nu)
         A = jnp.asarray(A)
         y = jnp.asarray(y)
-        req = RidgeRequest(req_id=self._next_id, A=A, y=y, nu=nu,
-                           lam_diag=lam_diag)
+        cls = self.bucket_for(*A.shape)     # shape errors always raise
+        nu, reason = self._validate(A, y, nu, lam_diag)
+        rid = self._next_id
         self._next_id += 1
-        self._queues[self.bucket_for(*A.shape)].append(req)
         self.stats["requests"] += 1
-        return req.req_id
+        if reason is not None:
+            self._reject(rid, reason, RidgeSolution(
+                req_id=rid, x=jnp.zeros((A.shape[1],), A.dtype),
+                delta_tilde=float("nan"), m_final=0, iters=0, doublings=0,
+                shape_class=cls, batch_index=-1, sketch=cls.sketch or
+                self.sketch, status=SolveStatus.REJECTED.name,
+                converged=False))
+            return rid
+        self._queues[cls].append(RidgeRequest(
+            req_id=rid, A=A, y=y, nu=nu, lam_diag=lam_diag))
+        return rid
+
+    def _validate(self, A, y, nu, lam_diag) -> tuple[float, str | None]:
+        """Admission checks beyond shape. Returns (ν, reason); reason is
+        None iff admissible. In strict mode an inadmissible request raises
+        a ValueError naming the request id it would have been assigned."""
+        import numpy as np
+
+        reason = None
+        try:
+            nu = self._check_nu(nu)
+        except ValueError as e:
+            reason = str(e)
+            nu = float("nan")
+        if reason is None and y.shape != (A.shape[0],):
+            # malformed geometry is a caller bug, not bad data: always raise
+            raise ValueError(
+                f"y has shape {y.shape}, expected ({A.shape[0]},) to match A")
+        if reason is None and not bool(np.all(np.isfinite(np.asarray(A)))):
+            reason = "non-finite entries in A"
+        if reason is None and not bool(np.all(np.isfinite(np.asarray(y)))):
+            reason = "non-finite entries in y"
+        if reason is None and lam_diag is not None and not bool(
+                np.all(np.isfinite(np.asarray(lam_diag)))):
+            reason = "non-finite entries in lam_diag"
+        if reason is not None and self.strict:
+            raise ValueError(
+                f"request {self._next_id} rejected: {reason}")
+        return nu, reason
+
+    def _reject(self, rid: int, reason: str, solution) -> None:
+        """Quarantine an inadmissible request (strict=False): it never
+        touches a packed batch and comes back REJECTED at flush."""
+        self._quarantined[rid] = solution
+        self.rejection_reasons[rid] = reason
+        self.stats["rejected"] += 1
 
     @staticmethod
     def _check_nu(nu) -> float:
@@ -257,18 +336,31 @@ class SolverService:
         ν²Λ = ν²·I, so their optimum is exactly 0 and the solution
         restricted to the request's coordinates is unchanged; padded ROWS
         are all-zero data rows whose loss term ℓ(0, 0) is a constant —
-        zero gradient, zero Hessian weight contribution."""
-        nu = self._check_nu(nu)
+        zero gradient, zero Hessian weight contribution.
+
+        Admission validation mirrors ``submit`` (finiteness of A/y/Λ and
+        ν > 0; strict raise vs quarantine)."""
         get_objective(family)          # validate the family name up front
         A = jnp.asarray(A)
         y = jnp.asarray(y)
-        req = GLMRequest(req_id=self._next_id, A=A, y=y, nu=nu,
-                         family=family, lam_diag=lam_diag)
+        cls = self.bucket_for(*A.shape)     # shape errors always raise
+        nu, reason = self._validate(A, y, nu, lam_diag)
+        rid = self._next_id
         self._next_id += 1
-        key = (self.bucket_for(*A.shape), family)
-        self._glm_queues.setdefault(key, []).append(req)
         self.stats["requests"] += 1
-        return req.req_id
+        if reason is not None:
+            self._reject(rid, reason, GLMSolution(
+                req_id=rid, x=jnp.zeros((A.shape[1],), A.dtype),
+                family=family, decrement=float("nan"), converged=False,
+                newton_iters=0, m_trajectory=(), m_final=0, inner_iters=0,
+                shape_class=cls, batch_index=-1,
+                sketch=cls.sketch or self.sketch,
+                status=SolveStatus.REJECTED.name))
+            return rid
+        req = GLMRequest(req_id=rid, A=A, y=y, nu=nu,
+                         family=family, lam_diag=lam_diag)
+        self._glm_queues.setdefault((cls, family), []).append(req)
+        return rid
 
     # -- packing -----------------------------------------------------------
     def _pack(self, cls: ShapeClass, reqs: list[RidgeRequest]):
@@ -337,20 +429,71 @@ class SolverService:
                 jnp.asarray(lam), keys)
 
     # -- solving -----------------------------------------------------------
-    def flush(self) -> "dict[int, RidgeSolution | GLMSolution]":
+    def flush(self, deadline_s: float | None = None
+              ) -> "dict[int, RidgeSolution | GLMSolution]":
         """Solve everything queued; returns {req_id: solution} (ridge and
         GLM requests come back in one map, each with its certificate type).
+
+        ``deadline_s`` (default: the service's ``flush_deadline_s``) is a
+        per-flush wall-clock budget checked *between* chunk dispatches — a
+        jitted solve cannot be interrupted, so the granularity is one
+        batch. Once the budget is spent, every not-yet-dispatched request
+        comes back immediately with status ``DEADLINE_EXCEEDED`` (x = 0,
+        no certificate) instead of blocking the flush — partial results
+        with truthful verdicts beat a late answer for every tenant.
+        Quarantined (REJECTED) requests are always returned first; they
+        cost no solve time.
         """
+        if deadline_s is None:
+            deadline_s = self.flush_deadline_s
+        t0 = time.perf_counter()
         out: dict[int, RidgeSolution | GLMSolution] = {}
+        out.update(self._quarantined)
+        self._quarantined = {}
+
+        def expired() -> bool:
+            return (deadline_s is not None
+                    and time.perf_counter() - t0 >= deadline_s)
+
         for cls in self.shape_classes:
             queue, self._queues[cls] = self._queues[cls], []
             for i in range(0, len(queue), self.batch_size):
-                out.update(self._solve_chunk(cls, queue[i: i + self.batch_size]))
+                chunk = queue[i: i + self.batch_size]
+                if expired():
+                    out.update(self._expire_chunk(cls, chunk))
+                else:
+                    out.update(self._solve_chunk(cls, chunk))
         for (cls, family), queue in list(self._glm_queues.items()):
             self._glm_queues[(cls, family)] = []
             for i in range(0, len(queue), self.batch_size):
-                out.update(self._solve_glm_chunk(
-                    cls, family, queue[i: i + self.batch_size]))
+                chunk = queue[i: i + self.batch_size]
+                if expired():
+                    out.update(self._expire_chunk(cls, chunk, family=family))
+                else:
+                    out.update(self._solve_glm_chunk(cls, family, chunk))
+        return out
+
+    def _expire_chunk(self, cls: ShapeClass, reqs, family: str | None = None):
+        """DEADLINE_EXCEEDED solutions for an undispatched chunk."""
+        out = {}
+        name = SolveStatus.DEADLINE_EXCEEDED.name
+        sketch = cls.sketch or self.sketch
+        for r in reqs:
+            zero = jnp.zeros((r.A.shape[1],), r.A.dtype)
+            if family is None:
+                out[r.req_id] = RidgeSolution(
+                    req_id=r.req_id, x=zero, delta_tilde=float("nan"),
+                    m_final=0, iters=0, doublings=0, shape_class=cls,
+                    batch_index=-1, sketch=sketch, status=name,
+                    converged=False)
+            else:
+                out[r.req_id] = GLMSolution(
+                    req_id=r.req_id, x=zero, family=family,
+                    decrement=float("nan"), converged=False, newton_iters=0,
+                    m_trajectory=(), m_final=0, inner_iters=0,
+                    shape_class=cls, batch_index=-1, sketch=sketch,
+                    status=name)
+            self.stats["deadline_exceeded"] += 1
         return out
 
     def _solve_glm_chunk(self, cls: ShapeClass, family: str,
@@ -386,6 +529,8 @@ class SolverService:
                 shape_class=cls,
                 batch_index=i,
                 sketch=sketch,
+                status=status_name(stats["status"][i]),
+                stalled=bool(stats["stalled"][i]),
             )
         return out
 
@@ -393,10 +538,15 @@ class SolverService:
         q, keys = self._pack(cls, reqs)
         sketch = cls.sketch or self.sketch
         t0 = time.perf_counter()
-        x, stats = padded_adaptive_solve_batched(
+        # the robust driver = guarded engine + per-problem sketch-redraw
+        # retries + direct_solve degradation; a quarantine-evading fault
+        # (e.g. numerically degenerate but finite data) still ends in a
+        # finite answer with an honest verdict, isolated to its slot
+        x, stats = robust_padded_solve_batched(
             q, keys, m_max=cls.m_max, method=self.method, sketch=sketch,
             max_iters=self.max_iters, rho=self.rho, tol=self.tol,
-            mesh=self.mesh)
+            mesh=self.mesh, max_retries=self.max_retries,
+            fallback=self.fallback)
         x = jax.block_until_ready(x)
         self.stats["solve_seconds"] += time.perf_counter() - t0
         self.stats["batches"] += 1
@@ -404,6 +554,8 @@ class SolverService:
         out = {}
         for i, r in enumerate(reqs):
             di = r.A.shape[1]
+            self.stats["retries"] += int(stats["retries"][i])
+            self.stats["fallbacks"] += int(stats["fell_back"][i])
             out[r.req_id] = RidgeSolution(
                 req_id=r.req_id,
                 x=x[i, :di],
@@ -414,6 +566,11 @@ class SolverService:
                 shape_class=cls,
                 batch_index=i,
                 sketch=sketch,
+                status=status_name(stats["status"][i]),
+                converged=bool(stats["converged"][i]),
+                stalled=bool(stats["stalled"][i]),
+                retries=int(stats["retries"][i]),
+                fell_back=bool(stats["fell_back"][i]),
             )
         return out
 

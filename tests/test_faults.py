@@ -1,0 +1,547 @@
+"""Chaos suite for the failure model (DESIGN.md §9): fault classes from
+``ft/faults.py`` driven through the guarded engine, the retry/fallback
+driver and the serving layer. For every injected fault the suite asserts
+the four failure-model invariants:
+
+1. isolation — the faulty slot gets a non-OK status and its packed
+   neighbors' solutions match a clean-batch solve to ≤ 1e-6 (lanewise
+   guards make them bit-identical in most cases);
+2. bounded retries — never more than ``max_retries`` redraws;
+3. truthful statuses — RETRIED only after a redraw converged, FELL_BACK
+   only when the answer came from ``direct_solve``, engine failures kept
+   when nothing could fix the problem;
+4. finite answers — every returned x is finite, always.
+
+Pallas NaN-propagation cases run the TPU-target kernels in interpret mode
+(the test_kernels.py convention). The forced-8-device shard-dropout case
+uses the test_sharded.py subprocess pattern and is marked slow (CI's chaos
+job runs it).
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ENGINE_FAILURES,
+    SolveStatus,
+    direct_solve,
+    from_least_squares_batch,
+    robust_padded_solve_batched,
+    status_name,
+)
+from repro.core.adaptive_padded import padded_adaptive_solve_batched
+from repro.core.newton import adaptive_newton_solve_batched
+from repro.core.quadratic import Quadratic
+from repro.ft.faults import (
+    AdversarialKeyProvider,
+    dropout_provider,
+    ill_conditioned_matrix,
+    inject_inf_entry,
+    inject_nan_row,
+    rank_deficient_matrix,
+)
+from repro.serve.solver_service import ShapeClass, SolverService
+
+B, N, D, M_MAX = 4, 128, 16, 32
+NEIGHBOR_TOL = 1e-6
+FAILURE_CODES = {int(s) for s in ENGINE_FAILURES}
+
+
+@pytest.fixture(scope="module")
+def clean():
+    ks = jax.random.split(jax.random.PRNGKey(0), B)
+    A = jnp.stack([jax.random.normal(k, (N, D)) / np.sqrt(N) for k in ks])
+    Y = jax.random.normal(jax.random.PRNGKey(1), (B, N))
+    keys = jax.random.split(jax.random.PRNGKey(42), B)
+    q = from_least_squares_batch(A, Y, 0.1)
+    x_ref, s_ref = robust_padded_solve_batched(q, keys, m_max=M_MAX,
+                                               tol=1e-10)
+    return {"A": A, "Y": Y, "keys": keys, "q": q,
+            "x_ref": x_ref, "s_ref": s_ref}
+
+
+def _assert_invariants(x, stats, faulty, clean, *, max_retries=2):
+    """The four failure-model invariants, for fault slot(s) ``faulty``."""
+    status = np.asarray(stats["status"])
+    neighbors = np.setdiff1d(np.arange(B), np.asarray(faulty))
+    # 1. isolation
+    for i in np.atleast_1d(faulty):
+        assert status[i] != int(SolveStatus.OK), status_name(status[i])
+    gap = np.max(np.abs(np.asarray(x)[neighbors]
+                        - np.asarray(clean["x_ref"])[neighbors]))
+    assert gap <= NEIGHBOR_TOL, gap
+    assert np.all(status[neighbors] == int(SolveStatus.OK))
+    # 2. bounded retries
+    assert np.all(np.asarray(stats["retries"]) <= max_retries)
+    # 3. truthful flags
+    assert np.all(np.asarray(stats["fell_back"])
+                  == (status == int(SolveStatus.FELL_BACK)))
+    assert np.all(np.asarray(stats["converged"])
+                  == np.isin(status, [int(SolveStatus.OK),
+                                      int(SolveStatus.RETRIED)]))
+    # 4. finite answers
+    assert bool(jnp.all(jnp.isfinite(x)))
+
+
+# ---------------------------------------------------------------------------
+# Data faults through the robust driver
+# ---------------------------------------------------------------------------
+
+def test_nan_row_isolated(clean):
+    """A NaN feature row poisons exactly its own slot; the circuit breaker
+    returns its best finite iterate (x₀ here) and the direct fallback —
+    equally NaN on this data — is truthfully NOT adopted."""
+    A = inject_nan_row(clean["A"], problem=1, row=3)
+    q = from_least_squares_batch(A, clean["Y"], 0.1)
+    x, s = robust_padded_solve_batched(q, clean["keys"], m_max=M_MAX,
+                                       tol=1e-10)
+    _assert_invariants(x, s, [1], clean)
+    status = np.asarray(s["status"])
+    assert status[1] == int(SolveStatus.NAN_POISONED)
+    assert not bool(np.asarray(s["fell_back"])[1])
+    # poisoned data exhausts the full retry budget before giving up
+    assert int(np.asarray(s["retries"])[1]) == 2
+
+
+def test_inf_target_isolated(clean):
+    """An Inf label behaves like the NaN row: b = Aᵀy is non-finite."""
+    Y = inject_inf_entry(clean["Y"], problem=2, idx=0)
+    q = from_least_squares_batch(clean["A"], Y, 0.1)
+    x, s = robust_padded_solve_batched(q, clean["keys"], m_max=M_MAX,
+                                       tol=1e-10)
+    _assert_invariants(x, s, [2], clean)
+    assert np.asarray(s["status"])[2] == int(SolveStatus.NAN_POISONED)
+
+
+def test_rank_deficient_reported_not_poisoned(clean):
+    """Rank-5 A with ν ≈ 0: H is numerically singular at every ladder
+    level, so the verdict is LEVEL_INVALID — and since the dense oracle is
+    singular too, the fallback must truthfully decline."""
+    A = clean["A"].at[2].set(
+        rank_deficient_matrix(jax.random.PRNGKey(9), N, D, rank=5))
+    q = from_least_squares_batch(A, clean["Y"], 1e-8)
+    x, s = robust_padded_solve_batched(q, clean["keys"], m_max=M_MAX,
+                                       tol=1e-10)
+    status = np.asarray(s["status"])
+    assert status[2] == int(SolveStatus.LEVEL_INVALID)
+    assert not bool(np.asarray(s["fell_back"])[2])
+    assert bool(jnp.all(jnp.isfinite(x)))
+    # neighbors unaffected (different ν than the clean fixture, so compare
+    # against their own direct solutions rather than x_ref)
+    xd = direct_solve(q)
+    for i in (0, 1, 3):
+        assert status[i] == int(SolveStatus.OK)
+        assert float(jnp.max(jnp.abs(x[i] - xd[i]))) < 1e-3
+
+
+def test_ill_conditioned_isolated(clean):
+    """κ ≈ 1e10 (κ(AᵀA) ≈ 1e20, beyond f32): the slot terminates with an
+    honest engine failure instead of a garbage 'converged' answer, and the
+    neighbors are untouched."""
+    A = clean["A"].at[2].set(
+        ill_conditioned_matrix(jax.random.PRNGKey(11), N, D, 1e10))
+    q = from_least_squares_batch(A, clean["Y"], 1e-4)
+    x, s = robust_padded_solve_batched(q, clean["keys"], m_max=M_MAX,
+                                       tol=1e-9, max_iters=40)
+    status = np.asarray(s["status"])
+    assert int(status[2]) in FAILURE_CODES | {int(SolveStatus.FELL_BACK)}
+    assert bool(jnp.all(jnp.isfinite(x)))
+    assert np.all(status[[0, 1, 3]] == int(SolveStatus.OK))
+    xd = direct_solve(q)
+    for i in (0, 1, 3):
+        assert float(jnp.max(jnp.abs(x[i] - xd[i]))) < 1e-3
+
+
+def test_stall_retry_then_fallback(clean):
+    """Unreachable tolerance stalls every slot; after the bounded redraws
+    the dense fallback supplies a finite answer with FELL_BACK truthfully
+    set and the δ̃ certificate honestly withdrawn (NaN)."""
+    x, s = robust_padded_solve_batched(clean["q"], clean["keys"],
+                                       m_max=M_MAX, tol=0.0, max_iters=10,
+                                       max_retries=1)
+    status = np.asarray(s["status"])
+    assert np.all(status == int(SolveStatus.FELL_BACK))
+    assert np.all(np.asarray(s["fell_back"]))
+    assert np.all(np.asarray(s["retries"]) == 1)
+    assert np.all(np.isnan(np.asarray(s["dtilde"])))
+    xd = direct_solve(clean["q"])
+    assert float(jnp.max(jnp.abs(x - xd))) < 1e-5
+    # and without the fallback: the honest STALLED verdict + finite best
+    x2, s2 = robust_padded_solve_batched(clean["q"], clean["keys"],
+                                         m_max=M_MAX, tol=0.0, max_iters=10,
+                                         max_retries=1, fallback=False)
+    assert np.all(np.asarray(s2["status"]) == int(SolveStatus.STALLED))
+    assert np.all(np.asarray(s2["stalled"]))
+    assert bool(jnp.all(jnp.isfinite(x2)))
+
+
+# ---------------------------------------------------------------------------
+# Sketch faults
+# ---------------------------------------------------------------------------
+
+def test_adversarial_key_retry_recovers(clean):
+    """A black-listed key poisons exactly its slot's sketch; the retry
+    driver's fold_in redraw escapes the black-list, so the slot comes back
+    RETRIED with retries=1 while the neighbors ride the first draw
+    bit-identically."""
+    prov = AdversarialKeyProvider("gaussian", clean["keys"][1])
+    x, s = robust_padded_solve_batched(clean["q"], clean["keys"],
+                                       m_max=M_MAX, tol=1e-10, sketch=prov)
+    _assert_invariants(x, s, [1], clean)
+    status = np.asarray(s["status"])
+    assert status[1] == int(SolveStatus.RETRIED)
+    assert int(np.asarray(s["retries"])[1]) == 1
+    assert bool(np.asarray(s["converged"])[1])
+    nb = jnp.array([0, 2, 3])
+    assert bool(jnp.all(x[nb] == clean["x_ref"][nb]))  # bitwise isolation
+    xd = direct_solve(clean["q"])
+    assert float(jnp.max(jnp.abs(x[1] - xd[1]))) < 1e-4
+
+
+def test_adversarial_key_engine_verdict(clean):
+    """Without the retry driver the poisoned-draw slot terminates inside
+    the engine as NAN_POISONED at its best finite iterate — the guards
+    alone never emit a NaN solution."""
+    prov = AdversarialKeyProvider("gaussian", clean["keys"][1])
+    x, s = padded_adaptive_solve_batched(clean["q"], clean["keys"],
+                                         m_max=M_MAX, tol=1e-10,
+                                         sketch=prov)
+    assert np.asarray(s["status"])[1] == int(SolveStatus.NAN_POISONED)
+    assert bool(jnp.all(jnp.isfinite(x)))
+
+
+# ---------------------------------------------------------------------------
+# Infrastructure faults: simulated shard dropout
+# ---------------------------------------------------------------------------
+
+def test_shard_dropout_benign(clean):
+    """Losing 1 of 4 shards of a well-spread A leaves a weaker but valid
+    preconditioner (the surviving blocks still sketch the Gram): the
+    engine converges with truthful OK statuses."""
+    prov = dropout_provider("gaussian", 4, (1,))
+    assert "drop" in prov.name
+    x, s = robust_padded_solve_batched(clean["q"], clean["keys"],
+                                       m_max=M_MAX, tol=1e-10, sketch=prov)
+    assert np.all(np.isin(np.asarray(s["status"]),
+                          [int(SolveStatus.OK), int(SolveStatus.RETRIED)]))
+    xd = direct_solve(clean["q"])
+    assert float(jnp.max(jnp.abs(x - xd))) < 1e-3
+
+
+def test_shard_dropout_concentrated_mass_falls_back(clean):
+    """When the lost shard carried the dominant row mass the surviving
+    sketch misrepresents H badly enough that IHS diverges — the guards
+    stall it, redraws (same survivors) cannot help, and the fallback
+    returns the exact answer with FELL_BACK set."""
+    scale = jnp.ones((N,)).at[32:64].set(100.0)     # all mass in shard 1/4
+    A = clean["A"] * scale[None, :, None] * 0.01
+    q = from_least_squares_batch(A, clean["Y"], 0.05)
+    prov = dropout_provider("gaussian", 4, (1,))
+    x, s = robust_padded_solve_batched(q, clean["keys"], m_max=M_MAX,
+                                       tol=1e-10, method="ihs", sketch=prov,
+                                       max_iters=20)
+    status = np.asarray(s["status"])
+    assert np.all(status == int(SolveStatus.FELL_BACK))
+    assert np.all(np.asarray(s["retries"]) <= 2)
+    xd = direct_solve(q)
+    assert float(jnp.max(jnp.abs(x - xd))) < 1e-5
+
+
+@pytest.mark.slow
+def test_shard_dropout_8shard_forced_devices():
+    """The K=8 dropout story under the forced-8-device CI environment:
+    2 of 8 shards lost, the re-psum'd ladder still solves benign traffic,
+    and the concentrated-mass regime degrades to the fallback — never to a
+    NaN or a lying OK."""
+    root = Path(__file__).resolve().parents[1]
+    env = {**os.environ,
+           "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+           "PYTHONPATH": str(root / "src")}
+    code = textwrap.dedent("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import (SolveStatus, direct_solve,
+                                from_least_squares_batch,
+                                robust_padded_solve_batched)
+        from repro.ft.faults import dropout_provider
+
+        assert jax.device_count() == 8
+        B, n, d = 4, 256, 16
+        ks = jax.random.split(jax.random.PRNGKey(0), B)
+        A = jnp.stack([jax.random.normal(k, (n, d)) / np.sqrt(n)
+                       for k in ks])
+        Y = jax.random.normal(jax.random.PRNGKey(1), (B, n))
+        keys = jax.random.split(jax.random.PRNGKey(42), B)
+        q = from_least_squares_batch(A, Y, 0.1)
+        prov = dropout_provider("gaussian", 8, (2, 5))
+        x, s = robust_padded_solve_batched(q, keys, m_max=64, tol=1e-10,
+                                           sketch=prov)
+        ok = {int(SolveStatus.OK), int(SolveStatus.RETRIED)}
+        assert all(int(c) in ok for c in np.asarray(s["status"]))
+        assert float(jnp.max(jnp.abs(x - direct_solve(q)))) < 1e-3
+
+        scale = jnp.ones((n,)).at[64:96].set(100.0)   # shard 2's rows
+        q2 = from_least_squares_batch(A * scale[None, :, None] * 0.01,
+                                      Y, 0.05)
+        x2, s2 = robust_padded_solve_batched(q2, keys, m_max=64, tol=1e-10,
+                                             method="ihs", sketch=prov,
+                                             max_iters=20)
+        st = np.asarray(s2["status"])
+        assert np.all((st == int(SolveStatus.FELL_BACK))
+                      | (st == int(SolveStatus.OK))), st
+        assert np.any(st == int(SolveStatus.FELL_BACK)), st
+        assert bool(jnp.all(jnp.isfinite(x2)))
+        print("DROPOUT8_OK")
+    """)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, cwd=str(root), timeout=600)
+    assert r.returncode == 0, f"stderr:\n{r.stderr[-3000:]}"
+    assert "DROPOUT8_OK" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# Engine guard regressions
+# ---------------------------------------------------------------------------
+
+def test_nu_zero_invalid_levels_skipped(clean):
+    """ν = 0 makes the small ladder levels (m < d) singular — the PR 4
+    failure mode. The level-validity remap now SKIPS them and converges on
+    the valid tail of the ladder instead of NaN-poisoning the solve."""
+    q = Quadratic(A=clean["A"], b=clean["q"].b, nu=jnp.zeros((B,)),
+                  lam_diag=jnp.ones((B, D)), batched=True)
+    x, s = padded_adaptive_solve_batched(q, clean["keys"], m_max=M_MAX,
+                                         method="pcg", tol=1e-8)
+    status = np.asarray(s["status"])
+    assert np.all(status == int(SolveStatus.OK))
+    assert np.all(np.asarray(s["invalid_levels"]) > 0)
+    xd = direct_solve(q)
+    assert float(jnp.max(jnp.abs(x - xd))) < 1e-3
+
+
+def test_whole_ladder_invalid(clean):
+    """A = 0, ν = 0, b ≠ 0: no ladder level factorizes — LEVEL_INVALID
+    with the x₀ = 0 iterate, not a NaN."""
+    q = Quadratic(A=jnp.zeros((B, N, D)), b=jnp.ones((B, D)),
+                  nu=jnp.zeros((B,)), lam_diag=jnp.ones((B, D)),
+                  batched=True)
+    x, s = padded_adaptive_solve_batched(q, clean["keys"], m_max=M_MAX,
+                                         tol=1e-10)
+    assert np.all(np.asarray(s["status"]) == int(SolveStatus.LEVEL_INVALID))
+    assert bool(jnp.all(x == 0.0))
+
+
+def test_guards_off_bitwise_matches_on_happy_path(clean):
+    """guards=False (the benchmark escape hatch) changes NOTHING on clean
+    traffic: same iterates bit-for-bit, same certificates."""
+    xg, sg = padded_adaptive_solve_batched(clean["q"], clean["keys"],
+                                           m_max=M_MAX, tol=1e-10,
+                                           guards=True)
+    xn, sn = padded_adaptive_solve_batched(clean["q"], clean["keys"],
+                                           m_max=M_MAX, tol=1e-10,
+                                           guards=False)
+    assert bool(jnp.all(xg == xn))
+    for k in ("m_final", "iters", "dtilde", "level"):
+        assert np.array_equal(np.asarray(sg[k]), np.asarray(sn[k])), k
+
+
+def test_glm_newton_nan_isolated():
+    """The sketched-Newton GLM driver inherits the engine verdicts: a NaN
+    entry poisons only its own problem and the outer status says so."""
+    Bg, n, d = 3, 64, 8
+    A = jax.random.normal(jax.random.PRNGKey(0), (Bg, n, d)) / np.sqrt(n)
+    logits = jnp.einsum("bnd,d->bn", A, jnp.ones(d))
+    y = (jax.random.uniform(jax.random.PRNGKey(1), (Bg, n))
+         < jax.nn.sigmoid(logits)).astype(jnp.float32)
+    A_bad = A.at[1, 0, 0].set(jnp.nan)
+    x, s = adaptive_newton_solve_batched(
+        "logistic", A_bad, y, 0.3, m_max=16, keys=jax.random.PRNGKey(7))
+    status = np.asarray(s["status"])
+    assert status[1] == int(SolveStatus.NAN_POISONED)
+    assert status[0] == int(SolveStatus.OK)
+    assert status[2] == int(SolveStatus.OK)
+    assert bool(jnp.all(jnp.isfinite(x)))
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernels: NaN propagation in interpret mode (satellite)
+# ---------------------------------------------------------------------------
+
+def test_pallas_gaussian_nan_weight_propagates():
+    """A non-finite GLM row weight must surface as non-finite sketch
+    output (→ caught by the level-validity check), never be silently
+    absorbed — and only in its own problem's lane."""
+    from repro.kernels import ops
+
+    Bk, n, d, m = 3, 64, 8, 16
+    A = jax.random.normal(jax.random.PRNGKey(0), (Bk, n, d))
+    w = jnp.ones((Bk, n)).at[1, 5].set(jnp.nan)
+    seeds = jnp.arange(Bk, dtype=jnp.uint32)
+    SA = ops.gaussian_sa(A, seeds, m, use_pallas=True, interpret=True,
+                         row_weights=w)
+    assert not bool(jnp.all(jnp.isfinite(SA[1])))
+    assert bool(jnp.all(jnp.isfinite(SA[0])))
+    assert bool(jnp.all(jnp.isfinite(SA[2])))
+
+
+def test_pallas_sjlt_nan_entry_propagates():
+    """A NaN data entry reaches the SJLT kernel output for its problem
+    only (one signed nonzero per column keeps lanes independent)."""
+    from repro.kernels import ops
+
+    Bk, n, d, m = 3, 64, 8, 16
+    A = jax.random.normal(jax.random.PRNGKey(2), (Bk, n, d))
+    A = A.at[2, 7, 3].set(jnp.nan)
+    rows = jax.random.randint(jax.random.PRNGKey(3), (Bk, n), 0, m)
+    signs = jax.random.rademacher(jax.random.PRNGKey(4), (Bk, n),
+                                  dtype=A.dtype)
+    SA = ops.sjlt_apply_batched(A, rows, signs, m, use_pallas=True,
+                                interpret=True)
+    assert not bool(jnp.all(jnp.isfinite(SA[2])))
+    assert bool(jnp.all(jnp.isfinite(SA[0])))
+    assert bool(jnp.all(jnp.isfinite(SA[1])))
+
+
+def test_pallas_fwht_nan_scale_propagates():
+    """A NaN SRHT row scale (sign·w^{1/2} stream) must propagate through
+    the FWHT butterfly for its own problem only."""
+    from repro.kernels import ops
+
+    Bk, n, d = 3, 64, 8
+    X = jax.random.normal(jax.random.PRNGKey(5), (Bk, n, d))
+    scale = jnp.ones((Bk, n)).at[0, 11].set(jnp.nan)
+    HX = ops.fwht_cols(X, use_pallas=True, interpret=True, row_scale=scale)
+    assert not bool(jnp.all(jnp.isfinite(HX[0])))
+    assert bool(jnp.all(jnp.isfinite(HX[1])))
+    assert bool(jnp.all(jnp.isfinite(HX[2])))
+
+
+@pytest.mark.parametrize("sketch", ["gaussian", "sjlt", "srht"])
+def test_nan_weight_caught_by_level_validity(clean, sketch):
+    """End-to-end across all three ladder families: a non-finite row
+    weight in a weighted (GLM-style) solve is caught by the post-Cholesky
+    level-validity check and reported NAN_POISONED for that slot only."""
+    w = jnp.ones((B, N)).at[1, 0].set(jnp.nan)
+    q = Quadratic(A=clean["A"], b=clean["q"].b, nu=clean["q"].nu,
+                  lam_diag=clean["q"].lam_diag, batched=True, row_weights=w)
+    x, s = padded_adaptive_solve_batched(q, clean["keys"], m_max=M_MAX,
+                                         method="pcg", tol=1e-8,
+                                         sketch=sketch)
+    status = np.asarray(s["status"])
+    assert status[1] == int(SolveStatus.NAN_POISONED)
+    assert np.all(status[[0, 2, 3]] == int(SolveStatus.OK))
+    assert bool(jnp.all(jnp.isfinite(x)))
+
+
+# ---------------------------------------------------------------------------
+# Serving layer
+# ---------------------------------------------------------------------------
+
+def _good_request(i, n=100, d=12):
+    A = jax.random.normal(jax.random.PRNGKey(3 * i), (n, d)) / np.sqrt(n)
+    y = jax.random.normal(jax.random.PRNGKey(3 * i + 1), (n,))
+    return A, y, 0.3
+
+
+def test_service_strict_submit_validation():
+    """strict mode rejects non-finite A / y / Λ and ν ≤ 0 at submit,
+    naming the request — on every entry point including solve_one."""
+    svc = SolverService(batch_size=4)
+    A, y, nu = _good_request(0)
+    with pytest.raises(ValueError, match="request 0.*non-finite entries in A"):
+        svc.submit(A.at[0, 0].set(jnp.nan), y, nu)
+    with pytest.raises(ValueError, match="non-finite entries in y"):
+        svc.submit(A, y.at[3].set(jnp.inf), nu)
+    with pytest.raises(ValueError, match="non-finite entries in lam_diag"):
+        svc.submit(A, y, nu, lam_diag=jnp.full((A.shape[1],), jnp.nan))
+    with pytest.raises(ValueError, match="nu must be"):
+        svc.submit(A, y, 0.0)
+    with pytest.raises(ValueError, match="nu must be"):
+        svc.solve_one(A, y, float("inf"))
+    with pytest.raises(ValueError, match="non-finite entries in A"):
+        svc.submit_glm(A.at[0, 0].set(jnp.nan), (y > 0).astype(jnp.float32),
+                       nu, family="logistic")
+    with pytest.raises(ValueError, match="expected"):
+        svc.submit(A, y[:-1], nu)      # malformed shape always raises
+
+
+def test_service_quarantine_isolates_bad_requests():
+    """strict=False: invalid requests are quarantined into REJECTED
+    solutions and their packed would-be neighbors solve exactly as in a
+    clean service (same req-id keys → same answers)."""
+    svc_clean = SolverService(batch_size=4, seed=7)
+    svc = SolverService(batch_size=4, seed=7, strict=False)
+    good = []
+    for i in range(3):
+        A, y, nu = _good_request(i)
+        svc_clean.submit(A, y, nu)
+        good.append(svc.submit(A, y, nu))
+    bad = svc.submit(jnp.full((64, 8), jnp.nan), jnp.zeros(64), 0.1)
+    bad_nu = svc.submit(*_good_request(9)[:2], 0.0)
+    ref = svc_clean.flush()
+    sols = svc.flush()
+    assert sols[bad].status == "REJECTED"
+    assert sols[bad_nu].status == "REJECTED"
+    assert not sols[bad].converged
+    assert "non-finite entries in A" in svc.rejection_reasons[bad]
+    assert svc.stats["rejected"] == 2
+    for rid in good:
+        assert sols[rid].status == "OK"
+        assert float(jnp.max(jnp.abs(sols[rid].x - ref[rid].x))) <= 1e-6
+
+
+def test_service_stalled_flag_regression():
+    """Satellite regression: a stalled-at-cap request is DISTINGUISHABLE
+    in its certificate — status/stalled/converged say so explicitly
+    instead of being folded into 'done'."""
+    svc = SolverService(batch_size=4, tol=0.0, max_iters=5,
+                        max_retries=0, fallback=False)
+    A, y, nu = _good_request(1)
+    sol = svc.solve_one(A, y, nu)
+    assert sol.status == "STALLED"
+    assert sol.stalled and not sol.converged and not sol.fell_back
+    assert bool(jnp.all(jnp.isfinite(sol.x)))
+    # and the fallback path flags itself truthfully too
+    svc2 = SolverService(batch_size=4, tol=0.0, max_iters=5,
+                         max_retries=1, fallback=True)
+    sol2 = svc2.solve_one(A, y, nu)
+    assert sol2.status == "FELL_BACK"
+    assert sol2.fell_back and sol2.retries == 1
+    assert np.isnan(sol2.delta_tilde)
+    assert svc2.stats["fallbacks"] == 1
+
+
+def test_service_flush_deadline_partial_results():
+    """A spent flush budget returns the undispatched remainder immediately
+    as DEADLINE_EXCEEDED instead of blocking — partial results, truthful
+    statuses, nothing lost silently."""
+    svc = SolverService(batch_size=2)
+    rids = [svc.submit(*_good_request(i)) for i in range(4)]
+    sols = svc.flush(deadline_s=0.0)
+    assert len(sols) == 4
+    for rid in rids:
+        assert sols[rid].status == "DEADLINE_EXCEEDED"
+        assert not sols[rid].converged
+    assert svc.stats["deadline_exceeded"] == 4
+    # resubmission after the deadline flush works normally
+    rid = svc.submit(*_good_request(0))
+    assert svc.flush()[rid].status == "OK"
+
+
+def test_service_glm_status_surface():
+    """GLM certificates carry the same status surface (OK on clean
+    traffic; the stalled flag wired through the Newton driver)."""
+    svc = SolverService(batch_size=2)
+    A, y, _ = _good_request(5, n=80, d=10)
+    rid = svc.submit_glm(A, (y > 0).astype(jnp.float32), 0.3,
+                         family="logistic")
+    sol = svc.flush()[rid]
+    assert sol.status == "OK"
+    assert sol.converged and not sol.stalled
+    assert sol.retries == 0 and not sol.fell_back

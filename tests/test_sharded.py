@@ -25,6 +25,7 @@ import pytest
 from repro.core.adaptive_padded import padded_adaptive_solve_batched
 from repro.core.level_grams import BlockEmulationProvider, get_provider
 from repro.core.quadratic import Quadratic
+from repro.core.status import SolveStatus
 from repro.serve.solver_service import ShapeClass, SolverService
 
 
@@ -357,9 +358,11 @@ def test_srht_row_sampling_laws():
 
 
 def test_service_rejects_nu_zero():
-    """ν = 0 padded problems NaN-poison certificates inside the engine
-    (demonstrated directly); SolverService.submit rejects them up front so
-    a NaN certificate can no longer escape flush."""
+    """ν = 0 padded problems NaN-poison certificates inside the pre-guard
+    engine (demonstrated with guards=False); the DESIGN.md §9 guards turn
+    that into a finite iterate with a truthful LEVEL_INVALID verdict, and
+    SolverService.submit still rejects ν = 0 up front so neither failure
+    shape reaches flush."""
     # the guarded failure: zero-padded coordinate + ν = 0 ⇒ H_S singular
     n, d = 32, 4
     A = np.array(jax.random.normal(jax.random.PRNGKey(0), (1, n, d)),
@@ -371,8 +374,12 @@ def test_service_rejects_nu_zero():
                   nu=jnp.zeros((1,)), lam_diag=jnp.ones((1, d)),
                   batched=True)
     _, stats = padded_adaptive_solve_batched(
-        q, jax.random.PRNGKey(1), m_max=8, method="pcg")
+        q, jax.random.PRNGKey(1), m_max=8, method="pcg", guards=False)
     assert not np.isfinite(np.asarray(stats["dtilde"])).all()
+    x_g, stats_g = padded_adaptive_solve_batched(
+        q, jax.random.PRNGKey(1), m_max=8, method="pcg")
+    assert np.isfinite(np.asarray(x_g)).all()
+    assert np.asarray(stats_g["status"])[0] == int(SolveStatus.LEVEL_INVALID)
 
     svc = SolverService(shape_classes=(ShapeClass(64, 8, 16),), batch_size=2)
     A1 = jnp.ones((32, 4)) / 8.0
