@@ -28,6 +28,17 @@ from benchmarks.bench_batched import heterogeneous_batch, time_best
 from benchmarks.common import emit
 from repro.core.adaptive_padded import padded_adaptive_solve_batched
 from repro.core.quadratic import from_least_squares_batch
+from repro.core.status import status_name
+
+# IHS needs a larger sketch cap than PCG on the same problem: its fixed
+# 1−ρ step is only a contraction while m comfortably exceeds the effective
+# dimension (≈ 4·d_e for ρ = 1/2, Thm 3.2), whereas PCG converges — just
+# more slowly — under any SPD preconditioner. At the shared m_max = 2·d a
+# minority of the heterogeneous problems (small-ν slots with d_e ≈ d) hit
+# the ladder cap below that multiple and stall honestly; the bench's IHS
+# leg therefore gets a 4× budget so every slot reaches OK and the row
+# measures guard overhead on clean traffic, not cap-starved IHS.
+_IHS_M_MAX_FACTOR = 4
 
 
 def run(B: int = 32, n: int = 512, d: int = 64, m_max: int = 128,
@@ -45,8 +56,9 @@ def run(B: int = 32, n: int = 512, d: int = 64, m_max: int = 128,
     rows = []
     for method, sketch in [("pcg", "gaussian"), ("pcg", "sjlt"),
                            ("pcg", "srht"), ("ihs", "gaussian")]:
+        mm = m_max * (_IHS_M_MAX_FACTOR if method == "ihs" else 1)
         solve = lambda guards: padded_adaptive_solve_batched(
-            qb, keys, m_max=m_max, method=method, sketch=sketch,
+            qb, keys, m_max=mm, method=method, sketch=sketch,
             max_iters=200, rho=0.5, tol=tol, guards=guards)
 
         xg, sg = jax.block_until_ready(solve(True))     # warm + correctness
@@ -58,14 +70,19 @@ def run(B: int = 32, n: int = 512, d: int = 64, m_max: int = 128,
         t_unguarded = time_best(lambda: solve(False)[0], reps)
         overhead = 100.0 * (t_guarded - t_unguarded) / t_unguarded
 
+        # per-status histogram: how each of the B slots actually ended —
+        # a single boolean hid WHICH lattice verdict non-OK slots got
+        codes, counts = jnp.unique(sg["status"], return_counts=True)
+        status_hist = {status_name(int(c)): int(k)
+                       for c, k in zip(codes, counts)}
         row = {
             "bench": "guard_overhead", "method": method, "sketch": sketch,
-            "B": B, "n": n, "d": d, "m_max": m_max, "seed": seed,
+            "B": B, "n": n, "d": d, "m_max": mm, "seed": seed,
             "guarded_s": round(t_guarded, 4),
             "unguarded_s": round(t_unguarded, 4),
             "overhead_pct": round(overhead, 2),
             "bitwise_agreement": bitwise,
-            "all_ok": bool(jnp.all(sg["status"] == 0)),
+            "status_hist": status_hist,
         }
         emit(row)
         rows.append(row)

@@ -15,6 +15,17 @@ reports two memory numbers per (family, n):
 The acceptance row (n=8192, d=128, m_max=512): ``gaussian`` must complete
 where-or-faster than ``gaussian_dense`` with peak live bytes reduced ≥4×.
 
+Dtype axis (DESIGN.md §10): every family is additionally measured at
+``compute_dtype ∈ {bf16, int8}`` with per-row ratios against its own fp32
+baseline (``speedup_vs_fp32``, ``peak_bytes_ratio_vs_fp32``) plus the
+analytic ``stream_item_bytes`` (4/2/1 — the bandwidth axis of the win on
+real accelerators). On CPU the wall-clock ratios are advisory (no native
+bf16 MXU); the peak-intermediate-bytes reductions are structural: the
+SRHT's (B, n_pad, d) transformed stack and the SJLT ref path's (B, n, d)
+signed product halve in bf16, and int8 streams 1-byte codes. The gaussian
+STREAMED family's peak is its fp32 (L, B, d, d) Gram stack by design —
+Grams never leave fp32 — so its ratio is ~1.0: the honest number.
+
     PYTHONPATH=src python -m benchmarks.bench_sketch_gram [--ns 2048,8192]
 """
 
@@ -29,8 +40,10 @@ import jax.numpy as jnp
 from benchmarks.common import emit
 from repro.analysis.memscan import max_intermediate_bytes
 from repro.core.adaptive_padded import doubling_ladder
-from repro.core.level_grams import PADDED_SKETCHES, get_provider
+from repro.core.level_grams import (COMPUTE_DTYPES, PADDED_SKETCHES,
+                                    get_provider)
 from repro.core.quadratic import from_least_squares_batch
+from repro.kernels.precision import stream_itemsize
 
 
 def _problem(B: int, n: int, d: int, seed: int):
@@ -41,7 +54,7 @@ def _problem(B: int, n: int, d: int, seed: int):
 
 
 def bench_family(sketch: str, B: int, n: int, d: int, m_max: int,
-                 reps: int, seed: int) -> dict:
+                 reps: int, seed: int, compute_dtype: str = "fp32") -> dict:
     provider = get_provider(sketch)
     q = _problem(B, n, d, seed)
     keys = jax.random.split(jax.random.PRNGKey(seed + 1), B)
@@ -49,7 +62,8 @@ def bench_family(sketch: str, B: int, n: int, d: int, m_max: int,
 
     def sketch_pass(q, keys):
         data = provider.sample(keys, m_max, q.n, q.A.dtype)
-        return provider.level_grams(data, q, ladder)
+        return provider.level_grams(data, q, ladder,
+                                    compute_dtype=compute_dtype)
 
     jitted = jax.jit(sketch_pass)
     peak, peak_shape = max_intermediate_bytes(
@@ -69,6 +83,8 @@ def bench_family(sketch: str, B: int, n: int, d: int, m_max: int,
     return {
         "bench": "sketch_gram", "sketch": sketch, "B": B, "n": n, "d": d,
         "m_max": m_max, "L": len(ladder), "seed": seed,
+        "dtype": compute_dtype,
+        "stream_item_bytes": stream_itemsize(compute_dtype),
         "pass_s": round(best, 4),
         "peak_intermediate_bytes": peak,
         "peak_intermediate_shape": "x".join(map(str, peak_shape)),
@@ -79,23 +95,35 @@ def bench_family(sketch: str, B: int, n: int, d: int, m_max: int,
 
 def run(B: int = 4, d: int = 128, m_max: int = 512,
         ns: tuple[int, ...] = (2048, 8192), reps: int = 3,
-        seed: int = 0, families: tuple[str, ...] = PADDED_SKETCHES
-        ) -> list[dict]:
+        seed: int = 0, families: tuple[str, ...] = PADDED_SKETCHES,
+        dtypes: tuple[str, ...] = COMPUTE_DTYPES) -> list[dict]:
     rows = []
     for n in ns:
         base = None
         for sketch in families:
-            row = bench_family(sketch, B, n, d, m_max, reps, seed)
-            if sketch == "gaussian":
-                base = row
-            if sketch == "gaussian_dense" and base is not None:
-                row["streamed_speedup"] = round(
-                    row["pass_s"] / max(base["pass_s"], 1e-9), 2)
-                row["peak_bytes_ratio"] = round(
-                    row["peak_intermediate_bytes"]
-                    / max(base["peak_intermediate_bytes"], 1), 1)
-            emit(row)
-            rows.append(row)
+            fp32_row = None
+            for cd in dtypes:
+                row = bench_family(sketch, B, n, d, m_max, reps, seed,
+                                   compute_dtype=cd)
+                if cd == "fp32":
+                    fp32_row = row
+                    if sketch == "gaussian":
+                        base = row
+                    if sketch == "gaussian_dense" and base is not None:
+                        row["streamed_speedup"] = round(
+                            row["pass_s"] / max(base["pass_s"], 1e-9), 2)
+                        row["peak_bytes_ratio"] = round(
+                            row["peak_intermediate_bytes"]
+                            / max(base["peak_intermediate_bytes"], 1), 1)
+                elif fp32_row is not None:
+                    # per-family ratios vs its own fp32 baseline
+                    row["speedup_vs_fp32"] = round(
+                        fp32_row["pass_s"] / max(row["pass_s"], 1e-9), 2)
+                    row["peak_bytes_ratio_vs_fp32"] = round(
+                        row["peak_intermediate_bytes"]
+                        / max(fp32_row["peak_intermediate_bytes"], 1), 3)
+                emit(row)
+                rows.append(row)
     return rows
 
 
@@ -107,9 +135,12 @@ def main():
     ap.add_argument("--ns", default="2048,8192",
                     help="comma list of n values")
     ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--dtypes", default=",".join(COMPUTE_DTYPES),
+                    help="comma list of compute dtypes (fp32,bf16,int8)")
     args = ap.parse_args()
     run(B=args.B, d=args.d, m_max=args.m_max,
-        ns=tuple(int(x) for x in args.ns.split(",")), reps=args.reps)
+        ns=tuple(int(x) for x in args.ns.split(",")), reps=args.reps,
+        dtypes=tuple(args.dtypes.split(",")))
 
 
 if __name__ == "__main__":

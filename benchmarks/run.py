@@ -7,8 +7,12 @@ system benchmarks (batched engine, sketch→Gram pass).
 Prints CSV-ish rows (``k=v,...``) per benchmark; ``--json`` additionally
 writes ``BENCH_solver.json`` — the machine-readable perf-trajectory
 baseline (batched-engine + sketch-pass timings with shape/seed metadata)
-that CI uploads as an artifact. See each module's docstring for the
-reproduction target it validates.
+that CI uploads as an artifact. New rows are MERGED into an existing
+``BENCH_solver.json`` keyed by their identifying fields (bench, method,
+sketch, shape, dtype, …): a ``--only guard`` run refreshes the guard rows
+and keeps everything else, so the artifact preserves the full trajectory
+instead of being truncated to the last selection. See each module's
+docstring for the reproduction target it validates.
 """
 
 from __future__ import annotations
@@ -20,6 +24,34 @@ import sys
 import time
 
 BENCH_JSON = "BENCH_solver.json"
+
+# Fields that IDENTIFY a row (what was measured, on which shape, at which
+# precision) as opposed to the measurement itself (timings, ratios, bytes,
+# agreement flags). Two rows with the same identity are the same benchmark
+# point — the newer one replaces the older on merge.
+_ID_FIELDS = ("bench", "method", "sketch", "family", "kind", "impl",
+              "dtype", "compute_dtype", "B", "n", "d", "m", "m_max",
+              "devices", "K", "shards", "seed", "nu", "guards")
+
+
+def _row_key(row: dict) -> tuple:
+    return tuple((k, repr(row[k])) for k in _ID_FIELDS if k in row)
+
+
+def merge_rows(existing: list[dict], new: list[dict]) -> list[dict]:
+    """Merge keyed benchmark rows: a new row replaces the existing row with
+    the same identity (in place, preserving trajectory order); genuinely
+    new points append. Rows from benches not re-run survive untouched."""
+    out = list(existing)
+    index = {_row_key(r): i for i, r in enumerate(out)}
+    for r in new:
+        k = _row_key(r)
+        if k in index:
+            out[index[k]] = r
+        else:
+            index[k] = len(out)
+            out.append(r)
+    return out
 
 
 def main() -> None:
@@ -100,8 +132,19 @@ def main() -> None:
         print(f"bench={name},elapsed_s={time.time()-t0:.1f}", flush=True)
     print(f"\ntotal_elapsed_s={time.time()-t_all:.1f}")
     if args.json:
+        import os
+
         import jax
 
+        prior: list[dict] = []
+        if os.path.exists(BENCH_JSON):
+            try:
+                with open(BENCH_JSON) as f:
+                    prior = json.load(f).get("rows", [])
+            except (json.JSONDecodeError, OSError) as e:
+                print(f"warning: could not merge into {BENCH_JSON} ({e!r}); "
+                      f"rewriting from this run only")
+        rows = merge_rows(prior, json_rows)
         payload = {
             "meta": {
                 "fast": args.fast,
@@ -111,11 +154,12 @@ def main() -> None:
                 "machine": platform.machine(),
                 "elapsed_s": round(time.time() - t_all, 1),
             },
-            "rows": json_rows,
+            "rows": rows,
         }
         with open(BENCH_JSON, "w") as f:
             json.dump(payload, f, indent=2)
-        print(f"wrote {BENCH_JSON} ({len(json_rows)} rows)")
+        print(f"wrote {BENCH_JSON} ({len(json_rows)} new rows, "
+              f"{len(rows)} total after merge)")
     if failures:
         sys.exit(1)
 

@@ -4,9 +4,10 @@ bucketing + batched multi-problem adaptive engine (DESIGN.md §6).
 Submits a stream of ridge problems with random shapes and regularization,
 flushes them through the service, audits every returned solution against a
 dense direct solve, and prints each request's adaptivity certificate —
-including which sketch family produced it.
+including which sketch family and sketch-pass compute dtype produced it.
 
     PYTHONPATH=src python examples/solve_service.py --sketch srht
+    PYTHONPATH=src python examples/solve_service.py --dtype bf16
 """
 
 import argparse
@@ -17,7 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import direct_solve, from_least_squares
-from repro.core.level_grams import PADDED_SKETCHES
+from repro.core.level_grams import COMPUTE_DTYPES, PADDED_SKETCHES
 from repro.serve.solver_service import SolverService
 
 
@@ -26,13 +27,17 @@ def main():
     ap.add_argument("--sketch", default="gaussian",
                     choices=PADDED_SKETCHES,
                     help="sketch family for the adaptive engine")
+    ap.add_argument("--dtype", default="fp32", choices=COMPUTE_DTYPES,
+                    help="sketch-pass compute dtype (DESIGN.md §10): "
+                         "bf16/int8 reduce stream precision, certificates "
+                         "stay fp32")
     ap.add_argument("--requests", type=int, default=40)
     ap.add_argument("--certificates", type=int, default=8,
                     help="how many per-request certificate lines to print")
     args = ap.parse_args()
 
     svc = SolverService(batch_size=16, method="pcg", sketch=args.sketch,
-                        tol=1e-12)
+                        compute_dtype=args.dtype, tol=1e-12)
     rng = np.random.default_rng(0)
     requests = {}
     for i in range(args.requests):
@@ -65,6 +70,7 @@ def main():
     for rid in sorted(sols)[: args.certificates]:
         s = sols[rid]
         print(f"  cert req={rid:3d} sketch={s.sketch:<14s} "
+              f"dtype={s.compute_dtype:<4s} "
               f"class=(n={s.shape_class.n}, d={s.shape_class.d}, "
               f"m_max={s.shape_class.m_max}) m_final={s.m_final:4d} "
               f"iters={s.iters:3d} doublings={s.doublings} "

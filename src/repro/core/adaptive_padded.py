@@ -75,6 +75,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.precision import canonical_compute_dtype
+
 from .level_grams import PADDED_SKETCHES, get_provider
 from .quadratic import Quadratic, weighted_gram
 from .solvers import c_alpha_rho, rho_to_rate
@@ -188,7 +190,7 @@ def _valid_level_remap(level_ok: jnp.ndarray):
 
 @partial(jax.jit,
          static_argnames=("m_max", "method", "sketch", "max_iters", "rho",
-                          "gram_hvp", "mesh", "guards"))
+                          "gram_hvp", "mesh", "guards", "compute_dtype"))
 def padded_adaptive_solve_batched(
     q: Quadratic,
     keys: jax.Array,
@@ -203,6 +205,7 @@ def padded_adaptive_solve_batched(
     mesh=None,
     init_level: jax.Array | None = None,
     guards: bool = True,
+    compute_dtype: str = "fp32",
 ):
     """One-executable adaptive solve of a batch of B problems.
 
@@ -246,6 +249,17 @@ def padded_adaptive_solve_batched(
     benchmarking (``benchmarks/bench_guard.py``); statuses are still
     reported but ladder validity is assumed.
 
+    ``compute_dtype`` (static, ``kernels.precision``): precision of the
+    one-touch sketch pass only — ``"bf16"`` streams/contracts sketch
+    operands in bfloat16 with fp32 accumulation, ``"int8"`` additionally
+    quantizes A per row and streams the codes. The (L, B, d, d) ladder
+    Grams, their Cholesky factors, every in-loop quantity and the δ̃
+    certificates are fp32 in all modes, so guards and the certificate
+    contract are unchanged; the sketch is merely a (slightly) noisier
+    spectral approximation, which the doubling controller absorbs
+    (DESIGN.md §10). The fp32 default is bit-identical to the
+    pre-dtype-axis engine.
+
     ``mesh`` (static): a ``jax.sharding.Mesh`` whose data axes row-shard A
     (``distributed.shard_quadratic`` places it). The ONLY thing that
     changes is the precompute: the one-touch ladder pass runs per shard
@@ -264,15 +278,19 @@ def padded_adaptive_solve_batched(
     B, d = q.batch, q.d
     if _is_single_key(keys):
         keys = jax.random.split(keys, B)
+    compute_dtype = canonical_compute_dtype(compute_dtype)
     provider = get_provider(sketch)
     ladder = doubling_ladder(m_max)
+    sample_dtype = q.A.dtype if q.A.dtype != jnp.int8 else jnp.float32
     if mesh is None:
-        data = provider.sample(keys, m_max, q.n, q.A.dtype)
-        grams = provider.level_grams(data, q, ladder)
+        data = provider.sample(keys, m_max, q.n, sample_dtype)
+        grams = provider.level_grams(data, q, ladder,
+                                     compute_dtype=compute_dtype)
     else:
         from .distributed import shard_level_grams
 
-        grams = shard_level_grams(provider, keys, q, ladder, mesh)
+        grams = shard_level_grams(provider, keys, q, ladder, mesh,
+                                  compute_dtype=compute_dtype)
     pinvs = _precompute_pinvs(grams, q)
     ladder_m = jnp.asarray(ladder, jnp.int32)
     top = len(ladder) - 1
@@ -336,7 +354,7 @@ def padded_adaptive_solve_batched(
     _sq = math.sqrt(1.0 - rho)
     mu_p = 2.0 * (1.0 - rho) / (1.0 + _sq)
     beta_p = (1.0 - _sq) / (1.0 + _sq)
-    fdtype = q.A.dtype
+    fdtype = sample_dtype
 
     x0 = jnp.zeros((B, d), fdtype)
     if init_level is None:
@@ -521,6 +539,7 @@ def padded_adaptive_solve(
     max_iters: int = 100,
     rho: float = 0.5,
     tol: float = 1e-10,
+    compute_dtype: str = "fp32",
 ):
     """Adaptive solve of one problem as a B=1 (or B=c for matrix RHS) batch
     through the padded multi-problem engine. Returns (x, stats) with scalar
@@ -529,7 +548,8 @@ def padded_adaptive_solve(
     if q.batched:
         return padded_adaptive_solve_batched(
             q, key, m_max=m_max, method=method, sketch=sketch,
-            max_iters=max_iters, rho=rho, tol=tol)
+            max_iters=max_iters, rho=rho, tol=tol,
+            compute_dtype=compute_dtype)
     matrix_rhs = q.b.ndim == 2
     if matrix_rhs:
         B = q.b.shape[1]
@@ -547,7 +567,8 @@ def padded_adaptive_solve(
                    row_weights=w)
     x, stats = padded_adaptive_solve_batched(
         qb, keys, m_max=m_max, method=method, sketch=sketch,
-        max_iters=max_iters, rho=rho, tol=tol)
+        max_iters=max_iters, rho=rho, tol=tol,
+        compute_dtype=compute_dtype)
     if matrix_rhs:
         return x.T, stats
     return x[0], {k: (v[0] if getattr(v, "ndim", 0) else v)

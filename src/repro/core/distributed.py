@@ -134,6 +134,7 @@ def shard_level_grams(
     q: Quadratic,
     ladder: tuple[int, ...],
     mesh: Mesh,
+    compute_dtype: str | None = None,
 ) -> jnp.ndarray:
     """(L, B, d, d) ladder-level Grams of the *concatenated* block sketch.
 
@@ -156,6 +157,12 @@ def shard_level_grams(
     ``keys`` must be a (B,)-batch of per-problem keys (the engine splits a
     single key before calling); ``q`` must be batched, with n divisible by
     the data-shard count.
+
+    ``compute_dtype`` (``kernels.precision``): each shard's one-touch pass
+    runs at the reduced stream precision locally — bf16 operands / int8
+    codes with fp32 accumulation — and returns fp32 partial Grams, so the
+    ONE psum is an exact fp32 reduction in every mode ("bf16 passes, one
+    fp32 psum"): the cross-shard sum adds no reduced-precision error.
     """
     if not q.batched:
         raise ValueError("shard_level_grams expects a batched Quadratic")
@@ -172,8 +179,11 @@ def shard_level_grams(
         # like A does and the concatenated-block Gram identity is unchanged
         q_loc = Quadratic(A=A_blk, b=b, nu=nu, lam_diag=lam, batched=True,
                           row_weights=w_blk)
-        data = provider.sample(k_loc, m_max, A_blk.shape[-2], A_blk.dtype)
-        g = provider.level_grams(data, q_loc, ladder)
+        sample_dtype = (A_blk.dtype if A_blk.dtype != jnp.int8
+                        else jnp.float32)
+        data = provider.sample(k_loc, m_max, A_blk.shape[-2], sample_dtype)
+        g = provider.level_grams(data, q_loc, ladder,
+                                 compute_dtype=compute_dtype)
         return jax.lax.psum(g, axis_name=da)
 
     if weighted:

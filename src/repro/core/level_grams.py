@@ -50,6 +50,14 @@ its one-nonzero-per-column sign stream, and the SRHT folds w^{1/2} into
 the sign flip that precedes the FWHT. No family materializes an (n, d)
 weighted copy of A, and the one-touch ladder algebra is untouched — the
 weight is a property of the sketch application, not of the ladder.
+
+Compute dtype (DESIGN.md §10, ``kernels.precision``): every provider takes
+``compute_dtype ∈ {"fp32", "bf16", "int8"}`` and applies it to the SKETCH
+PASS only — bf16 operands with fp32 accumulation, or an int8-quantized A
+stream whose per-row dequantization scales fold into the same per-row
+scale slot the GLM weights use. The (L, B, d, d) level Grams this module
+returns are always fp32: the ladder's Cholesky factors, guards, and δ̃
+certificates downstream never see reduced precision.
 """
 
 from __future__ import annotations
@@ -60,7 +68,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops
-from repro.kernels.gaussian_gram import gaussian_s_dense
+from repro.kernels.gaussian_gram import gaussian_s_dense, resolve_stream
+from repro.kernels.precision import COMPUTE_DTYPES, canonical_compute_dtype
 
 from .quadratic import Quadratic
 
@@ -76,10 +85,13 @@ class LevelGramProvider(Protocol):
 
     def level_grams(self, data: dict, q: Quadratic,
                     ladder: tuple[int, ...],
-                    row_weights: jnp.ndarray | None = None) -> jnp.ndarray:
-        """(L, B, d, d) Grams (S_m W^{1/2}A)ᵀ(S_m W^{1/2}A); touches A
+                    row_weights: jnp.ndarray | None = None,
+                    compute_dtype: str | None = None) -> jnp.ndarray:
+        """(L, B, d, d) fp32 Grams (S_m W^{1/2}A)ᵀ(S_m W^{1/2}A); touches A
         exactly once. ``row_weights`` (B, n) overrides ``q.row_weights``
-        (defaulting to it); W = I when both are None."""
+        (defaulting to it); W = I when both are None. ``compute_dtype``
+        selects the sketch pass's stream precision (module docstring);
+        the returned Grams are fp32 in every mode."""
         ...
 
 
@@ -91,13 +103,17 @@ def prefix_level_grams(R: jnp.ndarray, ladder: tuple[int, ...], *,
                        inv_m_scale: bool) -> jnp.ndarray:
     """(L, B, d, d) Grams from a (B, m_max, d) row stream whose level-m
     sketch is the first m rows: prefix-summed per-segment row-Grams, with
-    the per-level 1/√m entry rescale folded in as 1/m when requested."""
+    the per-level 1/√m entry rescale folded in as 1/m when requested.
+    A bf16 row stream (non-fp32 ``compute_dtype`` paths) accumulates into
+    an fp32 Gram via ``preferred_element_type`` — the precision boundary
+    of the whole dtype axis."""
     B, _, d = R.shape
-    dtype = R.dtype
+    dtype = jnp.promote_types(R.dtype, jnp.float32)
     grams, acc, prev = [], jnp.zeros((B, d, d), dtype), 0
     for m in ladder:
         seg = R[:, prev:m, :]
-        acc = acc + jnp.einsum("bmd,bme->bde", seg, seg)
+        acc = acc + jnp.einsum("bmd,bme->bde", seg, seg,
+                               preferred_element_type=dtype)
         grams.append(acc / jnp.asarray(m, dtype) if inv_m_scale else acc)
         prev = m
     return jnp.stack(grams)
@@ -116,9 +132,11 @@ class GaussianStreamedProvider:
     def sample(self, keys, m_max, n, dtype):
         return {"seeds": _uint32_seeds(keys)}
 
-    def level_grams(self, data, q, ladder, row_weights=None):
+    def level_grams(self, data, q, ladder, row_weights=None,
+                    compute_dtype=None):
         SA = ops.gaussian_sa(q.A, data["seeds"], ladder[-1],
-                             row_weights=_weights(q, row_weights))
+                             row_weights=_weights(q, row_weights),
+                             compute_dtype=compute_dtype)
         return prefix_level_grams(SA, ladder, inv_m_scale=True)
 
 
@@ -130,18 +148,24 @@ class GaussianDenseProvider:
     def sample(self, keys, m_max, n, dtype):
         return {"seeds": _uint32_seeds(keys)}
 
-    def level_grams(self, data, q, ladder, row_weights=None):
+    def level_grams(self, data, q, ladder, row_weights=None,
+                    compute_dtype=None):
         m_max = ladder[-1]
-        S = gaussian_s_dense(data["seeds"], m_max, q.n).astype(q.A.dtype)
-        w = _weights(q, row_weights)
-        if w is not None:
-            # the dense baseline may materialize: scale S columns by w^{1/2}
-            # (same entries law as the streamed provider's in-tile scaling)
-            S = S * jnp.sqrt(w).astype(S.dtype)[:, None, :]
+        B = data["seeds"].shape[0]
+        # same per-row scale algebra as the streamed provider: w^{1/2} and
+        # int8 dequantization scales merge into one (B, n) column scale on
+        # the materialized S (fp32, applied before the contract-dtype cast)
+        A, scale, ct, _ = resolve_stream(q.A, B, _weights(q, row_weights),
+                                         compute_dtype)
+        S = gaussian_s_dense(data["seeds"], m_max, q.n).astype(jnp.float32)
+        if scale is not None:
+            S = S * scale[:, None, :]
         if q.shared_A:
-            SA = jnp.einsum("bmn,nd->bmd", S, q.A)
+            SA = jnp.einsum("bmn,nd->bmd", S.astype(ct), A.astype(ct),
+                            preferred_element_type=jnp.float32)
         else:
-            SA = jnp.einsum("bmn,bnd->bmd", S, q.A)
+            SA = jnp.einsum("bmn,bnd->bmd", S.astype(ct), A.astype(ct),
+                            preferred_element_type=jnp.float32)
         return prefix_level_grams(SA, ladder, inv_m_scale=True)
 
 
@@ -157,7 +181,8 @@ class SJLTProvider:
             jax.random.fold_in(k, 1), (n,), dtype))(keys)
         return {"u": u, "signs": signs}
 
-    def level_grams(self, data, q, ladder, row_weights=None):
+    def level_grams(self, data, q, ladder, row_weights=None,
+                    compute_dtype=None):
         u, signs = data["u"], data["signs"]
         m_max = ladder[-1]
         M = 1 << max(0, (m_max - 1).bit_length())   # top pow2 ≥ m_max
@@ -165,7 +190,8 @@ class SJLTProvider:
             jnp.floor(u * jnp.asarray(M, u.dtype)).astype(jnp.int32),
             0, M - 1)
         SA = ops.sjlt_apply_batched(                       # the ONE touch
-            q.A, rows, signs, M, row_weights=_weights(q, row_weights))
+            q.A, rows, signs, M, row_weights=_weights(q, row_weights),
+            compute_dtype=compute_dtype)
         by_m = {M: SA}
         m = M
         while m > 1:                    # ⌊u·m⌋ = ⌊⌊u·2m⌋/2⌋: pairwise fold
@@ -203,7 +229,8 @@ class SRHTProvider:
             jax.random.fold_in(k, 1), (m_max,), 0, n_pad))(keys)
         return {"signs": signs, "rows": rows}
 
-    def level_grams(self, data, q, ladder, row_weights=None):
+    def level_grams(self, data, q, ladder, row_weights=None,
+                    compute_dtype=None):
         signs, rows = data["signs"], data["rows"]
         n, d = q.n, q.d
         B = signs.shape[0]
@@ -214,12 +241,24 @@ class SRHTProvider:
         # weighted copy of A never round-trips HBM on the Pallas path
         scale = signs if w is None else signs * jnp.sqrt(w).astype(
             signs.dtype)
-        X = q.A if not q.shared_A else jnp.broadcast_to(
-            q.A[None, :, :], (B, n, d))
+        A = q.A
+        if (canonical_compute_dtype(compute_dtype) == "int8"
+                and A.dtype != jnp.int8):
+            # quantize before pad/broadcast so the padded copy is 1 B/elem;
+            # dequantization scales join the fused per-row scale
+            from repro.dist.compress import quantize_rows
+
+            A, a_scales = quantize_rows(A)
+            if q.shared_A:
+                a_scales = jnp.broadcast_to(a_scales[None, :], (B, n))
+            scale = scale * a_scales
+        X = A if not q.shared_A else jnp.broadcast_to(
+            A[None, :, :], (B, n, d))
         if n_pad != n:
             X = jnp.pad(X, ((0, 0), (0, n_pad - n), (0, 0)))
             scale = jnp.pad(scale, ((0, 0), (0, n_pad - n)))
-        HX = ops.fwht_cols(X, row_scale=scale)             # the ONE touch
+        HX = ops.fwht_cols(X, row_scale=scale,             # the ONE touch
+                           compute_dtype=compute_dtype)
         picked = jnp.take_along_axis(HX, rows[:, :, None], axis=1)
         return prefix_level_grams(picked, ladder, inv_m_scale=True)
 
@@ -270,7 +309,8 @@ class BlockEmulationProvider:
             for k in range(self.n_shards)
         ]}
 
-    def level_grams(self, data, q, ladder, row_weights=None):
+    def level_grams(self, data, q, ladder, row_weights=None,
+                    compute_dtype=None):
         n_loc = self._check(q.n)
         w = q.row_weights if row_weights is None else row_weights
         out = None
@@ -281,7 +321,10 @@ class BlockEmulationProvider:
             w_k = None if w is None else w[:, k * n_loc:(k + 1) * n_loc]
             q_k = Quadratic(A=A_k, b=q.b, nu=q.nu, lam_diag=q.lam_diag,
                             batched=q.batched, row_weights=w_k)
-            g_k = self.inner.level_grams(dk, q_k, ladder)
+            # per-shard reduced-precision pass; the (fp32) shard Grams sum
+            # exactly — the emulated analogue of "bf16 passes, fp32 psum"
+            g_k = self.inner.level_grams(dk, q_k, ladder,
+                                         compute_dtype=compute_dtype)
             out = g_k if out is None else out + g_k
         return out
 

@@ -100,6 +100,7 @@ def adaptive_newton_solve_batched(
     ls_backtracks: int = 12,
     ls_c1: float = 1e-4,
     mesh=None,
+    compute_dtype: str = "fp32",
 ):
     """Solve a batch of B regularized GLM problems by adaptive sketched
     Newton. A (B, n, d) per-problem or (n, d) shared; y (B, n); ν scalar or
@@ -128,7 +129,7 @@ def adaptive_newton_solve_batched(
         return padded_adaptive_solve_batched(
             q_t, step_keys, m_max=m_max, method=method, sketch=sketch,
             max_iters=inner_max_iters, rho=rho, tol=inner_tol, mesh=mesh,
-            init_level=level)
+            init_level=level, compute_dtype=compute_dtype)
 
     return _newton_loop(family, A, y, nu, lam_diag, inner_solve,
                         newton_iters=newton_iters, tol=tol,

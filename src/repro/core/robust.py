@@ -74,6 +74,7 @@ def robust_padded_solve_batched(
     init_level: jax.Array | None = None,
     max_retries: int = 2,
     fallback: bool = True,
+    compute_dtype: str = "fp32",
 ):
     """Solve a batch with engine guards + sketch-redraw retries + fallback.
 
@@ -102,7 +103,8 @@ def robust_padded_solve_batched(
     solve = lambda qq, kk, lvl: padded_adaptive_solve_batched(
         qq, kk, m_max=m_max, method=method, sketch=sketch,
         max_iters=max_iters, rho=rho, tol=tol, gram_hvp=gram_hvp,
-        mesh=mesh, init_level=lvl, guards=True)
+        mesh=mesh, init_level=lvl, guards=True,
+        compute_dtype=compute_dtype)
 
     x_dev, stats_dev = solve(q, keys, init_level)
 

@@ -44,6 +44,31 @@ def _dequantize(codes: jnp.ndarray, scale: jnp.ndarray,
     return codes.astype(dtype) * scale
 
 
+def quantize_rows(v: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-ROW symmetric int8 over the last axis: v (…, n, d) →
+    (codes int8 (…, n, d), scales f32 (…, n)) with
+    v̂ = scales[…, None]·codes and |v̂ − v| ≤ scales/2 entrywise.
+
+    The row granularity is what the mixed-precision sketch passes need
+    (``kernels.precision``): every sketch family owns a per-row scale slot
+    (GLM w^{1/2} folding), so diag(scales) folds there and dequantization
+    happens in-register on the streamed codes — never as a float copy of
+    v. All-zero rows get scale 0 with a safe divisor (codes 0), matching
+    ``_quantize``'s convention."""
+    scale = jnp.max(jnp.abs(v), axis=-1) / 127.0
+    safe = jnp.where(scale > 0, scale, 1.0)
+    codes = jnp.clip(jnp.round(v / safe[..., None]), -127, 127).astype(
+        jnp.int8)
+    return codes, scale.astype(jnp.float32)
+
+
+def dequantize_rows(codes: jnp.ndarray, scales: jnp.ndarray,
+                    dtype=jnp.float32) -> jnp.ndarray:
+    """Materialized Â = diag(scales)·codes — the dense oracle the in-
+    register kernels must match exactly (tests/test_mixed_precision.py)."""
+    return codes.astype(dtype) * scales[..., None].astype(dtype)
+
+
 def compress_decompress(v: jnp.ndarray, residual: jnp.ndarray
                         ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """One EF-int8 round for a single tensor.

@@ -106,9 +106,11 @@ class AdversarialKeyProvider:
         return {"inner": self.inner.sample(keys, m_max, n, dtype),
                 "_poisoned": jnp.any(hit, axis=-1)}              # (B,)
 
-    def level_grams(self, data, q, ladder, row_weights=None):
+    def level_grams(self, data, q, ladder, row_weights=None,
+                    compute_dtype=None):
         g = self.inner.level_grams(data["inner"], q, ladder,
-                                   row_weights=row_weights)      # (L, B, d, d)
+                                   row_weights=row_weights,
+                                   compute_dtype=compute_dtype)  # (L, B, d, d)
         return jnp.where(data["_poisoned"][None, :, None, None],
                          jnp.nan, g)
 

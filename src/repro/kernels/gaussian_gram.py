@@ -36,6 +36,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+from .precision import canonical_compute_dtype, contract_dtype
+
 # Canonical micro-tile of the n axis: the oracle always reduces n in
 # _MICRO-column steps so chunk size never changes numerics; the Pallas
 # kernel requires chunk % _MICRO == 0 so its tiles see the same counters.
@@ -99,9 +101,41 @@ def gaussian_s_dense(seeds: jnp.ndarray, m: int, n: int) -> jnp.ndarray:
 # Chunked lax.scan oracle — the CPU/GPU streaming path
 # ---------------------------------------------------------------------------
 
+def resolve_stream(A: jnp.ndarray, B: int,
+                   row_weights: jnp.ndarray | None,
+                   compute_dtype: str | None):
+    """The Gaussian family's compute-dtype prep, shared by the oracle, the
+    Pallas wrapper and the dense provider (``kernels.precision``).
+
+    Folds everything that scales the generated S tile's columns into ONE
+    per-column fp32 scale: the GLM w^{1/2} (as before) and, on the int8
+    path, the per-row dequantization scales of the quantized A — so the
+    kernels dequantize in-register by construction, streaming int8 codes
+    and multiplying diag(scales) into the tile they already generate.
+
+    Returns (A_stream, scale (B, n) | None, contract dtype, out dtype).
+    """
+    name = canonical_compute_dtype(compute_dtype)
+    ct = contract_dtype(name)
+    scale = (None if row_weights is None
+             else jnp.sqrt(row_weights.astype(jnp.float32)))
+    if name == "int8" and A.dtype != jnp.int8:
+        from repro.dist.compress import quantize_rows
+
+        codes, a_scales = quantize_rows(A)
+        if A.ndim == 2:                       # shared A: broadcast per problem
+            a_scales = jnp.broadcast_to(a_scales[None, :], (B, A.shape[0]))
+        scale = a_scales if scale is None else scale * a_scales
+        A = codes
+    out_dtype = jnp.float32 if (name != "fp32" or A.dtype == jnp.int8
+                                ) else A.dtype
+    return A, scale, ct, out_dtype
+
+
 def gaussian_sa_ref(A: jnp.ndarray, seeds: jnp.ndarray, m: int, *,
                     chunk_cols: int = 2048,
-                    row_weights: jnp.ndarray | None = None) -> jnp.ndarray:
+                    row_weights: jnp.ndarray | None = None,
+                    compute_dtype: str | None = None) -> jnp.ndarray:
     """Streamed S @ A without materializing S: (B, m, d) from A (n, d)
     shared or (B, n, d) per-problem and per-problem uint32 seeds (B,).
 
@@ -114,11 +148,20 @@ def gaussian_sa_ref(A: jnp.ndarray, seeds: jnp.ndarray, m: int, *,
 
     ``row_weights`` (B, n): computes S·W^{1/2}·A by scaling the generated
     (B, m, _MICRO) S tile columns by w^{1/2} inside the stream — the
-    weighted matrix W^{1/2}A never exists (DESIGN.md §8)."""
+    weighted matrix W^{1/2}A never exists (DESIGN.md §8).
+
+    ``compute_dtype`` (``kernels.precision``): ``"bf16"`` casts the scaled
+    S micro-tile and the A micro-slice to bfloat16 before the contraction
+    (``preferred_element_type=float32`` keeps the accumulator exact fp32);
+    ``"int8"`` additionally streams per-row-quantized codes of A with the
+    dequantization scales folded into the same per-column tile scale as
+    the weights. The fixed-micro-tile reduction order is dtype-independent,
+    so chunk invariance holds bit-for-bit PER dtype."""
     shared = A.ndim == 2
     n, d = A.shape[-2], A.shape[-1]
     B = seeds.shape[0]
     _check_caps(n, m)
+    A, scale, ct, out_dtype = resolve_stream(A, B, row_weights, compute_dtype)
     k = max(1, -(-chunk_cols // _MICRO))      # micro-tiles per scan step
     k = min(k, -(-n // _MICRO))               # never pad n past one chunk
     chunk = k * _MICRO
@@ -128,16 +171,15 @@ def gaussian_sa_ref(A: jnp.ndarray, seeds: jnp.ndarray, m: int, *,
         # acc + 0.0 is exact, so padding never changes the result
         A = jnp.pad(A, ((0, pad), (0, 0)) if shared
                     else ((0, 0), (0, pad), (0, 0)))
-        if row_weights is not None:
-            row_weights = jnp.pad(row_weights, ((0, 0), (0, pad)))
+        if scale is not None:
+            scale = jnp.pad(scale, ((0, 0), (0, pad)))
     steps = (n + pad) // chunk
     if shared:
-        contract = lambda S, a: jnp.einsum("bmc,cd->bmd", S, a)
+        contract = lambda S, a: jnp.einsum(
+            "bmc,cd->bmd", S, a, preferred_element_type=jnp.float32)
     else:
-        contract = lambda S, a: jnp.einsum("bmc,bcd->bmd", S, a)
-    dtype = A.dtype
-    w_sqrt = (None if row_weights is None
-              else jnp.sqrt(row_weights).astype(dtype))
+        contract = lambda S, a: jnp.einsum(
+            "bmc,bcd->bmd", S, a, preferred_element_type=jnp.float32)
 
     def step(acc, c_idx):
         # A is sliced in place (no re-layout copy): the only live sketch
@@ -146,27 +188,26 @@ def gaussian_sa_ref(A: jnp.ndarray, seeds: jnp.ndarray, m: int, *,
             col0 = c_idx * chunk + i * _MICRO
             S = jax.vmap(lambda s: gaussian_tile(
                 s, 0, col0.astype(jnp.uint32), (m, _MICRO)))(seeds)
-            S = S.astype(dtype)
-            if w_sqrt is not None:
-                w_mu = jax.lax.dynamic_slice_in_dim(
-                    w_sqrt, col0, _MICRO, axis=1)
-                S = S * w_mu[:, None, :]
+            if scale is not None:
+                s_mu = jax.lax.dynamic_slice_in_dim(
+                    scale, col0, _MICRO, axis=1)
+                S = S * s_mu[:, None, :]
             a_mu = jax.lax.dynamic_slice_in_dim(
                 A, col0, _MICRO, axis=A.ndim - 2)
-            return acc + contract(S, a_mu)
+            return acc + contract(S.astype(ct), a_mu.astype(ct))
 
         return jax.lax.fori_loop(0, k, micro, acc), None
 
-    acc0 = jnp.zeros((B, m, d), dtype)
+    acc0 = jnp.zeros((B, m, d), jnp.float32)
     acc, _ = jax.lax.scan(step, acc0, jnp.arange(steps))
-    return acc
+    return acc.astype(out_dtype)
 
 
 # ---------------------------------------------------------------------------
 # Pallas kernel — grid (B, n/chunk), S tile generated in VMEM per cell
 # ---------------------------------------------------------------------------
 
-def _gauss_sa_kernel(seed_ref, a_ref, o_ref, *, m: int, chunk: int):
+def _gauss_sa_kernel(seed_ref, a_ref, o_ref, *, m: int, chunk: int, ct):
     c = pl.program_id(1)
     seed = seed_ref[0]
     col0 = (c * chunk).astype(jnp.uint32)
@@ -174,7 +215,11 @@ def _gauss_sa_kernel(seed_ref, a_ref, o_ref, *, m: int, chunk: int):
     a = a_ref[...]
     if a.ndim == 3:
         a = a[0]
-    acc = jnp.dot(S.astype(a.dtype), a, preferred_element_type=jnp.float32)
+    # ct is the contract dtype (kernels.precision): fp32 or bf16. The cast
+    # happens on the VMEM tile/chunk in-register; the MXU accumulates fp32
+    # via preferred_element_type either way.
+    acc = jnp.dot(S.astype(ct), a.astype(ct),
+                  preferred_element_type=jnp.float32)
 
     @pl.when(c == 0)
     def _init():
@@ -186,21 +231,24 @@ def _gauss_sa_kernel(seed_ref, a_ref, o_ref, *, m: int, chunk: int):
             o_ref.dtype)
 
 
-def _gauss_sa_kernel_weighted(seed_ref, w_ref, a_ref, o_ref, *, m: int,
-                              chunk: int):
-    """Weighted variant: scale the generated (m, chunk) S tile's columns by
-    w^{1/2} in VMEM before the MXU contraction — S·W^{1/2}·A fused, with
-    neither S nor W^{1/2}A ever in HBM."""
+def _gauss_sa_kernel_scaled(seed_ref, s_ref, a_ref, o_ref, *, m: int,
+                            chunk: int, ct):
+    """Scaled variant: the generated (m, chunk) S tile's columns are scaled
+    by a pre-folded fp32 per-column factor in VMEM before the MXU
+    contraction — w^{1/2} (GLM weights), int8 dequantization scales, or
+    their product (``resolve_stream``) all ride the same slot. S·diag(s)·A
+    fused, with neither S nor the scaled A ever in HBM; on the int8 path
+    ``a`` holds codes that are dequantized in-register by this scale."""
     c = pl.program_id(1)
     seed = seed_ref[0]
     col0 = (c * chunk).astype(jnp.uint32)
     S = gaussian_tile(seed, 0, col0, (m, chunk))
+    S = S * s_ref[0, :].astype(jnp.float32)[None, :]
     a = a_ref[...]
     if a.ndim == 3:
         a = a[0]
-    w = w_ref[0, :]                                 # (chunk,) weights
-    S = S * jnp.sqrt(w.astype(jnp.float32))[None, :]
-    acc = jnp.dot(S.astype(a.dtype), a, preferred_element_type=jnp.float32)
+    acc = jnp.dot(S.astype(ct), a.astype(ct),
+                  preferred_element_type=jnp.float32)
 
     @pl.when(c == 0)
     def _init():
@@ -220,6 +268,7 @@ def gaussian_sa_pallas(
     chunk_cols: int = 512,
     interpret: bool = False,
     row_weights: jnp.ndarray | None = None,
+    compute_dtype: str | None = None,
 ) -> jnp.ndarray:
     """Fused generate-and-multiply Gaussian sketch: (B, m, d) from
     A (n, d) shared or (B, n, d) per-problem; seeds (B,) uint32.
@@ -232,21 +281,29 @@ def gaussian_sa_pallas(
     ``gaussian_sa_ref`` / ``gaussian_s_dense`` bit-for-bit (same counter
     hash); the contraction differs only in reduction order.
 
-    ``row_weights`` (B, n) switches to the weighted kernel: the S tile is
+    ``row_weights`` (B, n) switches to the scaled kernel: the S tile is
     scaled by w^{1/2} in VMEM (one extra (1, chunk) block input per cell);
-    W^{1/2}A never exists in HBM."""
+    W^{1/2}A never exists in HBM.
+
+    ``compute_dtype`` (``kernels.precision``): ``"bf16"`` casts the S tile
+    and A chunk to bfloat16 in-register for the MXU's bf16×bf16→fp32 mode
+    (pass A already stored in bf16 to also halve the HBM stream — the cast
+    composes, the one touch of A stays one touch); ``"int8"`` streams
+    per-row int8 codes of A and folds the dequantization scales into the
+    scaled kernel's per-column factor alongside any weights."""
     shared = A.ndim == 2
     n, d = A.shape[-2], A.shape[-1]
     B = seeds.shape[0]
     _check_caps(n, m)
+    A, scale, ct, out_dtype = resolve_stream(A, B, row_weights, compute_dtype)
     chunk = max(_MICRO, (chunk_cols // _MICRO) * _MICRO)
     chunk = min(chunk, -(-n // _MICRO) * _MICRO)  # never pad past one chunk
     pad = (-n) % chunk
     if pad:
         A = jnp.pad(A, ((0, pad), (0, 0)) if shared
                     else ((0, 0), (0, pad), (0, 0)))
-        if row_weights is not None:
-            row_weights = jnp.pad(row_weights, ((0, 0), (0, pad)))
+        if scale is not None:
+            scale = jnp.pad(scale, ((0, 0), (0, pad)))
         n = n + pad
     grid = (B, n // chunk)
     a_spec = (
@@ -254,20 +311,20 @@ def gaussian_sa_pallas(
         if shared
         else pl.BlockSpec((1, chunk, d), lambda b, c: (b, c, 0))
     )
-    if row_weights is None:
+    if scale is None:
         return pl.pallas_call(
-            functools.partial(_gauss_sa_kernel, m=m, chunk=chunk),
+            functools.partial(_gauss_sa_kernel, m=m, chunk=chunk, ct=ct),
             grid=grid,
             in_specs=[
                 pl.BlockSpec((1,), lambda b, c: (b,)),
                 a_spec,
             ],
             out_specs=pl.BlockSpec((1, m, d), lambda b, c: (b, 0, 0)),
-            out_shape=jax.ShapeDtypeStruct((B, m, d), A.dtype),
+            out_shape=jax.ShapeDtypeStruct((B, m, d), out_dtype),
             interpret=interpret,
         )(seeds.astype(jnp.uint32), A)
     return pl.pallas_call(
-        functools.partial(_gauss_sa_kernel_weighted, m=m, chunk=chunk),
+        functools.partial(_gauss_sa_kernel_scaled, m=m, chunk=chunk, ct=ct),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1,), lambda b, c: (b,)),
@@ -275,6 +332,6 @@ def gaussian_sa_pallas(
             a_spec,
         ],
         out_specs=pl.BlockSpec((1, m, d), lambda b, c: (b, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, m, d), A.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, m, d), out_dtype),
         interpret=interpret,
-    )(seeds.astype(jnp.uint32), row_weights.astype(A.dtype), A)
+    )(seeds.astype(jnp.uint32), scale.astype(jnp.float32), A)

@@ -1,0 +1,63 @@
+"""The compute-dtype axis of the one-touch sketch passes (DESIGN.md §10).
+
+The adaptive ladder only needs the sketched Gram to be a *spectral
+approximation* of the Hessian — the doubling controller absorbs
+constant-factor sketch error by design, and preconditioner-reuse analyses
+(arXiv 1911.02675, 2006.05874) show PCG iteration counts are insensitive
+to modest perturbations of H_S. That headroom is what a reduced-precision
+*stream* spends: the MXU-bound sketch→Gram contractions run at twice the
+fp32 throughput in bf16 and the streamed operands halve (bf16) or quarter
+(int8) their bandwidth, while everything the certificates depend on —
+Gram accumulation, Cholesky factors, residuals, δ̃ — stays fp32.
+
+Three named modes, plumbed end-to-end as a static string:
+
+* ``"fp32"`` (default) — the existing bit-exact path; every wrapper with
+  ``compute_dtype=None`` or ``"fp32"`` produces byte-identical results to
+  the pre-dtype-axis code.
+* ``"bf16"`` — sketch operands (generated S tiles, SJLT sign streams,
+  FWHT butterfly tiles, A chunks) are cast to bfloat16 *in-register* and
+  contracted with ``preferred_element_type=float32``: element products are
+  bf16-rounded, accumulation is exact fp32 — the MXU's native mixed mode.
+* ``"int8"`` — quantized-feature serving: A is quantized per ROW with
+  symmetric int8 scales (Â = diag(s)·codes, |Â−A| ≤ s/2 entrywise), the
+  int8 codes are what streams, and each family folds the dequantization
+  scales into the per-row scale slot it already owns for GLM weights
+  (generated-tile column scaling / sign stream / fused FWHT row scale) —
+  dequantization happens in-register, never as an (n, d) float copy.
+  Codes lie in [−127, 127] so their bf16 cast is exact and the contraction
+  rides the same bf16×bf16→fp32 mode.
+
+The canonical helpers here are shared by the kernels, their jnp oracles
+and the level-Gram providers, so the tolerance model is identical on every
+path.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+COMPUTE_DTYPES = ("fp32", "bf16", "int8")
+
+
+def canonical_compute_dtype(compute_dtype: str | None) -> str:
+    """Validate and canonicalize (None → "fp32")."""
+    name = compute_dtype or "fp32"
+    if name not in COMPUTE_DTYPES:
+        raise ValueError(
+            f"compute_dtype must be one of {COMPUTE_DTYPES}, "
+            f"got {compute_dtype!r}")
+    return name
+
+
+def contract_dtype(compute_dtype: str | None):
+    """The dtype sketch operands are cast to before the MXU contraction
+    (accumulation is always fp32 via ``preferred_element_type``)."""
+    return (jnp.float32 if canonical_compute_dtype(compute_dtype) == "fp32"
+            else jnp.bfloat16)
+
+
+def stream_itemsize(compute_dtype: str | None) -> int:
+    """Bytes per streamed A element (the bandwidth axis of the win)."""
+    return {"fp32": 4, "bf16": 2, "int8": 1}[
+        canonical_compute_dtype(compute_dtype)]

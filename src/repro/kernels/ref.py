@@ -20,21 +20,33 @@ def fwht_ref(x: jnp.ndarray) -> jnp.ndarray:
     return x.reshape(n, d)
 
 
-def sjlt_ref(A: jnp.ndarray, rows: jnp.ndarray, signs: jnp.ndarray, m: int
-             ) -> jnp.ndarray:
-    """Segment-sum oracle for the SJLT kernel."""
-    return jax.ops.segment_sum(A * signs[:, None], rows, num_segments=m)
+def sjlt_ref(A: jnp.ndarray, rows: jnp.ndarray, signs: jnp.ndarray, m: int,
+             compute_dtype: str | None = None) -> jnp.ndarray:
+    """Segment-sum oracle for the SJLT kernel. ``compute_dtype`` mirrors the
+    kernel's MXU arithmetic: operands rounded to the contract dtype, the
+    signed products and their segment accumulation exact in fp32."""
+    from .sjlt import fold_stream
+
+    A, signs, ct, out_dtype = fold_stream(A, signs, compute_dtype)
+    sim = lambda v: v.astype(ct).astype(jnp.float32)
+    out = jax.ops.segment_sum(sim(A) * sim(signs)[:, None], rows,
+                              num_segments=m)
+    return out.astype(out_dtype)
 
 
 def sjlt_ref_batched(A: jnp.ndarray, rows: jnp.ndarray, signs: jnp.ndarray,
-                     m: int) -> jnp.ndarray:
+                     m: int, compute_dtype: str | None = None) -> jnp.ndarray:
     """Batched oracle: A (B, n, d) or shared (n, d); rows/signs (B, n).
     Out-of-range targets (row index ≥ m, used for padding) drop out, as in
     the kernel. Returns (B, m, d)."""
+    from .sjlt import fold_stream
+
+    A, signs, ct, out_dtype = fold_stream(A, signs, compute_dtype)
+    sim = lambda v: v.astype(ct).astype(jnp.float32)
     one = lambda A_b, r_b, s_b: jax.ops.segment_sum(
-        A_b * s_b[:, None], r_b, num_segments=m)
+        sim(A_b) * sim(s_b)[:, None], r_b, num_segments=m)
     in_axes = (None, 0, 0) if A.ndim == 2 else (0, 0, 0)
-    return jax.vmap(one, in_axes=in_axes)(A, rows, signs)
+    return jax.vmap(one, in_axes=in_axes)(A, rows, signs).astype(out_dtype)
 
 
 def hadamard_dense(n: int) -> jnp.ndarray:

@@ -32,6 +32,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .precision import canonical_compute_dtype, contract_dtype
+
 
 def fold_row_weights(signs: jnp.ndarray,
                      row_weights: jnp.ndarray | None) -> jnp.ndarray:
@@ -44,18 +46,43 @@ def fold_row_weights(signs: jnp.ndarray,
     return signs * jnp.sqrt(row_weights).astype(signs.dtype)
 
 
-def _sjlt_kernel(rows_ref, signs_ref, a_ref, o_ref, *, m: int):
+def fold_stream(A: jnp.ndarray, signs: jnp.ndarray,
+                compute_dtype: str | None):
+    """The SJLT's compute-dtype prep (``kernels.precision``), shared by the
+    Pallas wrappers and the segment-sum oracle: on the int8 path A is
+    quantized per row and the dequantization scales fold into the sign
+    stream — exactly the ``fold_row_weights`` algebra, because the sketch
+    has one signed non-zero per column, so S·diag(s)·codes scales sign i by
+    s_i. Returns (A_stream, signs, contract dtype, out dtype)."""
+    name = canonical_compute_dtype(compute_dtype)
+    ct = contract_dtype(name)
+    if name == "int8" and A.dtype != jnp.int8:
+        from repro.dist.compress import quantize_rows
+
+        codes, a_scales = quantize_rows(A)
+        if a_scales.ndim < signs.ndim:        # shared A under batched signs
+            a_scales = a_scales[None, :]
+        signs = signs * a_scales
+        A = codes
+    out_dtype = jnp.float32 if (name != "fp32" or A.dtype == jnp.int8
+                                ) else A.dtype
+    return A, signs, ct, out_dtype
+
+
+def _sjlt_kernel(rows_ref, signs_ref, a_ref, o_ref, *, m: int, ct):
     i = pl.program_id(0)
     rows = rows_ref[...]            # (br,) int32 target row per A-row
-    signs = signs_ref[...]          # (br,) ±1/√s
+    signs = signs_ref[...]          # (br,) ±1/√s (× w^{1/2} / int8 scales)
     a = a_ref[...]                  # (br, bd)
     br = a.shape[0]
-    # signed one-hot dispatch (m, br) built in VMEM
+    # signed one-hot dispatch (m, br) built in VMEM; ct is the contract
+    # dtype (fp32/bf16) — bf16 folds the sign stream into the MXU's native
+    # mixed mode, fp32 accumulation via preferred_element_type either way
     row_ids = jax.lax.broadcasted_iota(jnp.int32, (m, br), 0)
     onehot = jnp.where(row_ids == rows[None, :], signs[None, :], 0.0).astype(
-        a.dtype
+        ct
     )
-    acc = jnp.dot(onehot, a, preferred_element_type=jnp.float32)
+    acc = jnp.dot(onehot, a.astype(ct), preferred_element_type=jnp.float32)
 
     @pl.when(i == 0)
     def _init():
@@ -75,15 +102,18 @@ def sjlt_pallas(
     block_rows: int = 256,
     interpret: bool = False,
     row_weights: jnp.ndarray | None = None,
+    compute_dtype: str | None = None,
 ) -> jnp.ndarray:
     """S @ A for an s=1 SJLT. A: (n, d); rows/signs: (n,). Returns (m, d).
     ``row_weights`` (n,) computes S·W^{1/2}·A by folding w^{1/2} into the
-    sign stream (``fold_row_weights``).
+    sign stream (``fold_row_weights``); ``compute_dtype`` runs the
+    dispatch-matmul in bf16 / streams int8 codes (``fold_stream``).
 
     VMEM per step: br·d (A tile) + m·br (one-hot) + m·d (accumulator);
     with br=256, m≤2048, d-tile = full d this targets ≤ ~8 MiB for d ≤ 4k.
     """
     signs = fold_row_weights(signs, row_weights)
+    A, signs, ct, out_dtype = fold_stream(A, signs, compute_dtype)
     n, d = A.shape
     if n % block_rows:
         pad = (-n) % block_rows
@@ -93,7 +123,7 @@ def sjlt_pallas(
         n = A.shape[0]
     grid = (n // block_rows,)
     out = pl.pallas_call(
-        functools.partial(_sjlt_kernel, m=m),
+        functools.partial(_sjlt_kernel, m=m, ct=ct),
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_rows,), lambda i: (i,)),
@@ -101,13 +131,13 @@ def sjlt_pallas(
             pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
         ],
         out_specs=pl.BlockSpec((m, d), lambda i: (0, 0)),
-        out_shape=jax.ShapeDtypeStruct((m, d), A.dtype),
+        out_shape=jax.ShapeDtypeStruct((m, d), out_dtype),
         interpret=interpret,
-    )(rows.astype(jnp.int32), signs.astype(A.dtype), A)
+    )(rows.astype(jnp.int32), signs.astype(jnp.float32), A)
     return out
 
 
-def _sjlt_kernel_batched(rows_ref, signs_ref, a_ref, o_ref, *, m: int):
+def _sjlt_kernel_batched(rows_ref, signs_ref, a_ref, o_ref, *, m: int, ct):
     j = pl.program_id(1)            # row-block index (inner grid dim)
     rows = rows_ref[0, :]           # (br,) this problem's targets
     signs = signs_ref[0, :]
@@ -117,9 +147,9 @@ def _sjlt_kernel_batched(rows_ref, signs_ref, a_ref, o_ref, *, m: int):
     br = a.shape[0]
     row_ids = jax.lax.broadcasted_iota(jnp.int32, (m, br), 0)
     onehot = jnp.where(row_ids == rows[None, :], signs[None, :], 0.0).astype(
-        a.dtype
+        ct
     )
-    acc = jnp.dot(onehot, a, preferred_element_type=jnp.float32)
+    acc = jnp.dot(onehot, a.astype(ct), preferred_element_type=jnp.float32)
 
     @pl.when(j == 0)
     def _init():
@@ -141,19 +171,25 @@ def sjlt_pallas_batched(
     block_rows: int = 256,
     interpret: bool = False,
     row_weights: jnp.ndarray | None = None,
+    compute_dtype: str | None = None,
 ) -> jnp.ndarray:
     """Batch of s=1 SJLT sketches: one dispatch-matmul grid cell per
     (problem, row-block). A: (B, n, d) per-problem or (n, d) shared;
     rows/signs: (B, n). Returns (B, m, d). ``row_weights`` (B, n) folds
     per-problem w^{1/2} into the sign stream (``fold_row_weights``) — the
     shared-A fast path survives per-problem weights because the weight
-    lives in the per-problem sketch, not in A.
+    lives in the per-problem sketch, not in A. ``compute_dtype``
+    (``kernels.precision``): bf16 dispatch-matmuls, or int8 A codes with
+    the per-row dequantization scales folded into the sign stream
+    (``fold_stream``) — the shared-A fast path survives quantization for
+    the same reason it survives weights.
 
     The problem axis is the outer grid dimension so the per-problem output
     block accumulates over its row-blocks exactly as in ``sjlt_pallas``;
     VMEM per step is unchanged from the single-problem kernel.
     """
     signs = fold_row_weights(signs, row_weights)
+    A, signs, ct, out_dtype = fold_stream(A, signs, compute_dtype)
     B, n = rows.shape
     shared = A.ndim == 2
     d = A.shape[-1]
@@ -173,7 +209,7 @@ def sjlt_pallas_batched(
         else pl.BlockSpec((1, block_rows, d), lambda b, j: (b, j, 0))
     )
     out = pl.pallas_call(
-        functools.partial(_sjlt_kernel_batched, m=m),
+        functools.partial(_sjlt_kernel_batched, m=m, ct=ct),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, block_rows), lambda b, j: (b, j)),
@@ -181,7 +217,7 @@ def sjlt_pallas_batched(
             a_spec,
         ],
         out_specs=pl.BlockSpec((1, m, d), lambda b, j: (b, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, m, d), A.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, m, d), out_dtype),
         interpret=interpret,
-    )(rows.astype(jnp.int32), signs.astype(A.dtype), A)
+    )(rows.astype(jnp.int32), signs.astype(jnp.float32), A)
     return out

@@ -11,12 +11,14 @@ in fixed-shape batches by the multi-problem adaptive engine
 (serve/solver_service.py, DESIGN.md §6):
 
     PYTHONPATH=src python -m repro.launch.serve --ridge --requests 64 \
-        --ridge-batch 16 [--sketch srht] [--mesh 8] [--glm 16]
+        --ridge-batch 16 [--sketch srht] [--dtype bf16] [--mesh 8] [--glm 16]
 
 (``--ridge-batch`` sizes the packed solver batches; ``--mesh K`` runs the
 sharded engine over a K-device data mesh — see DESIGN.md §5; ``--glm N``
 adds N logistic requests served by the adaptive sketched-Newton driver
-with Newton-level certificates — DESIGN.md §8.)
+with Newton-level certificates — DESIGN.md §8; ``--dtype bf16``/``int8``
+runs the one-touch sketch pass at reduced stream precision with fp32
+certificates — DESIGN.md §10.)
 """
 
 from __future__ import annotations
@@ -53,8 +55,8 @@ def serve_ridge(args):
     from repro.serve.solver_service import GLMSolution
 
     svc = SolverService(batch_size=args.ridge_batch, method="pcg",
-                        sketch=args.sketch, mesh=mesh,
-                        strict=not args.faulty)
+                        sketch=args.sketch, compute_dtype=args.dtype,
+                        mesh=mesh, strict=not args.faulty)
     rng = np.random.default_rng(0)
     truth = {}
     for i in range(args.requests):
@@ -100,7 +102,9 @@ def serve_ridge(args):
     if ridge_ok:
         m_finals = [s.m_final for s in ridge_ok]
         fams = sorted({s.sketch for s in ridge_ok})
-        print(f"ridge certificates ({'/'.join(fams)}): "
+        dts = sorted({s.compute_dtype for s in ridge_ok})
+        print(f"ridge certificates ({'/'.join(fams)}, "
+              f"dtype {'/'.join(dts)}): "
               f"m_final min/median/max = "
               f"{min(m_finals)}/{sorted(m_finals)[len(m_finals) // 2]}/"
               f"{max(m_finals)}, "
@@ -156,11 +160,17 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--mesh", type=int, default=0,
                     help="row-shard each packed batch's A over this many "
                          "data-mesh devices (--ridge); 0 = single device")
-    from repro.core.level_grams import PADDED_SKETCHES
+    from repro.core.level_grams import COMPUTE_DTYPES, PADDED_SKETCHES
 
     ap.add_argument("--sketch", default="gaussian",
                     choices=PADDED_SKETCHES,
                     help="sketch family for the ridge service (--ridge)")
+    ap.add_argument("--dtype", default="fp32", choices=COMPUTE_DTYPES,
+                    help="sketch-pass compute dtype for the ridge service "
+                         "(--ridge): bf16 streams/contracts sketch operands "
+                         "in bfloat16 with fp32 accumulation, int8 "
+                         "additionally quantizes A per row; certificates "
+                         "stay fp32 and record the mode (DESIGN.md §10)")
     return ap
 
 

@@ -64,6 +64,12 @@ class ShapeClass(NamedTuple):
                                 # memory, where the old dense Gaussian
                                 # needed O(B·m_max·n) and could not hold
                                 # these shapes
+    compute_dtype: str | None = None  # per-class sketch-pass precision
+                                # (None → service default): "bf16" halves
+                                # the large-n classes' stream bandwidth,
+                                # "int8" serves quantized features
+                                # (kernels.precision); certificates stay
+                                # fp32 and record the mode used
 
 
 DEFAULT_SHAPE_CLASSES = (
@@ -119,6 +125,9 @@ class GLMSolution:
     shape_class: ShapeClass
     batch_index: int
     sketch: str = "gaussian"
+    # sketch-pass precision that produced this certificate (the δ̃/decrement
+    # numbers themselves are always fp32 — DESIGN.md §10)
+    compute_dtype: str = "fp32"
     # failure-lattice verdict (DESIGN.md §9); names from SolveStatus
     status: str = "OK"
     stalled: bool = False    # terminated above tolerance (distinct from
@@ -138,6 +147,9 @@ class RidgeSolution:
     shape_class: ShapeClass
     batch_index: int         # slot in the packed batch (observability)
     sketch: str = "gaussian"  # sketch family that produced the certificate
+    # sketch-pass precision that produced this certificate (the δ̃ value
+    # itself is always fp32 — DESIGN.md §10)
+    compute_dtype: str = "fp32"
     # failure-lattice verdict (DESIGN.md §9); names from SolveStatus
     status: str = "OK"
     converged: bool = True   # δ̃ cleared the service tolerance
@@ -160,6 +172,12 @@ class SolverService:
     request id — so a padded slot can never alias a real request's sketch
     (previously every padded slot shared the all-zeros key).
 
+    ``compute_dtype`` (service default, overridable per shape class):
+    precision of the engine's one-touch sketch pass — "fp32" / "bf16" /
+    "int8" (``kernels.precision``). Certificates (δ̃, Newton decrement)
+    are fp32 in every mode; each solution records the mode that produced
+    it so callers can audit precision alongside convergence.
+
     ``mesh``: a ``jax.sharding.Mesh`` turns on the sharded mode — each
     packed batch's A is placed row-sharded over the mesh's data axes and
     the engine runs with ``mesh=`` (the sharded one-touch ladder precompute
@@ -175,6 +193,7 @@ class SolverService:
         batch_size: int = 16,
         method: str = "pcg",
         sketch: str = "gaussian",
+        compute_dtype: str = "fp32",
         rho: float = 0.5,
         tol: float = 1e-10,
         max_iters: int = 200,
@@ -195,6 +214,7 @@ class SolverService:
         self.batch_size = batch_size
         self.method = method
         self.sketch = sketch
+        self.compute_dtype = compute_dtype
         self.rho = rho
         self.tol = tol
         self.max_iters = max_iters
@@ -274,7 +294,9 @@ class SolverService:
                 req_id=rid, x=jnp.zeros((A.shape[1],), A.dtype),
                 delta_tilde=float("nan"), m_final=0, iters=0, doublings=0,
                 shape_class=cls, batch_index=-1, sketch=cls.sketch or
-                self.sketch, status=SolveStatus.REJECTED.name,
+                self.sketch,
+                compute_dtype=cls.compute_dtype or self.compute_dtype,
+                status=SolveStatus.REJECTED.name,
                 converged=False))
             return rid
         self._queues[cls].append(RidgeRequest(
@@ -355,6 +377,7 @@ class SolverService:
                 newton_iters=0, m_trajectory=(), m_final=0, inner_iters=0,
                 shape_class=cls, batch_index=-1,
                 sketch=cls.sketch or self.sketch,
+                compute_dtype=cls.compute_dtype or self.compute_dtype,
                 status=SolveStatus.REJECTED.name))
             return rid
         req = GLMRequest(req_id=rid, A=A, y=y, nu=nu,
@@ -478,21 +501,22 @@ class SolverService:
         out = {}
         name = SolveStatus.DEADLINE_EXCEEDED.name
         sketch = cls.sketch or self.sketch
+        cd = cls.compute_dtype or self.compute_dtype
         for r in reqs:
             zero = jnp.zeros((r.A.shape[1],), r.A.dtype)
             if family is None:
                 out[r.req_id] = RidgeSolution(
                     req_id=r.req_id, x=zero, delta_tilde=float("nan"),
                     m_final=0, iters=0, doublings=0, shape_class=cls,
-                    batch_index=-1, sketch=sketch, status=name,
-                    converged=False)
+                    batch_index=-1, sketch=sketch, compute_dtype=cd,
+                    status=name, converged=False)
             else:
                 out[r.req_id] = GLMSolution(
                     req_id=r.req_id, x=zero, family=family,
                     decrement=float("nan"), converged=False, newton_iters=0,
                     m_trajectory=(), m_final=0, inner_iters=0,
                     shape_class=cls, batch_index=-1, sketch=sketch,
-                    status=name)
+                    compute_dtype=cd, status=name)
             self.stats["deadline_exceeded"] += 1
         return out
 
@@ -500,13 +524,14 @@ class SolverService:
                          reqs: list[GLMRequest]):
         A, y, nu, lam, keys = self._pack_glm(cls, reqs)
         sketch = cls.sketch or self.sketch
+        cd = cls.compute_dtype or self.compute_dtype
         t0 = time.perf_counter()
         x, stats = adaptive_newton_solve_batched(
             family, A, y, nu, lam_diag=lam, keys=keys, m_max=cls.m_max,
             method=self.method, sketch=sketch,
             newton_iters=self.newton_iters, tol=self.newton_tol,
             inner_max_iters=self.max_iters, rho=self.rho,
-            inner_tol=self.tol, mesh=self.mesh)
+            inner_tol=self.tol, mesh=self.mesh, compute_dtype=cd)
         x = jax.block_until_ready(x)
         self.stats["solve_seconds"] += time.perf_counter() - t0
         self.stats["batches"] += 1
@@ -529,6 +554,7 @@ class SolverService:
                 shape_class=cls,
                 batch_index=i,
                 sketch=sketch,
+                compute_dtype=cd,
                 status=status_name(stats["status"][i]),
                 stalled=bool(stats["stalled"][i]),
             )
@@ -537,6 +563,7 @@ class SolverService:
     def _solve_chunk(self, cls: ShapeClass, reqs: list[RidgeRequest]):
         q, keys = self._pack(cls, reqs)
         sketch = cls.sketch or self.sketch
+        cd = cls.compute_dtype or self.compute_dtype
         t0 = time.perf_counter()
         # the robust driver = guarded engine + per-problem sketch-redraw
         # retries + direct_solve degradation; a quarantine-evading fault
@@ -546,7 +573,7 @@ class SolverService:
             q, keys, m_max=cls.m_max, method=self.method, sketch=sketch,
             max_iters=self.max_iters, rho=self.rho, tol=self.tol,
             mesh=self.mesh, max_retries=self.max_retries,
-            fallback=self.fallback)
+            fallback=self.fallback, compute_dtype=cd)
         x = jax.block_until_ready(x)
         self.stats["solve_seconds"] += time.perf_counter() - t0
         self.stats["batches"] += 1
@@ -566,6 +593,7 @@ class SolverService:
                 shape_class=cls,
                 batch_index=i,
                 sketch=sketch,
+                compute_dtype=cd,
                 status=status_name(stats["status"][i]),
                 converged=bool(stats["converged"][i]),
                 stalled=bool(stats["stalled"][i]),

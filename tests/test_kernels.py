@@ -174,6 +174,98 @@ def test_srht_sketch_weighted():
                                rtol=1e-4, atol=1e-4)
 
 
+# ---------------------------------------------------------------------------
+# compute-dtype modes (DESIGN.md §10) — ids carry "bf16"/"int8" so the CI
+# dtype matrix can select exactly these with -k
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("compute_dtype", ["bf16", "int8"])
+@pytest.mark.parametrize("shared", [False, True])
+def test_gaussian_sa_kernel_dtype_matches_ref(shared, compute_dtype):
+    """Reduced-precision fused kernel vs the scan oracle running the SAME
+    simulated MXU contraction (operands rounded to the contract dtype,
+    fp32 accumulation): agreement to fp32 reduction error, and the result
+    stays within the mode's tolerance of the fp32 pass."""
+    B, n, d, m, chunk = 3, 700, 9, 16, 256
+    seeds = jnp.asarray([9, 10, 11], jnp.uint32)
+    A = jax.random.normal(jax.random.PRNGKey(0), (n, d) if shared
+                          else (B, n, d))
+    w = jax.random.uniform(jax.random.PRNGKey(1), (B, n),
+                           minval=0.05, maxval=3.0)
+    for rw in (None, w):
+        got = gaussian_sa_pallas(A, seeds, m, chunk_cols=chunk,
+                                 interpret=True, row_weights=rw,
+                                 compute_dtype=compute_dtype)
+        assert got.dtype == jnp.float32
+        want = gaussian_sa_ref(A, seeds, m, row_weights=rw,
+                               compute_dtype=compute_dtype)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+        full = gaussian_sa_ref(A, seeds, m, row_weights=rw)
+        rel = np.linalg.norm(np.asarray(got) - np.asarray(full)) \
+            / np.linalg.norm(np.asarray(full))
+        assert rel < 0.02, (compute_dtype, rel)
+
+
+@pytest.mark.parametrize("compute_dtype", ["bf16", "int8"])
+def test_sjlt_kernel_dtype_matches_ref(compute_dtype):
+    """SJLT reduced modes: pallas vs the segment-sum oracle under the same
+    rounding. int8 is EXACT vs its folded oracle — one signed nonzero per
+    column means the per-row scale folds into the sign stream losslessly."""
+    n, d, m = 300, 11, 32
+    A = jax.random.normal(jax.random.PRNGKey(4), (n, d))
+    rows = jax.random.randint(jax.random.PRNGKey(5), (n,), 0, m)
+    signs = jax.random.rademacher(jax.random.PRNGKey(6), (n,),
+                                  dtype=A.dtype)
+    got = sjlt_pallas(A, rows, signs, m, interpret=True,
+                      compute_dtype=compute_dtype)
+    want = ref.sjlt_ref(A, rows, signs, m, compute_dtype=compute_dtype)
+    assert got.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    full = np.asarray(ref.sjlt_ref(A, rows, signs, m))
+    rel = np.linalg.norm(np.asarray(got) - full) / np.linalg.norm(full)
+    assert rel < 0.02, (compute_dtype, rel)
+
+
+@pytest.mark.parametrize("compute_dtype", ["bf16", "int8"])
+def test_srht_sketch_dtype_modes(compute_dtype):
+    """SRHT reduced modes: bf16 butterflies / int8 quantized features stay
+    within the mode's tolerance of the fp32 sketch, fp32 output."""
+    n, d, m = 200, 8, 64
+    A = jax.random.normal(jax.random.PRNGKey(8), (n, d))
+    key = jax.random.PRNGKey(10)
+    got = ops.srht_sketch(A, key, m, use_pallas=True, interpret=True,
+                          compute_dtype=compute_dtype)
+    assert got.dtype == jnp.float32
+    full = np.asarray(ops.srht_sketch(A, key, m, use_pallas=True,
+                                      interpret=True))
+    rel = np.linalg.norm(np.asarray(got) - full) / np.linalg.norm(full)
+    assert rel < 0.03, (compute_dtype, rel)
+
+
+def test_kernel_fp32_mode_bitcompat():
+    """compute_dtype="fp32" lowers to the exact pre-axis graph for every
+    kernel entry point — byte-identical outputs."""
+    n, d, m = 256, 8, 16
+    A = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+    seeds = jnp.asarray([5], jnp.uint32)
+    assert bool(jnp.all(
+        gaussian_sa_ref(A, seeds, m)
+        == gaussian_sa_ref(A, seeds, m, compute_dtype="fp32")))
+    rows = jax.random.randint(jax.random.PRNGKey(1), (n,), 0, m)
+    signs = jax.random.rademacher(jax.random.PRNGKey(2), (n,),
+                                  dtype=A.dtype)
+    assert bool(jnp.all(
+        ops.sjlt_apply(A, rows, signs, m)
+        == ops.sjlt_apply(A, rows, signs, m, compute_dtype="fp32")))
+    key = jax.random.PRNGKey(3)
+    assert bool(jnp.all(
+        ops.srht_sketch(A, key, m, use_pallas=True, interpret=True)
+        == ops.srht_sketch(A, key, m, use_pallas=True, interpret=True,
+                           compute_dtype="fp32")))
+
+
 def test_srht_sketch_end_to_end():
     """kernels.ops.srht_sketch is an unbiased isometry in expectation."""
     n, d, m = 256, 16, 512

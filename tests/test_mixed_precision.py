@@ -1,0 +1,369 @@
+"""Compute-dtype axis of the one-touch sketch pass (DESIGN.md §10).
+
+Covers, per sketch family where applicable:
+
+* fp32-mode bit-compatibility — ``compute_dtype="fp32"`` is byte-identical
+  to the pre-axis default path (no silent numerical drift from plumbing);
+* bf16 / int8 provider Grams vs the family's fp32 pass under a tolerance
+  model calibrated to the mode (bf16 rounding of the stream operands;
+  int8 per-row symmetric quantization of A);
+* the int8 per-row-scale exactness bound: |Â − A| ≤ scaleᵢ/2 elementwise;
+* chunk-size bit-identity of the streamed gaussian PER dtype (the fixed
+  micro-tile order + fp32 accumulator make chunk_cols a pipelining knob
+  in every mode, not a numerics knob);
+* end-to-end iteration parity — the acceptance criterion: a bf16 ladder
+  reaches the same PCG iteration counts (±1) and a δ̃ within 2× of the
+  fp32 ladder on all four families, statuses all OK — including the
+  weighted GLM Newton path;
+* the structural memory win: bf16 never raises any family's peak live
+  intermediate, and at serving shapes at least one family (the SRHT's
+  (B, n_pad, d) transformed stack) drops below 0.7×;
+* serving: the certificate records which mode produced it, and per-class
+  overrides beat the service default.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.memscan import max_intermediate_bytes
+from repro.core.adaptive_padded import (
+    doubling_ladder,
+    padded_adaptive_solve_batched,
+)
+from repro.core.level_grams import PADDED_SKETCHES, get_provider
+from repro.core.quadratic import Quadratic, from_least_squares_batch
+from repro.dist.compress import dequantize_rows, quantize_rows
+from repro.kernels.gaussian_gram import gaussian_sa_ref
+from repro.kernels.precision import (
+    COMPUTE_DTYPES,
+    canonical_compute_dtype,
+    contract_dtype,
+    stream_itemsize,
+)
+
+B, N, D, M_MAX = 3, 300, 12, 24
+LADDER = doubling_ladder(M_MAX)
+
+# tolerance model: relative Frobenius error of the reduced-precision level
+# Grams vs the same provider's fp32 pass. bf16 keeps ~8 mantissa bits on
+# the stream operands (accumulation stays fp32), so errors sit at a few
+# ×1e-3; int8 adds the per-row quantization of A on top. Bounds are ~5×
+# the observed worst case on these shapes.
+_GRAM_TOL = {"bf16": 0.03, "int8": 0.06}
+REDUCED = ("bf16", "int8")
+
+
+def _rel_fro(got, want):
+    return float(np.linalg.norm(got - want) / (np.linalg.norm(want) + 1e-30))
+
+
+@pytest.fixture(scope="module")
+def q3():
+    A = jax.random.normal(jax.random.PRNGKey(0), (B, N, D)) / np.sqrt(N)
+    Y = jax.random.normal(jax.random.PRNGKey(1), (B, N))
+    return from_least_squares_batch(A, Y, jnp.asarray([0.1, 0.2, 0.3]))
+
+
+@pytest.fixture(scope="module")
+def keys():
+    return jax.random.split(jax.random.PRNGKey(42), B)
+
+
+@pytest.fixture(scope="module")
+def weights3():
+    return jax.random.uniform(jax.random.PRNGKey(77), (B, N),
+                              minval=0.05, maxval=2.0)
+
+
+# ---------------------------------------------------------------------------
+# precision helpers
+# ---------------------------------------------------------------------------
+
+def test_canonical_compute_dtype():
+    assert canonical_compute_dtype(None) == "fp32"
+    assert canonical_compute_dtype("fp32") == "fp32"
+    assert canonical_compute_dtype("bf16") == "bf16"
+    with pytest.raises(ValueError):
+        canonical_compute_dtype("fp16")
+    assert contract_dtype("fp32") == jnp.float32
+    # int8 codes ∈ [−127, 127] are exact in bf16, so both reduced modes
+    # contract in bf16 on the MXU
+    assert contract_dtype("bf16") == jnp.bfloat16
+    assert contract_dtype("int8") == jnp.bfloat16
+    assert [stream_itemsize(c) for c in COMPUTE_DTYPES] == [4, 2, 1]
+
+
+def test_quantize_rows_exactness_bound():
+    """Per-row symmetric int8: the dequantized Â satisfies the half-step
+    bound |Â − A| ≤ scaleᵢ/2 elementwise, codes stay in [−127, 127], and
+    all-zero rows round-trip to zero (no 0/0 scale)."""
+    A = jax.random.normal(jax.random.PRNGKey(3), (7, 33))
+    A = A.at[2].set(0.0)                       # degenerate row
+    codes, scales = quantize_rows(A)
+    assert codes.dtype == jnp.int8 and scales.dtype == jnp.float32
+    assert int(jnp.max(jnp.abs(codes))) <= 127
+    A_hat = dequantize_rows(codes, scales)
+    err = np.abs(np.asarray(A_hat - A))
+    bound = np.asarray(scales)[:, None] / 2 + 1e-7
+    assert (err <= bound).all()
+    assert float(jnp.max(jnp.abs(A_hat[2]))) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# provider Grams per dtype
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sketch", PADDED_SKETCHES)
+def test_fp32_mode_is_bit_compatible(q3, keys, sketch):
+    """compute_dtype="fp32" (and None) is byte-identical to the default
+    call — the dtype axis costs the fp32 path nothing."""
+    provider = get_provider(sketch)
+    data = provider.sample(keys, M_MAX, N, jnp.float32)
+    base = provider.level_grams(data, q3, LADDER)
+    explicit = provider.level_grams(data, q3, LADDER, compute_dtype="fp32")
+    assert bool(jnp.all(base == explicit))
+
+
+@pytest.mark.parametrize("compute_dtype", REDUCED)
+@pytest.mark.parametrize("sketch", PADDED_SKETCHES)
+def test_reduced_grams_near_fp32(q3, keys, sketch, compute_dtype):
+    """bf16 / int8 level Grams track the fp32 pass within the mode's
+    tolerance model at EVERY ladder level, and stay fp32-typed (the
+    precision boundary: Grams never leave fp32)."""
+    provider = get_provider(sketch)
+    data = provider.sample(keys, M_MAX, N, jnp.float32)
+    g32 = np.asarray(provider.level_grams(data, q3, LADDER))
+    g = provider.level_grams(data, q3, LADDER, compute_dtype=compute_dtype)
+    assert g.dtype == jnp.float32
+    tol = _GRAM_TOL[compute_dtype]
+    for li in range(len(LADDER)):
+        for b in range(B):
+            rel = _rel_fro(np.asarray(g)[li, b], g32[li, b])
+            assert rel < tol, (sketch, compute_dtype, LADDER[li], b, rel)
+
+
+@pytest.mark.parametrize("compute_dtype", REDUCED)
+@pytest.mark.parametrize("sketch", PADDED_SKETCHES)
+def test_weighted_reduced_grams_near_fp32(q3, keys, weights3, sketch,
+                                          compute_dtype):
+    """Same tolerance model with Hessian row weights riding the pass (the
+    GLM Newton inner problem): W^{1/2} folds into the per-row scale slot
+    of every family, in every mode."""
+    provider = get_provider(sketch)
+    data = provider.sample(keys, M_MAX, N, jnp.float32)
+    qw = q3.with_row_weights(weights3)
+    g32 = np.asarray(provider.level_grams(data, qw, LADDER))
+    g = np.asarray(provider.level_grams(data, qw, LADDER,
+                                        compute_dtype=compute_dtype))
+    tol = _GRAM_TOL[compute_dtype]
+    for li in range(len(LADDER)):
+        for b in range(B):
+            rel = _rel_fro(g[li, b], g32[li, b])
+            assert rel < tol, (sketch, compute_dtype, LADDER[li], b, rel)
+
+
+def test_int8_gaussian_matches_dequantized_oracle(q3, keys):
+    """The int8 gaussian pass equals the bf16 pass over the dequantized
+    Â = codes·scales up to bf16 rounding of the folded column scale — the
+    quantization error enters ONLY through Â, never through extra
+    precision loss in the fold."""
+    provider = get_provider("gaussian")
+    data = provider.sample(keys, M_MAX, N, jnp.float32)
+    g8 = np.asarray(provider.level_grams(data, q3, LADDER,
+                                         compute_dtype="int8"))
+    A_hat = jnp.stack([dequantize_rows(*quantize_rows(q3.A[b]))
+                       for b in range(B)])
+    q_hat = Quadratic(A=A_hat, b=q3.b, nu=q3.nu, lam_diag=q3.lam_diag,
+                      batched=True)
+    g_hat = np.asarray(provider.level_grams(data, q_hat, LADDER,
+                                            compute_dtype="bf16"))
+    for li in range(len(LADDER)):
+        for b in range(B):
+            assert _rel_fro(g8[li, b], g_hat[li, b]) < 0.02, (li, b)
+
+
+def test_block_emulation_forwards_dtype(q3, keys):
+    """The sharded-path emulator (per-shard passes, one combine) runs its
+    inner passes at the requested dtype; fp32 mode stays bit-compatible."""
+    from repro.core.level_grams import BlockEmulationProvider
+
+    be = BlockEmulationProvider("sjlt", 2)
+    data = be.sample(keys, M_MAX, N, jnp.float32)
+    g32 = be.level_grams(data, q3, LADDER)
+    g32e = be.level_grams(data, q3, LADDER, compute_dtype="fp32")
+    assert bool(jnp.all(g32 == g32e))
+    gbf = be.level_grams(data, q3, LADDER, compute_dtype="bf16")
+    assert gbf.dtype == jnp.float32
+    assert _rel_fro(np.asarray(gbf), np.asarray(g32)) < _GRAM_TOL["bf16"]
+
+
+# ---------------------------------------------------------------------------
+# chunk invariance per dtype
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("compute_dtype", COMPUTE_DTYPES)
+def test_streamed_gaussian_chunk_invariant_per_dtype(q3, keys, weights3,
+                                                     compute_dtype):
+    """chunk_cols stays a pipelining-only knob in every mode: the fixed
+    micro-tile traversal + fp32 accumulator make the streamed SA
+    bit-for-bit identical across chunk sizes for fp32, bf16 AND int8 —
+    weighted included."""
+    seeds = get_provider("gaussian").sample(keys, M_MAX, N,
+                                            jnp.float32)["seeds"]
+    for w in (None, weights3):
+        base = gaussian_sa_ref(q3.A, seeds, M_MAX, chunk_cols=256,
+                               row_weights=w, compute_dtype=compute_dtype)
+        for chunk in (512, 1024, 4096):
+            other = gaussian_sa_ref(q3.A, seeds, M_MAX, chunk_cols=chunk,
+                                    row_weights=w,
+                                    compute_dtype=compute_dtype)
+            assert bool(jnp.all(base == other)), (compute_dtype, chunk,
+                                                  w is not None)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end iteration parity (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sketch", PADDED_SKETCHES)
+def test_bf16_ladder_iteration_parity(sketch):
+    """The acceptance test: on a CI-scale batch the bf16 sketch pass
+    preconditions exactly as well as fp32 — per-problem PCG iteration
+    counts within ±1, δ̃ within 2× (+ atol), every status OK, and the
+    adapted sketch sizes identical (the δ̃ controller makes the same
+    ladder decisions)."""
+    Bq, n, d, m_max = 4, 512, 32, 128
+    A = jax.random.normal(jax.random.PRNGKey(7), (Bq, n, d)) / np.sqrt(n)
+    Y = jax.random.normal(jax.random.PRNGKey(8), (Bq, n))
+    q = from_least_squares_batch(A, Y, jnp.asarray([0.3, 0.1, 0.05, 0.2]))
+    keys = jax.random.split(jax.random.PRNGKey(9), Bq)
+
+    run = lambda cd: padded_adaptive_solve_batched(
+        q, keys, m_max=m_max, method="pcg", sketch=sketch, max_iters=200,
+        rho=0.5, tol=1e-10, compute_dtype=cd)
+    x32, s32 = run("fp32")
+    xbf, sbf = run("bf16")
+    assert np.asarray(s32["status"]).max() == 0          # all OK
+    assert np.asarray(sbf["status"]).max() == 0
+    it32 = np.asarray(s32["iters"])
+    itbf = np.asarray(sbf["iters"])
+    assert np.abs(itbf - it32).max() <= 1, (sketch, it32, itbf)
+    d32 = np.asarray(s32["dtilde"])
+    dbf = np.asarray(sbf["dtilde"])
+    assert (dbf <= 2.0 * d32 + 1e-12).all(), (sketch, d32, dbf)
+    np.testing.assert_array_equal(np.asarray(sbf["m_final"]),
+                                  np.asarray(s32["m_final"]))
+    # both land on the same solution to solver tolerance
+    assert float(jnp.max(jnp.linalg.norm(xbf - x32, axis=1))) < 1e-4
+
+
+def test_int8_ladder_converges():
+    """int8 feeds quantized features through the same controller: looser
+    than the bf16 parity claim (quantization perturbs A itself), but the
+    solve must still reach OK everywhere with a comparable ladder."""
+    Bq, n, d, m_max = 4, 512, 32, 128
+    A = jax.random.normal(jax.random.PRNGKey(7), (Bq, n, d)) / np.sqrt(n)
+    Y = jax.random.normal(jax.random.PRNGKey(8), (Bq, n))
+    q = from_least_squares_batch(A, Y, 0.2)
+    x32, s32 = padded_adaptive_solve_batched(
+        q, jax.random.PRNGKey(9), m_max=m_max, method="pcg",
+        sketch="gaussian", max_iters=200, tol=1e-10)
+    x8, s8 = padded_adaptive_solve_batched(
+        q, jax.random.PRNGKey(9), m_max=m_max, method="pcg",
+        sketch="gaussian", max_iters=200, tol=1e-10, compute_dtype="int8")
+    assert np.asarray(s8["status"]).max() == 0
+    assert np.abs(np.asarray(s8["iters"])
+                  - np.asarray(s32["iters"])).max() <= 2
+    assert float(jnp.max(jnp.linalg.norm(x8 - x32, axis=1))) < 1e-4
+
+
+def test_glm_newton_bf16_parity():
+    """The weighted path end-to-end: a logistic batch through the adaptive
+    sketched-Newton driver at bf16 matches the fp32 run's outer iteration
+    counts (±1), converges everywhere, and agrees with the exact IRLS
+    reference — Hessian weights ride the reduced-precision pass without
+    costing Newton steps."""
+    from repro.core.newton import adaptive_newton_solve_batched, irls_reference
+    from repro.core.objectives import synthetic_logistic_batch
+
+    Bq, n, d = 4, 400, 16
+    A, Y = synthetic_logistic_batch(jax.random.PRNGKey(0), Bq, n, d)
+    run = lambda cd: adaptive_newton_solve_batched(
+        "logistic", A, Y, 0.3, m_max=64, keys=jax.random.PRNGKey(5),
+        compute_dtype=cd)
+    x32, s32 = run("fp32")
+    xbf, sbf = run("bf16")
+    assert bool(np.all(np.asarray(s32["converged"])))
+    assert bool(np.all(np.asarray(sbf["converged"])))
+    assert np.abs(np.asarray(sbf["newton_iters"])
+                  - np.asarray(s32["newton_iters"])).max() <= 1
+    x_ref = irls_reference("logistic", A, Y, 0.3)
+    rel = np.max(np.linalg.norm(np.asarray(xbf - x_ref), axis=1)
+                 / (np.linalg.norm(np.asarray(x_ref), axis=1) + 1e-30))
+    assert rel < 1e-3, rel
+
+
+# ---------------------------------------------------------------------------
+# the structural memory win
+# ---------------------------------------------------------------------------
+
+def test_bf16_never_raises_and_srht_shrinks_peak_bytes(keys):
+    """Jaxpr shape scan of the full sketch pass at a serving shape: bf16
+    never produces a LARGER peak live intermediate than fp32 for any
+    family, and the SRHT — whose (B, n_pad, d) transformed stack IS the
+    peak — drops below 0.7× (measured 0.5×). Tracing only."""
+    n, d, m_max = 2048, 64, 128
+    ladder = doubling_ladder(m_max)
+    A = jax.ShapeDtypeStruct((B, n, d), jnp.float32)
+    q = Quadratic(A=A, b=jax.ShapeDtypeStruct((B, d), jnp.float32),
+                  nu=jax.ShapeDtypeStruct((B,), jnp.float32),
+                  lam_diag=jax.ShapeDtypeStruct((B, d), jnp.float32),
+                  batched=True)
+    ratios = {}
+    for sketch in PADDED_SKETCHES:
+        provider = get_provider(sketch)
+
+        def sketch_pass(q, keys, cd):
+            data = provider.sample(keys, m_max, n, jnp.float32)
+            return provider.level_grams(data, q, ladder, compute_dtype=cd)
+
+        peak32, _ = max_intermediate_bytes(jax.make_jaxpr(
+            lambda q, k: sketch_pass(q, k, "fp32"))(q, keys))
+        peakbf, shape = max_intermediate_bytes(jax.make_jaxpr(
+            lambda q, k: sketch_pass(q, k, "bf16"))(q, keys))
+        assert peakbf <= peak32, (sketch, peakbf, peak32, shape)
+        ratios[sketch] = peakbf / peak32
+    assert ratios["srht"] < 0.7, ratios
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def test_service_certificates_record_compute_dtype():
+    """A bf16 service stamps every ridge certificate with the mode that
+    produced it, converges, and a per-class override beats the service
+    default."""
+    from repro.serve.solver_service import ShapeClass, SolverService
+
+    classes = (ShapeClass(256, 32, 64),                       # inherits bf16
+               ShapeClass(1024, 64, 128, compute_dtype="fp32"))
+    svc = SolverService(batch_size=4, sketch="gaussian",
+                        compute_dtype="bf16", shape_classes=classes)
+    rng = np.random.default_rng(0)
+    want = {}
+    for i in range(6):
+        n = int(rng.integers(64, 900))
+        d = int(rng.integers(8, 60))
+        A = jax.random.normal(jax.random.PRNGKey(2 * i), (n, d)) / np.sqrt(n)
+        y = jax.random.normal(jax.random.PRNGKey(2 * i + 1), (n,))
+        rid = svc.submit(A, y, nu=0.3)
+        want[rid] = "bf16" if (n <= 256 and d <= 32) else "fp32"
+    sols = svc.flush()
+    assert len(sols) == 6
+    for rid, s in sols.items():
+        assert s.converged, rid
+        assert s.compute_dtype == want[rid], (rid, s.compute_dtype)
+        assert s.delta_tilde == s.delta_tilde          # fp32 certificate
