@@ -1,0 +1,109 @@
+"""Segmentation-overhead benchmark: the preemptible solve path vs the
+monolithic single-dispatch engine (DESIGN.md §11).
+
+Every production solve now runs through ``segmented_padded_solve_batched``
+whenever a deadline / checkpoint / preemption knob is set: the SAME
+compiled while_loop body is re-dispatched ``segment_trips`` loop trips at
+a time, with the full ``PaddedState`` round-tripping on device and the
+host checking wall-clock between dispatches. The cost of that
+preemptibility is pure dispatch + host-sync overhead — this benchmark
+measures it against ``padded_adaptive_solve_batched`` (one dispatch,
+nothing interruptible) on the ``bench_batched.py`` heterogeneous shapes,
+at the serving default segment size (32 trips) and a deliberately
+fine-grained one (8 trips, the chaos-suite setting).
+
+Budget: ≤ 3% overhead at the default segment size (``overhead_pct`` per
+row; each row also records the bitwise agreement — segmentation must never
+buy a different answer — and the dispatch count, so a regression in ANY of
+the three dimensions is visible in BENCH_solver.json).
+
+    PYTHONPATH=src python benchmarks/bench_resume.py [--B 32] [--reps 3]
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.bench_batched import heterogeneous_batch, time_best
+from benchmarks.common import emit
+from repro.core.adaptive_padded import padded_adaptive_solve_batched
+from repro.core.quadratic import from_least_squares_batch
+from repro.core.robust import segmented_padded_solve_batched
+
+#: overhead budget (percent) at the DEFAULT_SEGMENT_TRIPS granularity —
+#: the acceptance bar for making every serving solve preemptible.
+BUDGET_PCT = 3.0
+
+
+def run(B: int = 32, n: int = 512, d: int = 64, m_max: int = 128,
+        reps: int = 10, tol: float = 1e-12, seed: int = 42,
+        segment_trips: tuple[int, ...] = (32, 8)) -> list[dict]:
+    """Emit + return one monolithic row plus one row per segment size.
+
+    ``reps`` defaults high for the same reason ``bench_guard.py``'s does:
+    the quantity resolved is a few-percent difference between ~0.1 s
+    solves, and best-of-10 per side is what makes the ≤3% budget a
+    measurable claim rather than scheduler noise."""
+    A, Y, nus = heterogeneous_batch(B, n, d)
+    qb = from_least_squares_batch(A, Y, nus)
+    keys = jax.random.split(jax.random.PRNGKey(seed), B)
+
+    def mono():
+        return padded_adaptive_solve_batched(
+            qb, keys, m_max=m_max, method="pcg", sketch="gaussian",
+            max_iters=200, rho=0.5, tol=tol)
+
+    def seg(k):
+        return segmented_padded_solve_batched(
+            qb, keys, m_max=m_max, method="pcg", sketch="gaussian",
+            max_iters=200, rho=0.5, tol=tol, segment_trips=k)
+
+    x_ref, s_ref = jax.block_until_ready(mono())    # warm + reference
+    t_mono = time_best(lambda: mono()[0], reps)
+
+    base = {"bench": "resume", "method": "pcg", "sketch": "gaussian",
+            "B": B, "n": n, "d": d, "m_max": m_max, "seed": seed}
+    rows = [{**base, "kind": "monolithic", "time_s": round(t_mono, 4),
+             "trips": int(s_ref["trips"])}]
+    emit(rows[0])
+
+    for k in segment_trips:
+        x_k, s_k = seg(k)                            # warm + correctness
+        x_k = jax.block_until_ready(x_k)
+        bitwise = bool(jnp.all(x_k == x_ref)) and bool(
+            jnp.all(s_k["dtilde"] == s_ref["dtilde"]))
+        t_seg = time_best(lambda: seg(k)[0], reps)
+        overhead = 100.0 * (t_seg - t_mono) / t_mono
+        row = {
+            **base, "kind": f"segmented_k{k}",
+            "time_s": round(t_seg, 4),
+            "monolithic_s": round(t_mono, 4),
+            "overhead_pct": round(overhead, 2),
+            "bitwise_agreement": bitwise,
+            "segments": int(s_k["segments"]),
+            "budget_pct": BUDGET_PCT,
+            "within_budget": overhead <= BUDGET_PCT,
+        }
+        emit(row)
+        rows.append(row)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--B", type=int, default=32)
+    ap.add_argument("--n", type=int, default=512)
+    ap.add_argument("--d", type=int, default=64)
+    ap.add_argument("--m-max", type=int, default=128)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--tol", type=float, default=1e-12)
+    args = ap.parse_args()
+    run(B=args.B, n=args.n, d=args.d, m_max=args.m_max, reps=args.reps,
+        tol=args.tol)
+
+
+if __name__ == "__main__":
+    main()

@@ -58,7 +58,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma list: fig1,table1,table2,table3,fig4,"
-                         "kernels,batched,sketch_gram,sharded,newton,guard")
+                         "kernels,batched,sketch_gram,sharded,newton,guard,"
+                         "resume")
     ap.add_argument("--fast", action="store_true",
                     help="smaller grids (CI-scale)")
     ap.add_argument("--json", action="store_true",
@@ -66,10 +67,10 @@ def main() -> None:
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
-    from . import (bench_batched, bench_guard, bench_newton, bench_sharded,
-                   bench_sketch_gram, fig1_synthetic, fig4_realistic,
-                   kernels_bench, table1_mdelta, table2_complexity,
-                   table3_polyak)
+    from . import (bench_batched, bench_guard, bench_newton, bench_resume,
+                   bench_sharded, bench_sketch_gram, fig1_synthetic,
+                   fig4_realistic, kernels_bench, table1_mdelta,
+                   table2_complexity, table3_polyak)
 
     jobs = {
         "fig1": lambda: fig1_synthetic.run(
@@ -102,6 +103,11 @@ def main() -> None:
             reps=1 if args.fast else 3,
         ),
         "guard": lambda: bench_guard.run(
+            B=8 if args.fast else 32, n=256 if args.fast else 512,
+            d=32 if args.fast else 64, m_max=64 if args.fast else 128,
+            reps=5 if args.fast else 10,
+        ),
+        "resume": lambda: bench_resume.run(
             B=8 if args.fast else 32, n=256 if args.fast else 512,
             d=32 if args.fast else 64, m_max=64 if args.fast else 128,
             reps=5 if args.fast else 10,

@@ -1,5 +1,6 @@
 """Ridge-solve serving demo: heterogeneous requests through the shape-class
-bucketing + batched multi-problem adaptive engine (DESIGN.md §6).
+bucketing + batched multi-problem adaptive engine (DESIGN.md §6), with the
+preemptible-solve lifecycle (DESIGN.md §11) on top.
 
 Submits a stream of ridge problems with random shapes and regularization,
 flushes them through the service, audits every returned solution against a
@@ -8,21 +9,42 @@ including which sketch family and sketch-pass compute dtype produced it.
 
     PYTHONPATH=src python examples/solve_service.py --sketch srht
     PYTHONPATH=src python examples/solve_service.py --dtype bf16
+
+``--deadline-s`` bounds the whole flush: chunks are dispatched earliest-
+deadline-first and a spent budget stops a solve BETWEEN segments — expired
+requests come back ``DEADLINE_EXCEEDED`` with their best finite iterate:
+
+    PYTHONPATH=src python examples/solve_service.py --deadline-s 2.0
+
+``--checkpoint-dir`` makes every solve preemptible: SIGTERM checkpoints
+the in-flight chunk's solver state and exits 75; re-running with
+``--resume`` (same request stream — the seeds are fixed) restores the
+committed segment and finishes with identical numerics. The launcher's
+``python -m repro.launch.serve --preempt-after N`` drives exactly this
+kill → restart cycle:
+
+    PYTHONPATH=src python examples/solve_service.py --checkpoint-dir /tmp/ck
+    # ... SIGTERM mid-flush → "PREEMPTED at segment k", exit 75 ...
+    PYTHONPATH=src python examples/solve_service.py --checkpoint-dir /tmp/ck \\
+        --resume
 """
 
 import argparse
+import shutil
+import signal
+import sys
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import direct_solve, from_least_squares
+from repro.core import PreemptedError, direct_solve, from_least_squares
 from repro.core.level_grams import COMPUTE_DTYPES, PADDED_SKETCHES
 from repro.serve.solver_service import SolverService
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--sketch", default="gaussian",
                     choices=PADDED_SKETCHES,
@@ -34,10 +56,43 @@ def main():
     ap.add_argument("--requests", type=int, default=40)
     ap.add_argument("--certificates", type=int, default=8,
                     help="how many per-request certificate lines to print")
-    args = ap.parse_args()
+    ap.add_argument("--tol", type=float, default=1e-12)
+    ap.add_argument("--max-iters", type=int, default=100)
+    ap.add_argument("--max-retries", type=int, default=2)
+    ap.add_argument("--no-fallback", action="store_true",
+                    help="disable the dense direct_solve fallback")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="wall-clock budget for the whole flush; expired "
+                         "requests return DEADLINE_EXCEEDED with their "
+                         "best finite iterate (DESIGN.md §11)")
+    ap.add_argument("--segment-trips", type=int, default=32,
+                    help="loop trips per dispatched segment when the solve "
+                         "runs preemptibly")
+    ap.add_argument("--checkpoint-dir", default="",
+                    help="checkpoint in-flight solver state here; SIGTERM "
+                         "then exits 75 after committing, and --resume "
+                         "continues from the committed segment")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from --checkpoint-dir instead of wiping it")
+    args = ap.parse_args(argv)
+
+    preempt = None
+    if args.checkpoint_dir:
+        if not args.resume:
+            shutil.rmtree(args.checkpoint_dir, ignore_errors=True)
+        from repro.ft import PreemptionHandler
+
+        preempt = PreemptionHandler(signals=(signal.SIGTERM,))
+        preempt.__enter__()
 
     svc = SolverService(batch_size=16, method="pcg", sketch=args.sketch,
-                        compute_dtype=args.dtype, tol=1e-12)
+                        compute_dtype=args.dtype, tol=args.tol,
+                        max_iters=args.max_iters,
+                        max_retries=args.max_retries,
+                        fallback=not args.no_fallback,
+                        segment_trips=args.segment_trips,
+                        checkpoint_dir=args.checkpoint_dir or None,
+                        preempt=preempt)
     rng = np.random.default_rng(0)
     requests = {}
     for i in range(args.requests):
@@ -50,25 +105,44 @@ def main():
         requests[rid] = (A, y, nu)
 
     t0 = time.perf_counter()
-    sols = svc.flush()
+    try:
+        sols = svc.flush(deadline_s=args.deadline_s)
+    except PreemptedError as e:
+        print(f"PREEMPTED at segment {e.segment} "
+              f"(state committed to {e.checkpoint_dir}); "
+              f"re-run with --resume to continue", flush=True)
+        sys.exit(75)   # EX_TEMPFAIL: restart me
     dt = time.perf_counter() - t0
 
+    counts: dict[str, int] = {}
+    for s in sols.values():
+        counts[s.status] = counts.get(s.status, 0) + 1
+    all_finite = all(bool(jnp.all(jnp.isfinite(s.x))) for s in sols.values())
+
+    ok = {rid: s for rid, s in sols.items() if s.converged}
     worst = 0.0
-    for rid, (A, y, nu) in requests.items():
-        s = sols[rid]
+    for rid, s in ok.items():
+        A, y, nu = requests[rid]
         x_star = direct_solve(from_least_squares(A, y, nu))
         rel = float(jnp.linalg.norm(s.x - x_star) / jnp.linalg.norm(x_star))
         worst = max(worst, rel)
-    m_finals = sorted(s.m_final for s in sols.values())
 
     print(f"{len(requests)} requests in {dt:.2f}s "
           f"(incl. compile; {svc.stats['batches']} batches, "
           f"{svc.stats['padded_slots']} padded slots)")
-    print(f"worst relative error vs direct solve: {worst:.2e}")
-    print(f"adapted sketch sizes m_final: min={m_finals[0]} "
-          f"median={m_finals[len(m_finals) // 2]} max={m_finals[-1]}")
-    for rid in sorted(sols)[: args.certificates]:
-        s = sols[rid]
+    print("statuses: "
+          + ", ".join(f"{k}={v}" for k, v in sorted(counts.items()))
+          + f"; segments={svc.stats['segments']}, "
+            f"resumed_chunks={svc.stats['resumed_chunks']}, "
+            f"deadline_exceeded={svc.stats['deadline_exceeded']}")
+    print(f"ALL_FINITE={int(all_finite)}")
+    if ok:
+        m_finals = sorted(s.m_final for s in ok.values())
+        print(f"worst relative error vs direct solve: {worst:.2e}")
+        print(f"adapted sketch sizes m_final: min={m_finals[0]} "
+              f"median={m_finals[len(m_finals) // 2]} max={m_finals[-1]}")
+    for rid in sorted(ok)[: args.certificates]:
+        s = ok[rid]
         print(f"  cert req={rid:3d} sketch={s.sketch:<14s} "
               f"dtype={s.compute_dtype:<4s} "
               f"class=(n={s.shape_class.n}, d={s.shape_class.d}, "

@@ -13,7 +13,8 @@ Layout:
   objectives.py     regularized GLM losses (logistic/poisson/huber/quadratic)
   newton.py         adaptive sketched-Newton driver over the padded engine
   status.py         per-problem SolveStatus failure lattice (DESIGN.md §9)
-  robust.py         retry-with-redrawn-sketch + direct-solve fallback driver
+  robust.py         retry-with-redrawn-sketch + direct-solve fallback driver,
+                    segmented/preemptible solve driver (DESIGN.md §11)
 
 Every core op accepts an optional leading problem axis (batched
 ``Quadratic``) — see quadratic.py and DESIGN.md §6. Weighted Grams AᵀWA
@@ -21,7 +22,17 @@ Every core op accepts an optional leading problem axis (batched
 """
 
 from .adaptive import AdaptiveConfig, AdaptiveResult, adaptive_solve, k_max
-from .adaptive_padded import padded_adaptive_solve, padded_adaptive_solve_batched
+from .adaptive_padded import (
+    PaddedPrecompute,
+    PaddedState,
+    finalize_padded_solve,
+    padded_adaptive_solve,
+    padded_adaptive_solve_batched,
+    padded_solve_segment,
+    padded_trip_cap,
+    prepare_padded_solve,
+    reprecondition_padded,
+)
 from .effective_dim import (
     effective_dimension,
     effective_dimension_exact,
@@ -48,7 +59,11 @@ from .quadratic import (
     stack_quadratics,
     weighted_gram,
 )
-from .robust import robust_padded_solve_batched
+from .robust import (
+    PreemptedError,
+    robust_padded_solve_batched,
+    segmented_padded_solve_batched,
+)
 from .sketches import Sketch, fwht, make_sketch
 from .solvers import cg_solve, newton_solve, run_fixed
 from .status import (
@@ -64,6 +79,13 @@ __all__ = [
     "adaptive_solve",
     "padded_adaptive_solve",
     "padded_adaptive_solve_batched",
+    "PaddedState",
+    "PaddedPrecompute",
+    "prepare_padded_solve",
+    "padded_solve_segment",
+    "finalize_padded_solve",
+    "reprecondition_padded",
+    "padded_trip_cap",
     "k_max",
     "effective_dimension",
     "effective_dimension_exact",
@@ -96,6 +118,8 @@ __all__ = [
     "newton_solve",
     "run_fixed",
     "robust_padded_solve_batched",
+    "segmented_padded_solve_batched",
+    "PreemptedError",
     "SolveStatus",
     "ENGINE_FAILURES",
     "CONVERGED_STATUSES",

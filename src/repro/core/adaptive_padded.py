@@ -64,6 +64,23 @@ the precompute for the sharded one-touch pass (each shard runs its
 family's ladder pass on its rows with independent per-shard randomness;
 ONE psum of the (L, B, d, d) level Grams — ``distributed.shard_level_grams``,
 DESIGN.md §5); the while_loop and all of the above are unchanged.
+
+Segmentation (DESIGN.md §11): the solve decomposes into four reusable,
+individually-jitted pieces — ``prepare_padded_solve`` (one-touch ladder
+pass + factorizations + guard tables + optional Gram precompute, returning
+a ``PaddedPrecompute`` and the initial ``PaddedState``),
+``padded_solve_segment`` (the SAME while_loop body run up to a *traced*
+trip limit — one compiled executable re-dispatched per segment),
+``finalize_padded_solve`` (the status lattice + certificates), and
+``reprecondition_padded`` (rebuild the ladder from replacement level Grams
+mid-solve and re-anchor every unfinished problem at its current iterate —
+elastic shard recovery). ``padded_adaptive_solve_batched`` is these pieces
+composed in one jit with the trip limit pinned at the trip cap, so the
+monolithic path is bit-identical to running the segments back-to-back.
+The full ``PaddedState`` (iterates, best-iterate, per-problem level,
+residual/δ̃ state, counters) is an exported NamedTuple of plain arrays —
+exactly what a checkpoint of a preempted solve persists
+(``core.robust.segmented_padded_solve_batched``).
 """
 
 from __future__ import annotations
@@ -108,6 +125,24 @@ class PaddedState(NamedTuple):
     trips: jnp.ndarray        # scalar loop-trip counter
 
 
+class PaddedPrecompute(NamedTuple):
+    """Everything the while_loop body reads that is NOT per-iteration state:
+    the factorized ladder, the guard tables and the (optional) precomputed
+    true Gram. Produced once per solve by ``prepare_padded_solve`` (or
+    inline by ``padded_adaptive_solve_batched``); rebuilt mid-solve only by
+    ``reprecondition_padded`` (elastic shard recovery, DESIGN.md §11).
+    A pytree of plain arrays — deterministic given (q, keys), so a resumed
+    process recomputes it instead of checkpointing O(L·B·d²) bytes."""
+    pinvs: jnp.ndarray           # (L, B, d, d) remapped per-level H_S⁻¹
+    remap: jnp.ndarray           # (L, B) valid-level redirect (identity
+                                 # when guards are off); −1 ⇒ none valid
+    any_valid: jnp.ndarray       # (B,)  problem has ≥1 usable ladder level
+    gram_poisoned: jnp.ndarray   # (B,)  some level Gram was non-finite
+    invalid_levels: jnp.ndarray  # (B,)  count of skipped ladder levels
+    G_full: jnp.ndarray | None   # precomputed AᵀA / AᵀWA ((d, d) shared or
+                                 # (B, d, d)); None ⇒ matrix-free hvp
+
+
 def _apply_pinv(pinv, z):
     """H_S⁻¹ z as one fused batched matvec — the in-loop hot path."""
     return jnp.einsum("bde,be->bd", pinv, z)
@@ -134,6 +169,16 @@ def doubling_ladder(m_max: int) -> tuple[int, ...]:
         m *= 2
     ms.append(m_max)
     return tuple(ms)
+
+
+def padded_trip_cap(m_max: int, max_iters: int) -> int:
+    """Loop-trip safety cap: rejects per problem are bounded by the ladder
+    length, so this is a net on top of the per-problem iteration cap."""
+    return max_iters + len(doubling_ladder(m_max)) + 3
+
+
+def _field_dtype(q: Quadratic):
+    return q.A.dtype if q.A.dtype != jnp.int8 else jnp.float32
 
 
 def _precompute_pinvs(grams: jnp.ndarray, q: Quadratic) -> jnp.ndarray:
@@ -188,164 +233,137 @@ def _valid_level_remap(level_ok: jnp.ndarray):
     return remap, jnp.any(level_ok, axis=0)
 
 
-@partial(jax.jit,
-         static_argnames=("m_max", "method", "sketch", "max_iters", "rho",
-                          "gram_hvp", "mesh", "guards", "compute_dtype"))
-def padded_adaptive_solve_batched(
-    q: Quadratic,
-    keys: jax.Array,
-    *,
-    m_max: int,
-    method: str = "ihs",
-    sketch: str = "gaussian",
-    max_iters: int = 100,
-    rho: float = 0.5,
-    tol: float = 1e-10,
-    gram_hvp: bool | None = None,
-    mesh=None,
-    init_level: jax.Array | None = None,
-    guards: bool = True,
-    compute_dtype: str = "fp32",
-):
-    """One-executable adaptive solve of a batch of B problems.
+# ---------------------------------------------------------------------------
+# Solve pieces: ladder precompute → init state → segment loop → finalize.
+# All traceable; the public jitted entry points below compose them.
+# ---------------------------------------------------------------------------
 
-    ``q`` must be batched (per-problem A (B,n,d) or shared A (n,d));
-    ``keys`` is a single PRNG key (split internally) or a (B,)-batch of keys
-    — problem b's sketch depends only on keys[b]. Returns (x, stats) with
-    x (B, d) and per-problem stats vectors (m_final, iters, doublings, δ̃,
-    and the final ladder ``level`` index — what a warm restart passes back).
-
-    ``q.row_weights`` (B, n) solves the *weighted* problem
-    H = AᵀWA + ν²Λ: the providers sketch W^{1/2}A inside their one
-    streaming pass (scaling generated S tiles / sign streams by w^{1/2} —
-    never an (n, d) weighted copy of A, DESIGN.md §8) and the hvp applies
-    the weight on the (B, n) intermediate. This is the GLM Newton
-    subproblem layout (``core.newton``).
-
-    ``init_level`` (B,) int32 starts each problem's doubling ladder at the
-    given level instead of 0 — the warm-started m_t of the adaptive Newton
-    sketch (arXiv:2105.07291): a Newton driver passes the previous outer
-    step's final level so the inner solve does not re-climb the ladder it
-    already discovered. Values are clipped to the ladder; a traced array,
-    so warm restarts reuse the same executable.
-
-    ``gram_hvp`` (default: auto, on when d ≤ min(n, 1024)): precompute the
-    per-problem Gram AᵀA once so every in-loop H·v is a (B,d,d)·(B,d)
-    matvec instead of two memory-bound (B,n,d) GEMVs — the right trade in
-    the serving regime (n ≫ d, many iterations), and no more than the
-    sketch pass we already pay; large-d problems keep the matrix-free O(nd)
-    hvp of the paper.
-
-    ``guards`` (static, default on): the failure-isolation layer
-    (DESIGN.md §9). Post-Cholesky finiteness checks mark individual ladder
-    levels invalid and the controller *skips* them (``_valid_level_remap``)
-    instead of letting one NaN factor poison the solve; iterate proposals
-    are finiteness-checked so a non-finite step is rejected (doubling below
-    the cap, circuit-breaking at it) and the best FINITE iterate is always
-    what is returned; every problem exits with a truthful per-problem
-    ``status`` ∈ {OK, STALLED, LEVEL_INVALID, NAN_POISONED} plus explicit
-    ``converged``/``stalled`` flags. ``guards=False`` restores the
-    pre-guard hot path (no level remap, δ̃-only finiteness) for overhead
-    benchmarking (``benchmarks/bench_guard.py``); statuses are still
-    reported but ladder validity is assumed.
-
-    ``compute_dtype`` (static, ``kernels.precision``): precision of the
-    one-touch sketch pass only — ``"bf16"`` streams/contracts sketch
-    operands in bfloat16 with fp32 accumulation, ``"int8"`` additionally
-    quantizes A per row and streams the codes. The (L, B, d, d) ladder
-    Grams, their Cholesky factors, every in-loop quantity and the δ̃
-    certificates are fp32 in all modes, so guards and the certificate
-    contract are unchanged; the sketch is merely a (slightly) noisier
-    spectral approximation, which the doubling controller absorbs
-    (DESIGN.md §10). The fp32 default is bit-identical to the
-    pre-dtype-axis engine.
-
-    ``mesh`` (static): a ``jax.sharding.Mesh`` whose data axes row-shard A
-    (``distributed.shard_quadratic`` places it). The ONLY thing that
-    changes is the precompute: the one-touch ladder pass runs per shard
-    with independent per-shard randomness and combines the (L, B, d, d)
-    level Grams in ONE psum (``distributed.shard_level_grams``,
-    DESIGN.md §5); the while_loop is byte-identical, operating on the
-    replicated d-sized state. With ``gram_hvp`` (the serving default) the
-    AᵀA precompute is the only other data-axis collective and the loop
-    itself is collective-free; matrix-free mode keeps one psum(B·d) per
-    hvp, inserted by GSPMD.
-    """
-    if not q.batched:
-        raise ValueError("use padded_adaptive_solve for single problems")
-    if method not in PADDED_METHODS:
-        raise ValueError(f"padded engine supports {PADDED_METHODS}, got {method!r}")
-    B, d = q.batch, q.d
-    if _is_single_key(keys):
-        keys = jax.random.split(keys, B)
-    compute_dtype = canonical_compute_dtype(compute_dtype)
+def _compute_ladder_grams(q, keys, *, m_max, sketch, mesh, compute_dtype):
+    """(L, B, d, d) ladder-level Grams — the ONE touch of A."""
     provider = get_provider(sketch)
     ladder = doubling_ladder(m_max)
-    sample_dtype = q.A.dtype if q.A.dtype != jnp.int8 else jnp.float32
     if mesh is None:
-        data = provider.sample(keys, m_max, q.n, sample_dtype)
-        grams = provider.level_grams(data, q, ladder,
-                                     compute_dtype=compute_dtype)
-    else:
-        from .distributed import shard_level_grams
+        data = provider.sample(keys, m_max, q.n, _field_dtype(q))
+        return provider.level_grams(data, q, ladder,
+                                    compute_dtype=compute_dtype)
+    from .distributed import shard_level_grams
 
-        grams = shard_level_grams(provider, keys, q, ladder, mesh,
-                                  compute_dtype=compute_dtype)
+    return shard_level_grams(provider, keys, q, ladder, mesh,
+                             compute_dtype=compute_dtype)
+
+
+def _ladder_tables(q: Quadratic, grams: jnp.ndarray, *, guards: bool):
+    """Factorize the ladder and build the guard tables from level Grams.
+    Returns (pinvs, remap, any_valid, gram_poisoned, invalid_levels);
+    with ``guards=False`` the remap is the identity and validity is
+    assumed (the pre-guard hot path, byte-identical gathers)."""
+    B = q.batch
     pinvs = _precompute_pinvs(grams, q)
-    ladder_m = jnp.asarray(ladder, jnp.int32)
-    top = len(ladder) - 1
+    L = pinvs.shape[0]
+    if not guards:
+        remap = jnp.broadcast_to(
+            jnp.arange(L, dtype=jnp.int32)[:, None], (L, B))
+        return (pinvs, remap, jnp.ones((B,), bool),
+                jnp.zeros((B,), bool), jnp.zeros((B,), jnp.int32))
+    # Post-Cholesky validity: a level is usable only if its Gram and its
+    # factorized inverse are entirely finite. Invalid levels are skipped
+    # via the remap (gathers below go through the redirected table);
+    # problems with NO valid level get identity "inverses" so their lanes
+    # stay finite — they are frozen at x₀ before the loop and reported
+    # LEVEL_INVALID.
+    gram_ok = jnp.all(jnp.isfinite(grams), axis=(-1, -2))           # (L, B)
+    level_ok = gram_ok & jnp.all(jnp.isfinite(pinvs), axis=(-1, -2))
+    # non-finite Grams mean poisoned data or a poisoned sketch pass —
+    # distinguishes NAN_POISONED from the finite-but-singular
+    # LEVEL_INVALID verdict when the whole ladder is unusable
+    gram_poisoned = jnp.any(~gram_ok, axis=0)                       # (B,)
+    remap, any_valid = _valid_level_remap(level_ok)
+    pinvs = jnp.take_along_axis(
+        pinvs, jnp.maximum(remap, 0)[:, :, None, None], axis=0)
+    pinvs = jnp.where(any_valid[None, :, None, None], pinvs,
+                      jnp.eye(q.d, dtype=pinvs.dtype))
+    invalid_levels = jnp.sum(~level_ok, axis=0).astype(jnp.int32)
+    return pinvs, remap, any_valid, gram_poisoned, invalid_levels
 
-    if guards:
-        # Post-Cholesky validity: a level is usable only if its Gram and
-        # its factorized inverse are entirely finite. Invalid levels are
-        # skipped via the remap (gathers below go through the redirected
-        # table); problems with NO valid level get identity "inverses" so
-        # their lanes stay finite — they are frozen at x₀ before the loop
-        # and reported LEVEL_INVALID.
-        gram_ok = jnp.all(jnp.isfinite(grams), axis=(-1, -2))       # (L, B)
-        level_ok = gram_ok & jnp.all(jnp.isfinite(pinvs), axis=(-1, -2))
-        # non-finite Grams mean poisoned data or a poisoned sketch pass —
-        # distinguishes NAN_POISONED from the finite-but-singular
-        # LEVEL_INVALID verdict when the whole ladder is unusable
-        gram_poisoned = jnp.any(~gram_ok, axis=0)                   # (B,)
-        remap, any_valid = _valid_level_remap(level_ok)
-        pinvs = jnp.take_along_axis(
-            pinvs, jnp.maximum(remap, 0)[:, :, None, None], axis=0)
-        pinvs = jnp.where(any_valid[None, :, None, None], pinvs,
-                          jnp.eye(q.d, dtype=pinvs.dtype))
-        invalid_levels = jnp.sum(~level_ok, axis=0).astype(jnp.int32)
-    else:
-        remap = None
-        any_valid = jnp.ones((B,), bool)
-        gram_poisoned = jnp.zeros((B,), bool)
-        invalid_levels = jnp.zeros((B,), jnp.int32)
 
+def _gram_precompute(q: Quadratic, gram_hvp: bool | None, mesh):
+    """The optional true-Gram precompute behind ``gram_hvp`` (None = auto:
+    on when d ≤ min(n, 1024)). Returns the (d, d) / (B, d, d) Gram, or
+    None for the matrix-free hvp."""
     if gram_hvp is None:
         gram_hvp = q.d <= min(q.n, 1024)
-    if gram_hvp:
-        w = q.row_weights
-        if w is not None:
-            # AᵀWA once, via the chunked streaming Gram (or its sharded
-            # psum variant) — per-problem even with shared A, and never
-            # through an (n, d) weighted copy of A
-            if mesh is None:
-                G_full = weighted_gram(q.A, w)               # (B, d, d)
-            else:
-                from .distributed import shard_weighted_gram
+    if not gram_hvp:
+        return None
+    w = q.row_weights
+    if w is not None:
+        # AᵀWA once, via the chunked streaming Gram (or its sharded psum
+        # variant) — per-problem even with shared A, and never through an
+        # (n, d) weighted copy of A
+        if mesh is None:
+            return weighted_gram(q.A, w)                 # (B, d, d)
+        from .distributed import shard_weighted_gram
 
-                G_full = shard_weighted_gram(q, mesh)
-            hvp = lambda v: jnp.einsum("bde,be->bd", G_full, v) + (
-                (q.nu**2)[:, None] * q.lam_diag * v)
-        elif q.shared_A:
-            G_full = q.A.T @ q.A                             # (d, d) once
-            hvp = lambda v: v @ G_full + (q.nu**2)[:, None] * q.lam_diag * v
-        else:
-            G_full = jnp.einsum("bnd,bne->bde", q.A, q.A)    # (B, d, d) once
-            hvp = lambda v: jnp.einsum("bde,be->bd", G_full, v) + (
-                (q.nu**2)[:, None] * q.lam_diag * v)
+        return shard_weighted_gram(q, mesh)
+    if q.shared_A:
+        return q.A.T @ q.A                               # (d, d) once
+    return jnp.einsum("bnd,bne->bde", q.A, q.A)          # (B, d, d) once
+
+
+def _hvp_fn(q: Quadratic, G_full):
+    """H·v under the precomputed Gram (or q's matrix-free hvp)."""
+    if G_full is None:
+        return q.hvp
+    if G_full.ndim == 2:
+        return lambda v: v @ G_full + (q.nu**2)[:, None] * q.lam_diag * v
+    return lambda v: jnp.einsum("bde,be->bd", G_full, v) + (
+        (q.nu**2)[:, None] * q.lam_diag * v)
+
+
+def _init_padded_state(q: Quadratic, pre: PaddedPrecompute,
+                       init_level, tol) -> PaddedState:
+    B, d = q.batch, q.d
+    fdtype = _field_dtype(q)
+    top = pre.remap.shape[0] - 1
+    grad_f = lambda x: _hvp_fn(q, pre.G_full)(x) - q.b
+
+    x0 = jnp.zeros((B, d), fdtype)
+    if init_level is None:
+        lvl0 = jnp.zeros((B,), jnp.int32)
     else:
-        hvp = q.hvp
+        lvl0 = jnp.clip(init_level.astype(jnp.int32), 0, top)
+    pinv0 = _gather_pinv(pre.pinvs, lvl0)
+    g0 = grad_f(x0)                                  # = −b
+    rt0 = _apply_pinv(pinv0, -g0)
+    dt0 = 0.5 * _pdot(-g0, rt0)
+    conv0 = dt0 <= tol * dt0                         # trivially-solved (b=0)
+
+    return PaddedState(
+        x=x0, x_prev=x0, r=-g0, rt=rt0, p=rt0, grad=g0,
+        level=lvl0, t_rel=jnp.zeros((B,), jnp.int32),
+        dtilde_I=dt0, dtilde=dt0, dtilde0=dt0,
+        x_best=x0, dt_best=dt0, pinv=pinv0,
+        iters=jnp.zeros((B,), jnp.int32),
+        doublings=jnp.zeros((B,), jnp.int32),
+        done=conv0 | ~pre.any_valid,     # no valid level ⇒ frozen at x₀
+        converged=conv0,
+        nan_hit=jnp.zeros((B,), bool),
+        trips=jnp.asarray(0, jnp.int32),
+    )
+
+
+def _run_segment(q: Quadratic, pre: PaddedPrecompute, st: PaddedState,
+                 trip_limit, *, method: str, max_iters: int, rho: float,
+                 tol, guards: bool) -> PaddedState:
+    """The adaptive while_loop, bounded by ``trip_limit`` (a TRACED trip
+    count: the segmented driver re-dispatches this same executable with the
+    limit advanced by k per segment; the monolithic solve pins it at the
+    trip cap). The body is identical either way, so segment boundaries
+    never change the numbers — a segmented solve is bitwise the monolithic
+    one."""
+    hvp = _hvp_fn(q, pre.G_full)
     grad_f = lambda x: hvp(x) - q.b
+    fdtype = _field_dtype(q)
+    top = pre.remap.shape[0] - 1
 
     phi, alpha = rho_to_rate(method, rho)
     c = c_alpha_rho(alpha, rho)
@@ -354,37 +372,9 @@ def padded_adaptive_solve_batched(
     _sq = math.sqrt(1.0 - rho)
     mu_p = 2.0 * (1.0 - rho) / (1.0 + _sq)
     beta_p = (1.0 - _sq) / (1.0 + _sq)
-    fdtype = sample_dtype
-
-    x0 = jnp.zeros((B, d), fdtype)
-    if init_level is None:
-        lvl0 = jnp.zeros((B,), jnp.int32)
-    else:
-        lvl0 = jnp.clip(init_level.astype(jnp.int32), 0, top)
-    pinv0 = _gather_pinv(pinvs, lvl0)
-    g0 = grad_f(x0)                                  # = −b
-    rt0 = _apply_pinv(pinv0, -g0)
-    dt0 = 0.5 * _pdot(-g0, rt0)
-    conv0 = dt0 <= tol * dt0                         # trivially-solved (b=0)
-
-    init = PaddedState(
-        x=x0, x_prev=x0, r=-g0, rt=rt0, p=rt0, grad=g0,
-        level=lvl0, t_rel=jnp.zeros((B,), jnp.int32),
-        dtilde_I=dt0, dtilde=dt0, dtilde0=dt0,
-        x_best=x0, dt_best=dt0, pinv=pinv0,
-        iters=jnp.zeros((B,), jnp.int32),
-        doublings=jnp.zeros((B,), jnp.int32),
-        done=conv0 | ~any_valid,         # no valid level ⇒ frozen at x₀
-        converged=conv0,
-        nan_hit=jnp.zeros((B,), bool),
-        trips=jnp.asarray(0, jnp.int32),
-    )
-    # Rejects per problem are bounded by the ladder length; the trip cap is
-    # a safety net on top of the per-problem iteration cap.
-    trip_cap = max_iters + top + 4
 
     def cond(st: PaddedState):
-        return (~jnp.all(st.done)) & (st.trips < trip_cap)
+        return (~jnp.all(st.done)) & (st.trips < trip_limit)
 
     def body(st: PaddedState) -> PaddedState:
         active = ~st.done
@@ -481,7 +471,7 @@ def padded_adaptive_solve_batched(
             # change get the identical factor back); the restart residual
             # is the stored gradient (x did not move on a reject), so no
             # extra H·v is needed.
-            pinv_new = _gather_pinv(pinvs, s.level)
+            pinv_new = _gather_pinv(pre.pinvs, s.level)
             res = -s.grad                              # b − Hx at current x
             rt_re = _apply_pinv(pinv_new, res)
             dt_re = 0.5 * _pdot(res, rt_re)
@@ -505,28 +495,285 @@ def padded_adaptive_solve_batched(
 
         return jax.lax.cond(jnp.any(reject), do_refactor, lambda s: s, st1)
 
-    st = jax.lax.while_loop(cond, body, init)
-    if guards:
-        # report the level actually used (the remapped gather target), so
-        # m_final and warm-start tokens reflect the sketch that produced
-        # the certificate rather than a skipped invalid level
-        eff_level = jnp.maximum(
-            remap[st.level, jnp.arange(B)], 0).astype(jnp.int32)
-    else:
-        eff_level = st.level
+    return jax.lax.while_loop(cond, body, st)
+
+
+def _finalize(pre: PaddedPrecompute, st: PaddedState, *, m_max: int):
+    """Status lattice + certificates from the terminal (or paused) state."""
+    ladder_m = jnp.asarray(doubling_ladder(m_max), jnp.int32)
+    B = pre.remap.shape[1]
+    # report the level actually used (the remapped gather target), so
+    # m_final and warm-start tokens reflect the sketch that produced the
+    # certificate rather than a skipped invalid level
+    eff_level = jnp.maximum(
+        pre.remap[st.level, jnp.arange(B)], 0).astype(jnp.int32)
     status = jnp.where(
         st.converged, jnp.int32(SolveStatus.OK),
-        jnp.where(st.nan_hit | gram_poisoned,
+        jnp.where(st.nan_hit | pre.gram_poisoned,
                   jnp.int32(SolveStatus.NAN_POISONED),
-                  jnp.where(~any_valid, jnp.int32(SolveStatus.LEVEL_INVALID),
+                  jnp.where(~pre.any_valid,
+                            jnp.int32(SolveStatus.LEVEL_INVALID),
                             jnp.int32(SolveStatus.STALLED))))
     stats = {"m_final": ladder_m[eff_level], "iters": st.iters,
              "doublings": st.doublings, "dtilde": st.dt_best,
              "level": eff_level, "trips": st.trips,
              "status": status, "converged": st.converged,
              "stalled": status == jnp.int32(SolveStatus.STALLED),
-             "invalid_levels": invalid_levels}
+             "invalid_levels": pre.invalid_levels}
     return st.x_best, stats
+
+
+# ---------------------------------------------------------------------------
+# Public jitted entry points
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit,
+         static_argnames=("m_max", "sketch", "gram_hvp", "mesh", "guards",
+                          "compute_dtype"))
+def prepare_padded_solve(
+    q: Quadratic,
+    keys: jax.Array,
+    *,
+    m_max: int,
+    sketch: str = "gaussian",
+    gram_hvp: bool | None = None,
+    mesh=None,
+    init_level: jax.Array | None = None,
+    guards: bool = True,
+    compute_dtype: str = "fp32",
+    tol: float = 1e-10,
+    grams: jnp.ndarray | None = None,
+):
+    """Everything before the loop, as one jitted dispatch: the one-touch
+    ladder pass (or ``grams=`` to supply precomputed/recombined level Grams
+    — the elastic-recovery path feeds a ``distributed.ShardLadderCache``
+    total here), the batched factorizations + guard tables, the optional
+    true-Gram precompute and the initial state. Returns
+    ``(PaddedPrecompute, PaddedState)`` — both plain-array pytrees; the
+    state is what checkpoints persist, the precompute is deterministic
+    given (q, keys) and is recomputed on resume."""
+    if not q.batched:
+        raise ValueError("prepare_padded_solve expects a batched Quadratic")
+    B = q.batch
+    if _is_single_key(keys):
+        keys = jax.random.split(keys, B)
+    compute_dtype = canonical_compute_dtype(compute_dtype)
+    if grams is None:
+        grams = _compute_ladder_grams(q, keys, m_max=m_max, sketch=sketch,
+                                      mesh=mesh, compute_dtype=compute_dtype)
+    pinvs, remap, any_valid, gram_poisoned, invalid_levels = _ladder_tables(
+        q, grams, guards=guards)
+    pre = PaddedPrecompute(
+        pinvs=pinvs, remap=remap, any_valid=any_valid,
+        gram_poisoned=gram_poisoned, invalid_levels=invalid_levels,
+        G_full=_gram_precompute(q, gram_hvp, mesh))
+    return pre, _init_padded_state(q, pre, init_level, tol)
+
+
+@partial(jax.jit, static_argnames=("method", "max_iters", "rho", "guards"))
+def padded_solve_segment(
+    q: Quadratic,
+    pre: PaddedPrecompute,
+    st: PaddedState,
+    trip_limit,
+    *,
+    method: str = "ihs",
+    max_iters: int = 100,
+    rho: float = 0.5,
+    tol: float = 1e-10,
+    guards: bool = True,
+) -> PaddedState:
+    """Advance the adaptive loop to ``trip_limit`` total trips (a traced
+    int32 scalar — ONE compiled executable serves every segment size and
+    every resume point). State round-trips losslessly, so dispatching
+    k-trip segments back-to-back is bitwise the monolithic while_loop."""
+    if method not in PADDED_METHODS:
+        raise ValueError(
+            f"padded engine supports {PADDED_METHODS}, got {method!r}")
+    return _run_segment(q, pre, st, jnp.asarray(trip_limit, jnp.int32),
+                        method=method, max_iters=max_iters, rho=rho,
+                        tol=tol, guards=guards)
+
+
+@partial(jax.jit, static_argnames=("m_max",))
+def finalize_padded_solve(pre: PaddedPrecompute, st: PaddedState, *,
+                          m_max: int):
+    """(x_best, stats) from a terminal — or deadline-paused — state; the
+    certificates (δ̃, m_final, level) describe the best finite iterate
+    actually reached, which is what an honest DEADLINE_EXCEEDED answer
+    returns."""
+    return _finalize(pre, st, m_max=m_max)
+
+
+@partial(jax.jit, static_argnames=("guards",))
+def reprecondition_padded(
+    q: Quadratic,
+    pre: PaddedPrecompute,
+    st: PaddedState,
+    grams: jnp.ndarray,
+    *,
+    guards: bool = True,
+):
+    """Rebuild the ladder from replacement level Grams MID-SOLVE and
+    re-anchor every unfinished problem at its current iterate — the elastic
+    shard-recovery step (DESIGN.md §11).
+
+    After a data shard drops, the surviving per-shard level-Gram
+    contributions recombine by one subtraction (``ShardLadderCache``);
+    this refactors the recombined ladder (batched Cholesky + guard tables,
+    exactly the prepare-time path) and then mirrors the in-loop doubling
+    restart for every not-done problem: regather H_S⁻¹ at its current
+    level, recompute r/r̃/p and the δ̃ anchors from the stored gradient,
+    and restart best-iterate tracking in the new metric at the current x.
+    The true Hessian (``pre.G_full`` / q) is untouched — the solve still
+    targets the ORIGINAL problem exactly; only the preconditioner weakens —
+    so a subsequent convergence is an honest ``OK`` with a truthful δ̃.
+    Problems already done keep their iterates and verdicts bit-for-bit."""
+    pinvs, remap, any_valid2, gram_poisoned2, invalid2 = _ladder_tables(
+        q, grams, guards=guards)
+    # validity composes: a problem frozen by the OLD ladder never iterated
+    # (and must stay LEVEL_INVALID); one with no valid level in the NEW
+    # ladder freezes now at its best finite iterate
+    any_valid = pre.any_valid & any_valid2
+    pre2 = PaddedPrecompute(
+        pinvs=pinvs, remap=remap, any_valid=any_valid,
+        gram_poisoned=pre.gram_poisoned | gram_poisoned2,
+        invalid_levels=jnp.maximum(pre.invalid_levels, invalid2),
+        G_full=pre.G_full)
+    active = ~st.done
+    pinv_new = _gather_pinv(pinvs, st.level)
+    res = -st.grad                                 # b − Hx at the current x
+    rt = _apply_pinv(pinv_new, res)
+    dt = 0.5 * _pdot(res, rt)
+    dt0 = 0.5 * _pdot(q.b, _apply_pinv(pinv_new, q.b))
+    aB = active[:, None]
+    st2 = st._replace(
+        pinv=jnp.where(active[:, None, None], pinv_new, st.pinv),
+        r=jnp.where(aB, res, st.r),
+        rt=jnp.where(aB, rt, st.rt),
+        p=jnp.where(aB, rt, st.p),
+        x_prev=jnp.where(aB, st.x, st.x_prev),     # momentum restart
+        t_rel=jnp.where(active, 0, st.t_rel),
+        x_best=jnp.where(aB, st.x, st.x_best),
+        dt_best=jnp.where(active, dt, st.dt_best),
+        dtilde_I=jnp.where(active, dt, st.dtilde_I),
+        dtilde=jnp.where(active, dt, st.dtilde),
+        dtilde0=jnp.where(active, dt0, st.dtilde0),
+        done=st.done | (active & ~any_valid),
+    )
+    return pre2, st2
+
+
+@partial(jax.jit,
+         static_argnames=("m_max", "method", "sketch", "max_iters", "rho",
+                          "gram_hvp", "mesh", "guards", "compute_dtype"))
+def padded_adaptive_solve_batched(
+    q: Quadratic,
+    keys: jax.Array,
+    *,
+    m_max: int,
+    method: str = "ihs",
+    sketch: str = "gaussian",
+    max_iters: int = 100,
+    rho: float = 0.5,
+    tol: float = 1e-10,
+    gram_hvp: bool | None = None,
+    mesh=None,
+    init_level: jax.Array | None = None,
+    guards: bool = True,
+    compute_dtype: str = "fp32",
+):
+    """One-executable adaptive solve of a batch of B problems.
+
+    ``q`` must be batched (per-problem A (B,n,d) or shared A (n,d));
+    ``keys`` is a single PRNG key (split internally) or a (B,)-batch of keys
+    — problem b's sketch depends only on keys[b]. Returns (x, stats) with
+    x (B, d) and per-problem stats vectors (m_final, iters, doublings, δ̃,
+    and the final ladder ``level`` index — what a warm restart passes back).
+
+    ``q.row_weights`` (B, n) solves the *weighted* problem
+    H = AᵀWA + ν²Λ: the providers sketch W^{1/2}A inside their one
+    streaming pass (scaling generated S tiles / sign streams by w^{1/2} —
+    never an (n, d) weighted copy of A, DESIGN.md §8) and the hvp applies
+    the weight on the (B, n) intermediate. This is the GLM Newton
+    subproblem layout (``core.newton``).
+
+    ``init_level`` (B,) int32 starts each problem's doubling ladder at the
+    given level instead of 0 — the warm-started m_t of the adaptive Newton
+    sketch (arXiv:2105.07291): a Newton driver passes the previous outer
+    step's final level so the inner solve does not re-climb the ladder it
+    already discovered. Values are clipped to the ladder; a traced array,
+    so warm restarts reuse the same executable.
+
+    ``gram_hvp`` (default: auto, on when d ≤ min(n, 1024)): precompute the
+    per-problem Gram AᵀA once so every in-loop H·v is a (B,d,d)·(B,d)
+    matvec instead of two memory-bound (B,n,d) GEMVs — the right trade in
+    the serving regime (n ≫ d, many iterations), and no more than the
+    sketch pass we already pay; large-d problems keep the matrix-free O(nd)
+    hvp of the paper.
+
+    ``guards`` (static, default on): the failure-isolation layer
+    (DESIGN.md §9). Post-Cholesky finiteness checks mark individual ladder
+    levels invalid and the controller *skips* them (``_valid_level_remap``)
+    instead of letting one NaN factor poison the solve; iterate proposals
+    are finiteness-checked so a non-finite step is rejected (doubling below
+    the cap, circuit-breaking at it) and the best FINITE iterate is always
+    what is returned; every problem exits with a truthful per-problem
+    ``status`` ∈ {OK, STALLED, LEVEL_INVALID, NAN_POISONED} plus explicit
+    ``converged``/``stalled`` flags. ``guards=False`` restores the
+    pre-guard hot path (no level remap, δ̃-only finiteness) for overhead
+    benchmarking (``benchmarks/bench_guard.py``); statuses are still
+    reported but ladder validity is assumed.
+
+    ``compute_dtype`` (static, ``kernels.precision``): precision of the
+    one-touch sketch pass only — ``"bf16"`` streams/contracts sketch
+    operands in bfloat16 with fp32 accumulation, ``"int8"`` additionally
+    quantizes A per row and streams the codes. The (L, B, d, d) ladder
+    Grams, their Cholesky factors, every in-loop quantity and the δ̃
+    certificates are fp32 in all modes, so guards and the certificate
+    contract are unchanged; the sketch is merely a (slightly) noisier
+    spectral approximation, which the doubling controller absorbs
+    (DESIGN.md §10). The fp32 default is bit-identical to the
+    pre-dtype-axis engine.
+
+    ``mesh`` (static): a ``jax.sharding.Mesh`` whose data axes row-shard A
+    (``distributed.shard_quadratic`` places it). The ONLY thing that
+    changes is the precompute: the one-touch ladder pass runs per shard
+    with independent per-shard randomness and combines the (L, B, d, d)
+    level Grams in ONE psum (``distributed.shard_level_grams``,
+    DESIGN.md §5); the while_loop is byte-identical, operating on the
+    replicated d-sized state. With ``gram_hvp`` (the serving default) the
+    AᵀA precompute is the only other data-axis collective and the loop
+    itself is collective-free; matrix-free mode keeps one psum(B·d) per
+    hvp, inserted by GSPMD.
+
+    This function is ``prepare_padded_solve`` → ``padded_solve_segment``
+    (with the trip limit pinned at the trip cap) → ``finalize_padded_solve``
+    composed in one jit — bit-identical to dispatching the segments
+    separately (``core.robust.segmented_padded_solve_batched``, the
+    preemptible/deadline-aware host driver).
+    """
+    if not q.batched:
+        raise ValueError("use padded_adaptive_solve for single problems")
+    if method not in PADDED_METHODS:
+        raise ValueError(f"padded engine supports {PADDED_METHODS}, got {method!r}")
+    B = q.batch
+    if _is_single_key(keys):
+        keys = jax.random.split(keys, B)
+    compute_dtype = canonical_compute_dtype(compute_dtype)
+    grams = _compute_ladder_grams(q, keys, m_max=m_max, sketch=sketch,
+                                  mesh=mesh, compute_dtype=compute_dtype)
+    pinvs, remap, any_valid, gram_poisoned, invalid_levels = _ladder_tables(
+        q, grams, guards=guards)
+    pre = PaddedPrecompute(
+        pinvs=pinvs, remap=remap, any_valid=any_valid,
+        gram_poisoned=gram_poisoned, invalid_levels=invalid_levels,
+        G_full=_gram_precompute(q, gram_hvp, mesh))
+    init = _init_padded_state(q, pre, init_level, tol)
+    st = _run_segment(q, pre, init, padded_trip_cap(m_max, max_iters),
+                      method=method, max_iters=max_iters, rho=rho, tol=tol,
+                      guards=guards)
+    return _finalize(pre, st, m_max=m_max)
 
 
 def padded_adaptive_solve(

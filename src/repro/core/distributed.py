@@ -203,6 +203,153 @@ def shard_level_grams(
     return fn(q.A, q.b, q.nu, q.lam_diag, keys)
 
 
+def shard_level_grams_per_shard(
+    provider: LevelGramProvider,
+    keys: jax.Array,
+    q: Quadratic,
+    ladder: tuple[int, ...],
+    mesh: Mesh,
+    compute_dtype: str | None = None,
+) -> jnp.ndarray:
+    """(K, L, B, d, d) PER-SHARD ladder-level Gram contributions — the same
+    one-touch pass as ``shard_level_grams`` but all-gathered instead of
+    psummed, so the caller keeps each shard's partial sum separately
+    (leading axis ordered by ``axis_index``). This is the elastic-recovery
+    precompute (DESIGN.md §11): the total is the exact psum result
+    (``(SA)ᵀ(SA) = Σ_k (S_k A_k)ᵀ(S_k A_k)``, no cross terms), and losing
+    shard k mid-solve recombines by ONE subtraction of a cached (L, B, d, d)
+    stack — no surviving shard re-reads a byte of its data. Memory is K×
+    the psum path's Gram stack, host-held by ``ShardLadderCache``."""
+    if not q.batched:
+        raise ValueError("shard_level_grams_per_shard expects a batched "
+                         "Quadratic")
+    da = data_axes(mesh)
+    _check_divisible(q.n, mesh)
+    m_max = ladder[-1]
+    weighted = q.row_weights is not None
+
+    def local_pass(A_blk, w_blk, b, nu, lam, ks):
+        idx = jax.lax.axis_index(da)
+        k_loc = jax.vmap(lambda k: jax.random.fold_in(k, idx))(ks)
+        q_loc = Quadratic(A=A_blk, b=b, nu=nu, lam_diag=lam, batched=True,
+                          row_weights=w_blk)
+        sample_dtype = (A_blk.dtype if A_blk.dtype != jnp.int8
+                        else jnp.float32)
+        data = provider.sample(k_loc, m_max, A_blk.shape[-2], sample_dtype)
+        g = provider.level_grams(data, q_loc, ladder,
+                                 compute_dtype=compute_dtype)
+        return g[None]                     # (1, L, B, d, d) local slice
+
+    out_specs = P(da, None, None, None, None)
+    if weighted:
+        fn = _smap(
+            local_pass, mesh,
+            in_specs=(_a_row_spec(q, mesh), _w_row_spec(q, mesh),
+                      P(), P(), P(), P()),
+            out_specs=out_specs,
+        )
+        return fn(q.A, q.row_weights, q.b, q.nu, q.lam_diag, keys)
+    fn = _smap(
+        lambda A_blk, b, nu, lam, ks: local_pass(A_blk, None, b, nu, lam, ks),
+        mesh,
+        in_specs=(_a_row_spec(q, mesh), P(), P(), P(), P()),
+        out_specs=out_specs,
+    )
+    return fn(q.A, q.b, q.nu, q.lam_diag, keys)
+
+
+class ShardLadderCache:
+    """Cached per-shard ladder-level Gram contributions + their running
+    total — the state behind elastic mid-solve shard recovery.
+
+    Built once from the SAME one-touch pass the engine would run
+    (``from_mesh``: the sharded pass, all-gathered per shard;
+    ``from_emulation``: the single-device ``BlockEmulationProvider``
+    dataflow — identical per-shard ``fold_in(key, k)`` randomness, so the
+    cache total matches the provider's summed Grams). ``total()`` feeds
+    ``prepare_padded_solve(grams=…)`` / the segmented driver's ``grams=``;
+    when shard k dies mid-solve, ``drop(k)`` updates the total by ONE
+    (L, B, d, d) subtraction — surviving shards' data is never touched
+    again — and the new total goes to ``reprecondition_padded`` via the
+    driver's ``on_segment`` hook (``ft.faults.ShardLossInjector`` wires
+    exactly that for the chaos suite).
+
+    The post-drop total is the exact concatenated-block sketch Gram of the
+    surviving K−1 shards: still a valid (merely weaker) preconditioner of
+    the FULL problem, whose Hessian never referenced the cache at all — so
+    the resumed solve's certificate stays truthful."""
+
+    def __init__(self, shard_grams: jnp.ndarray):
+        if shard_grams.ndim != 5:
+            raise ValueError(
+                f"expected (K, L, B, d, d) shard Grams, got shape "
+                f"{tuple(shard_grams.shape)}")
+        self.shard_grams = shard_grams
+        self.n_shards = int(shard_grams.shape[0])
+        self.alive = set(range(self.n_shards))
+        # sequential accumulation in shard order — the same fp32 reduction
+        # order as BlockEmulationProvider's summed pass, so the emulated
+        # cache total is bit-identical to the provider's Grams
+        total = shard_grams[0]
+        for k in range(1, self.n_shards):
+            total = total + shard_grams[k]
+        self._total = total
+
+    @classmethod
+    def from_mesh(cls, provider, keys, q: Quadratic, ladder, mesh: Mesh,
+                  compute_dtype: str | None = None) -> "ShardLadderCache":
+        from .level_grams import get_provider
+
+        grams = shard_level_grams_per_shard(
+            get_provider(provider), keys, q, ladder, mesh,
+            compute_dtype=compute_dtype)
+        return cls(grams)
+
+    @classmethod
+    def from_emulation(cls, inner, keys, q: Quadratic, ladder,
+                       n_shards: int,
+                       compute_dtype: str | None = None) -> "ShardLadderCache":
+        """Single-device build mirroring ``BlockEmulationProvider``: shard k
+        sketches rows [k·n/K, (k+1)·n/K) under ``fold_in(keys, k)``."""
+        from .level_grams import get_provider
+
+        inner = get_provider(inner)
+        if q.n % n_shards:
+            raise ValueError(
+                f"n={q.n} not divisible by {n_shards} emulated shards")
+        n_loc = q.n // n_shards
+        sample_dtype = q.A.dtype if q.A.dtype != jnp.int8 else jnp.float32
+        w = q.row_weights
+        per_shard = []
+        for k in range(n_shards):
+            keys_k = jax.vmap(lambda kb: jax.random.fold_in(kb, k))(keys)
+            data = inner.sample(keys_k, ladder[-1], n_loc, sample_dtype)
+            A_k = q.A[..., k * n_loc:(k + 1) * n_loc, :]
+            w_k = None if w is None else w[:, k * n_loc:(k + 1) * n_loc]
+            q_k = Quadratic(A=A_k, b=q.b, nu=q.nu, lam_diag=q.lam_diag,
+                            batched=q.batched, row_weights=w_k)
+            per_shard.append(inner.level_grams(
+                data, q_k, ladder, compute_dtype=compute_dtype))
+        return cls(jnp.stack(per_shard, axis=0))
+
+    def total(self) -> jnp.ndarray:
+        """(L, B, d, d) level Grams summed over the shards still alive."""
+        return self._total
+
+    def drop(self, k: int) -> jnp.ndarray:
+        """Shard k died: remove its cached contribution from the total by
+        one subtraction (no re-touch of any surviving shard's rows) and
+        return the recombined (L, B, d, d) Grams."""
+        if k not in self.alive:
+            raise ValueError(
+                f"shard {k} is not alive (alive: {sorted(self.alive)})")
+        if len(self.alive) <= 1:
+            raise ValueError("cannot drop the last remaining shard")
+        self.alive.discard(k)
+        self._total = self._total - self.shard_grams[k]
+        return self._total
+
+
 def shard_weighted_gram(q: Quadratic, mesh: Mesh) -> jnp.ndarray:
     """(B, d, d) AᵀWA for a row-sharded weighted batch: each shard runs the
     chunked streaming Gram (``quadratic.weighted_gram``) on its local row

@@ -33,6 +33,7 @@ compiled executables (the engine sees ``init_level`` as a traced array).
 
 from __future__ import annotations
 
+import time
 from functools import partial
 
 import jax
@@ -101,6 +102,7 @@ def adaptive_newton_solve_batched(
     ls_c1: float = 1e-4,
     mesh=None,
     compute_dtype: str = "fp32",
+    deadline_s: float | None = None,
 ):
     """Solve a batch of B regularized GLM problems by adaptive sketched
     Newton. A (B, n, d) per-problem or (n, d) shared; y (B, n); ν scalar or
@@ -113,6 +115,12 @@ def adaptive_newton_solve_batched(
     * ``m_final``       (B,)  last inner sketch size,
     * ``level``         (B,)  final ladder level (warm-start token),
     * ``inner_iters``   (B,)  total inner iterations across all steps.
+
+    ``deadline_s``: wall-clock budget over the whole Newton solve, checked
+    between OUTER steps (the natural segment boundary of the host-driven
+    loop — the first step always runs). Problems still unfinished when the
+    budget runs out keep their current iterate and its honest decrement
+    and report ``DEADLINE_EXCEEDED`` (DESIGN.md §11).
     """
     y = jnp.asarray(y)
     if keys is None:
@@ -133,12 +141,13 @@ def adaptive_newton_solve_batched(
 
     return _newton_loop(family, A, y, nu, lam_diag, inner_solve,
                         newton_iters=newton_iters, tol=tol,
-                        ls_backtracks=ls_backtracks, c1=ls_c1)
+                        ls_backtracks=ls_backtracks, c1=ls_c1,
+                        deadline_s=deadline_s)
 
 
 def _newton_loop(family, A, y, nu, lam_diag, inner_solve, *,
                  newton_iters: int, tol: float, ls_backtracks: int,
-                 c1: float = 1e-4):
+                 c1: float = 1e-4, deadline_s: float | None = None):
     """The shared damped-Newton outer loop (driver AND references — one
     copy of the stopping/line-search/freeze logic, so the baselines always
     validate the exact loop the driver runs). ``inner_solve(t, q_t, level)``
@@ -159,8 +168,16 @@ def _newton_loop(family, A, y, nu, lam_diag, inner_solve, *,
     inner_total = jnp.zeros((B,), jnp.int32)
     inner_status = jnp.zeros((B,), jnp.int32)   # last active inner verdict
     m_traj = []
+    expired = jnp.zeros((B,), bool)
+    t_start = time.perf_counter()
 
     for t in range(newton_iters):
+        if (deadline_s is not None and t > 0
+                and time.perf_counter() - t_start >= deadline_s):
+            # budget spent between outer steps: unfinished problems keep
+            # their current iterate + honest decrement, verdict below
+            expired = ~done
+            break
         g, w = _grad_and_weights(obj, A, y, nu_b, lam_b, x)
         q_t = Quadratic(A=A, b=-g, nu=nu_b, lam_diag=lam_b, batched=True,
                         row_weights=w)
@@ -199,7 +216,9 @@ def _newton_loop(family, A, y, nu, lam_diag, inner_solve, *,
         inner_status == jnp.int32(SolveStatus.NAN_POISONED))
     status = jnp.where(
         converged, jnp.int32(SolveStatus.OK),
-        jnp.where(engine_fail, inner_status, jnp.int32(SolveStatus.STALLED)))
+        jnp.where(expired, jnp.int32(SolveStatus.DEADLINE_EXCEEDED),
+                  jnp.where(engine_fail, inner_status,
+                            jnp.int32(SolveStatus.STALLED))))
     stats = {
         "newton_iters": iters,
         "decrement": dec,

@@ -1,4 +1,5 @@
-"""Retry / fallback driver over the padded adaptive engine (DESIGN.md §9).
+"""Retry / fallback / preemption driver over the padded adaptive engine
+(DESIGN.md §9, §11).
 
 ``padded_adaptive_solve_batched`` with ``guards=True`` terminates every
 problem with a truthful per-problem verdict — but the engine itself never
@@ -27,19 +28,84 @@ layer that turns those engine failures into finished answers:
    a NaN row) keeps the engine's best finite iterate and its honest
    engine verdict.
 
+3. **Segmented execution** (``segmented_padded_solve_batched``): the same
+   solve run as bounded segments of k loop trips per dispatch, with the
+   host checking wall-clock, preemption signals and shard health BETWEEN
+   segments. Because the segment executable is the monolithic while_loop
+   body under a traced trip limit and the full ``PaddedState`` round-trips
+   on device, a segmented solve is bitwise the monolithic one — what makes
+   the three recoveries honest:
+
+   * **deadlines** — ``deadline_s=`` stops dispatching once the budget is
+     spent and finalizes the PAUSED state: unfinished problems return
+     their best finite iterate, its real δ̃ certificate, and an honest
+     ``DEADLINE_EXCEEDED``; problems that finished in time keep their
+     verdicts untouched.
+   * **preemption/crash** — ``preempt=`` (an ``ft.PreemptionHandler``) is
+     polled between segments; on SIGTERM the state is checkpointed through
+     ``ft.checkpoint.CheckpointManager`` (``checkpoint=``, atomic
+     COMMITTED-marker layout) and ``PreemptedError`` is raised. A
+     restarted process (``resume=True``, the default) restores the last
+     committed segment and continues — numerics match an uninterrupted
+     run because the state IS the progress (the precompute is
+     deterministic given (q, keys) and is recomputed, not persisted).
+     Periodic saves (``checkpoint_every``) bound the kill -9 replay to
+     ``checkpoint_every·segment_trips`` trips.
+   * **elastic shard loss** — ``on_segment(seg, st)`` may return
+     replacement ladder level Grams (recombined from surviving shards by
+     ``distributed.ShardLadderCache`` — one subtraction, no re-touch of
+     surviving data); the driver then ``reprecondition``s mid-solve and
+     the solve finishes ``OK`` with a truthful certificate, because only
+     the preconditioner weakened — the true Hessian never referenced the
+     lost shard (``gram_hvp`` serving default).
+
+``robust_padded_solve_batched`` composes 1–3: any of the segmentation
+knobs routes the first attempt (and deadline-bounded retries) through the
+segmented driver; with none set, the monolithic single-dispatch path is
+used unchanged (bit-compat with PR 6).
+
 The invariant downstream layers rely on: **the returned x is always
 finite, and the status tells the truth about where it came from.**
 """
 
 from __future__ import annotations
 
+import os
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .adaptive_padded import _is_single_key, padded_adaptive_solve_batched
+from .adaptive_padded import (
+    PaddedState,
+    _is_single_key,
+    doubling_ladder,
+    finalize_padded_solve,
+    padded_adaptive_solve_batched,
+    padded_solve_segment,
+    padded_trip_cap,
+    prepare_padded_solve,
+    reprecondition_padded,
+)
 from .quadratic import Quadratic, direct_solve
 from .status import CONVERGED_STATUSES, ENGINE_FAILURES, SolveStatus
+
+DEFAULT_SEGMENT_TRIPS = 32
+
+
+class PreemptedError(RuntimeError):
+    """A solve was preempted (SIGTERM) between segments. The state was
+    checkpointed (when a checkpoint manager was attached) before raising,
+    so a restarted process resumes from ``segment`` exactly."""
+
+    def __init__(self, segment: int, checkpoint_dir=None):
+        self.segment = segment
+        self.checkpoint_dir = checkpoint_dir
+        where = f" (checkpointed to {checkpoint_dir})" if checkpoint_dir else ""
+        super().__init__(
+            f"solve preempted at segment {segment}{where}; "
+            f"re-run with resume=True to continue")
 
 
 def _gather_quadratic(q: Quadratic, idx: jax.Array,
@@ -59,6 +125,176 @@ def _gather_quadratic(q: Quadratic, idx: jax.Array,
     )
 
 
+def _as_checkpoint_manager(checkpoint):
+    """Accept a ready CheckpointManager (duck-typed) or a directory path.
+    The ft import stays function-local: core must not import ft at module
+    level (ft layers on top of core)."""
+    if checkpoint is None or hasattr(checkpoint, "latest_step"):
+        return checkpoint
+    if isinstance(checkpoint, (str, os.PathLike)):
+        from repro.ft.checkpoint import CheckpointManager
+
+        return CheckpointManager(checkpoint)
+    raise TypeError(
+        f"checkpoint must be a CheckpointManager or a path, got "
+        f"{type(checkpoint).__name__}")
+
+
+def _solve_fingerprint(q: Quadratic, *, m_max, method, sketch,
+                       max_iters) -> str:
+    """Guards a resume against a checkpoint from a DIFFERENT solve: the
+    restored state only means something under the same problem shapes and
+    the same (deterministically recomputed) precompute."""
+    sk = getattr(sketch, "name", None) or str(sketch)
+    return (f"{q.batch}x{q.n}x{q.d}:m{m_max}:{method}:{sk}:mi{max_iters}")
+
+
+def segmented_padded_solve_batched(
+    q: Quadratic,
+    keys: jax.Array,
+    *,
+    m_max: int,
+    method: str = "pcg",
+    sketch: str = "gaussian",
+    max_iters: int = 100,
+    rho: float = 0.5,
+    tol: float = 1e-10,
+    gram_hvp: bool | None = None,
+    mesh=None,
+    init_level: jax.Array | None = None,
+    guards: bool = True,
+    compute_dtype: str = "fp32",
+    segment_trips: int = DEFAULT_SEGMENT_TRIPS,
+    deadline_s: float | None = None,
+    checkpoint=None,
+    checkpoint_every: int = 1,
+    resume: bool = True,
+    preempt=None,
+    on_segment=None,
+    grams: jnp.ndarray | None = None,
+):
+    """The segmented host driver (DESIGN.md §11): ``prepare`` once, then
+    re-dispatch ONE compiled segment executable ``segment_trips`` loop
+    trips at a time, checking preemption / deadline / shard health between
+    dispatches, and ``finalize`` whatever state the loop ends in.
+
+    Same contract and return value as ``padded_adaptive_solve_batched``
+    (bitwise identical when nothing fires), plus:
+
+    * ``deadline_s``   — wall-clock budget from entry; the first segment of
+      an invocation ALWAYS runs (a resumed or retried solve with a nearly
+      spent budget still makes progress), after which no further segment
+      is dispatched past the deadline. Unfinished problems are finalized
+      with status ``DEADLINE_EXCEEDED``, their best finite iterate and its
+      real δ̃.
+    * ``checkpoint``   — CheckpointManager (or directory path) that
+      persists ``PaddedState._asdict()`` every ``checkpoint_every``
+      segments (blocking: a committed marker must never lead the data) and
+      on preemption.
+    * ``resume``       — restore the last committed segment from
+      ``checkpoint`` before solving (no-op when none exists). The caller
+      must present the same problem and keys; a fingerprint in the
+      checkpoint's ``extra`` rejects mismatched resumes loudly.
+    * ``preempt``      — object with a ``should_stop`` attribute
+      (``ft.PreemptionHandler``); polled between segments. When set, the
+      state is checkpointed and ``PreemptedError`` raised.
+    * ``on_segment``   — ``fn(segment, state) -> grams | None`` host hook;
+      returning replacement (L, B, d, d) level Grams triggers a mid-solve
+      ``reprecondition_padded`` (elastic shard recovery) with trip-budget
+      headroom for the re-climb.
+    * ``grams``        — precomputed ladder level Grams for ``prepare``
+      (e.g. ``ShardLadderCache.total()``), skipping the sketch pass.
+
+    Extra stats keys: ``segments`` (dispatches this invocation),
+    ``resumed`` (bool), ``deadline_hit`` (bool).
+    """
+    t0 = time.perf_counter()
+    B = q.batch
+    if _is_single_key(keys):
+        keys = jax.random.split(keys, B)
+
+    ckpt = _as_checkpoint_manager(checkpoint)
+    fingerprint = _solve_fingerprint(q, m_max=m_max, method=method,
+                                     sketch=sketch, max_iters=max_iters)
+
+    pre, st = prepare_padded_solve(
+        q, keys, m_max=m_max, sketch=sketch, gram_hvp=gram_hvp, mesh=mesh,
+        init_level=init_level, guards=guards, compute_dtype=compute_dtype,
+        tol=tol, grams=grams)
+
+    trip_budget = padded_trip_cap(m_max, max_iters)
+    ladder_len = len(doubling_ladder(m_max))
+    seg = 0
+    resumed = False
+    if ckpt is not None and resume and ckpt.latest_step() is not None:
+        restored, extra = ckpt.restore(st._asdict())
+        got = extra.get("fingerprint")
+        if got != fingerprint:
+            raise ValueError(
+                f"checkpoint fingerprint mismatch: checkpoint is for "
+                f"{got!r}, this solve is {fingerprint!r} — refusing to "
+                f"resume onto a different problem")
+        st = PaddedState(**restored)
+        seg = int(extra.get("segment", ckpt.latest_step()))
+        trip_budget = int(extra.get("trip_budget", trip_budget))
+        resumed = True
+
+    def _save(segment: int):
+        ckpt.save(segment, st._asdict(),
+                  extra={"segment": segment, "fingerprint": fingerprint,
+                         "trip_budget": trip_budget},
+                  blocking=True)
+
+    deadline_hit = False
+    seg_ran = 0
+    while True:
+        trips_now = int(jax.device_get(st.trips))
+        if bool(np.all(jax.device_get(st.done))) or trips_now >= trip_budget:
+            break
+        if preempt is not None and getattr(preempt, "should_stop", False):
+            if ckpt is not None:
+                _save(seg)
+            raise PreemptedError(seg, getattr(ckpt, "dir", None))
+        if (deadline_s is not None and seg_ran > 0
+                and time.perf_counter() - t0 >= deadline_s):
+            deadline_hit = True
+            break
+        limit = min(trip_budget, trips_now + int(segment_trips))
+        st = padded_solve_segment(q, pre, st, limit, method=method,
+                                  max_iters=max_iters, rho=rho, tol=tol,
+                                  guards=guards)
+        # block so the wall-clock check above measures real solve time,
+        # not dispatch time
+        st = jax.block_until_ready(st)
+        seg += 1
+        seg_ran += 1
+        if on_segment is not None:
+            new_grams = on_segment(seg, st)
+            if new_grams is not None:
+                pre, st = reprecondition_padded(q, pre, st, new_grams,
+                                                guards=guards)
+                # re-anchored problems may need to re-climb the ladder
+                trip_budget += ladder_len
+        if ckpt is not None and seg_ran % max(1, checkpoint_every) == 0:
+            _save(seg)
+
+    x, stats = finalize_padded_solve(pre, st, m_max=m_max)
+    stats = dict(stats)
+    if deadline_hit:
+        # every not-done problem is by construction not converged: override
+        # its engine verdict with the honest one. Finished problems keep
+        # theirs bit-for-bit.
+        status = np.array(stats["status"])
+        not_done = ~np.asarray(jax.device_get(st.done))
+        status[not_done] = int(SolveStatus.DEADLINE_EXCEEDED)
+        stats["status"] = jnp.asarray(status, dtype=jnp.int32)
+        stats["stalled"] = jnp.asarray(status == int(SolveStatus.STALLED))
+    stats["segments"] = seg_ran
+    stats["resumed"] = resumed
+    stats["deadline_hit"] = deadline_hit
+    return x, stats
+
+
 def robust_padded_solve_batched(
     q: Quadratic,
     keys: jax.Array,
@@ -75,6 +311,13 @@ def robust_padded_solve_batched(
     max_retries: int = 2,
     fallback: bool = True,
     compute_dtype: str = "fp32",
+    deadline_s: float | None = None,
+    segment_trips: int | None = None,
+    checkpoint=None,
+    checkpoint_every: int = 1,
+    resume: bool = True,
+    preempt=None,
+    on_segment=None,
 ):
     """Solve a batch with engine guards + sketch-redraw retries + fallback.
 
@@ -90,23 +333,65 @@ def robust_padded_solve_batched(
     * engine certificates (``dtilde``, ``m_final``, ``iters`` — accumulated
       across attempts — ``doublings``, ``level``, ``invalid_levels``);
       ``dtilde`` is NaN on fallen-back slots (no sketched certificate).
+    * ``segments``/``resumed``/``deadline_hit`` — segmented-driver
+      telemetry (0/False on the monolithic path).
 
     ``max_retries=0`` disables redraws (straight to fallback);
     ``fallback=False`` disables the dense oracle — failures then keep the
     engine's best finite iterate and verdict (useful in tests and when the
     O(nd²) host path is unaffordable).
+
+    Setting ANY of ``deadline_s`` / ``segment_trips`` / ``checkpoint`` /
+    ``preempt`` / ``on_segment`` routes attempts through
+    ``segmented_padded_solve_batched``. ``deadline_s`` is a wall-clock
+    budget over the WHOLE call: the first attempt gets it all, each retry
+    gets what remains (so a retrying slot cannot blow a deadline that
+    clean slots already met), and the dense fallback is skipped once the
+    budget is spent. Slots that ran out of budget mid-solve carry
+    ``DEADLINE_EXCEEDED`` with their best iterate and real δ̃ — never
+    retried (only engine failures are), and never overwritten by a retry
+    that itself ran out of time. With none of those knobs set the path —
+    and the numbers — are the single-dispatch monolithic ones.
     """
     B = q.batch
     if _is_single_key(keys):
         keys = jax.random.split(keys, B)
 
-    solve = lambda qq, kk, lvl: padded_adaptive_solve_batched(
-        qq, kk, m_max=m_max, method=method, sketch=sketch,
-        max_iters=max_iters, rho=rho, tol=tol, gram_hvp=gram_hvp,
-        mesh=mesh, init_level=lvl, guards=True,
-        compute_dtype=compute_dtype)
+    t0 = time.perf_counter()
+    segmented = any(v is not None for v in
+                    (deadline_s, segment_trips, checkpoint, preempt,
+                     on_segment))
+    seg_trips = (DEFAULT_SEGMENT_TRIPS if segment_trips is None
+                 else int(segment_trips))
 
-    x_dev, stats_dev = solve(q, keys, init_level)
+    def remaining():
+        return (None if deadline_s is None
+                else deadline_s - (time.perf_counter() - t0))
+
+    def solve(qq, kk, lvl, *, budget, first=False):
+        if not segmented:
+            return padded_adaptive_solve_batched(
+                qq, kk, m_max=m_max, method=method, sketch=sketch,
+                max_iters=max_iters, rho=rho, tol=tol, gram_hvp=gram_hvp,
+                mesh=mesh, init_level=lvl, guards=True,
+                compute_dtype=compute_dtype)
+        return segmented_padded_solve_batched(
+            qq, kk, m_max=m_max, method=method, sketch=sketch,
+            max_iters=max_iters, rho=rho, tol=tol, gram_hvp=gram_hvp,
+            mesh=mesh, init_level=lvl, guards=True,
+            compute_dtype=compute_dtype, segment_trips=seg_trips,
+            deadline_s=budget,
+            # checkpoint/preempt bind to the first attempt only: a retry is
+            # a different (redrawn) solve and must not clobber — or resume
+            # from — the first attempt's checkpoint
+            checkpoint=checkpoint if first else None,
+            checkpoint_every=checkpoint_every,
+            resume=resume if first else False,
+            preempt=preempt if first else None,
+            on_segment=on_segment if first else None)
+
+    x_dev, stats_dev = solve(q, keys, init_level, budget=remaining(),
+                             first=True)
 
     x = np.array(x_dev)
     status = np.array(stats_dev["status"])
@@ -117,6 +402,9 @@ def robust_padded_solve_batched(
     level = np.array(stats_dev["level"])
     invalid_levels = np.array(stats_dev["invalid_levels"])
     trips = int(stats_dev["trips"])
+    segments = int(stats_dev.get("segments", 0))
+    resumed = bool(stats_dev.get("resumed", False))
+    deadline_hit = bool(stats_dev.get("deadline_hit", False))
 
     retries = np.zeros(B, dtype=np.int32)
     fell_back = np.zeros(B, dtype=bool)
@@ -127,6 +415,9 @@ def robust_padded_solve_batched(
         fidx = np.flatnonzero(failed)
         if fidx.size == 0:
             break
+        budget = remaining()
+        if budget is not None and budget <= 0:
+            break  # deadline spent: keep the honest engine verdicts
         # Same-shape padded gather: the retry reuses the compiled executable.
         pad = np.full(B, fidx[0], dtype=np.int64)
         pad[: fidx.size] = fidx
@@ -138,7 +429,7 @@ def robust_padded_solve_batched(
             lambda k: jax.random.fold_in(k, attempt))(keys[idx])
         warm = jnp.asarray(level[pad], dtype=jnp.int32)
 
-        x_sub, s_sub = solve(q_sub, keys_sub, warm)
+        x_sub, s_sub = solve(q_sub, keys_sub, warm, budget=budget)
         x_sub = np.array(x_sub)
         st_sub = np.array(s_sub["status"])
         dt_sub = np.array(s_sub["dtilde"])
@@ -156,13 +447,20 @@ def robust_padded_solve_batched(
                 doublings[g] = np.array(s_sub["doublings"])[j]
                 level[g] = np.array(s_sub["level"])[j]
                 invalid_levels[g] = np.array(s_sub["invalid_levels"])[j]
-            status[g] = (int(SolveStatus.RETRIED) if adopted
-                         else int(st_sub[j]))
+            if int(st_sub[j]) == int(SolveStatus.DEADLINE_EXCEEDED):
+                # the retry — not the problem — ran out of budget: keep the
+                # previous attempt's honest engine verdict
+                pass
+            else:
+                status[g] = (int(SolveStatus.RETRIED) if adopted
+                             else int(st_sub[j]))
             failed[g] = not adopted
         trips += int(s_sub["trips"])
+        segments += int(s_sub.get("segments", 0))
 
     fidx = np.flatnonzero(failed)
-    if fallback and fidx.size:
+    budget = remaining()
+    if fallback and fidx.size and (budget is None or budget > 0):
         q_f = _gather_quadratic(q, jnp.asarray(fidx))
         x_fb = np.array(direct_solve(q_f))
         finite = np.all(np.isfinite(x_fb), axis=-1)
@@ -187,5 +485,8 @@ def robust_padded_solve_batched(
         "level": jnp.asarray(level),
         "invalid_levels": jnp.asarray(invalid_levels),
         "trips": trips,
+        "segments": segments,
+        "resumed": resumed,
+        "deadline_hit": deadline_hit,
     }
     return jnp.asarray(x), stats

@@ -36,8 +36,17 @@ Lattice, from best to worst:
                           iterate (x₀ = 0 if nothing finite ever improved).
 * ``REJECTED``          — failed submit-time validation (non-finite A/y/Λ,
                           ν ≤ 0); quarantined before packing, never solved.
-* ``DEADLINE_EXCEEDED`` — the flush deadline ran out before this request's
-                          batch dispatched; returned unsolved.
+* ``DEADLINE_EXCEEDED`` — the wall-clock budget ran out. Two flavors,
+                          distinguishable by the certificate (DESIGN.md
+                          §11): if the solve DISPATCHED, the segmented
+                          driver stopped it mid-solve and the answer is
+                          the best finite iterate with its real δ̃ (or the
+                          Newton decrement on the GLM path) — honest
+                          partial progress; if the budget was spent before
+                          the chunk dispatched at all, x = 0 with a NaN
+                          certificate. Never retried or fallen back (only
+                          engine failures are): spending more time is
+                          exactly what the deadline forbids.
 """
 
 from __future__ import annotations

@@ -1,6 +1,7 @@
 from .checkpoint import CheckpointManager
 from .faults import (
     AdversarialKeyProvider,
+    ShardLossInjector,
     dropout_provider,
     ill_conditioned_matrix,
     inject_inf_entry,

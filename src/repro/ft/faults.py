@@ -122,3 +122,28 @@ def dropout_provider(inner, n_shards: int,
     its ``n_shards`` data shards and re-psums level Grams over the
     survivors (DESIGN.md §5/§9)."""
     return BlockEmulationProvider(inner, n_shards, drop_shards=drop_shards)
+
+
+class ShardLossInjector:
+    """Chaos hook for the segmented driver: kill shard ``shard`` at segment
+    boundary ``at_segment`` (once), recombine the surviving per-shard
+    ladder Grams by the cache's one-subtraction ``drop``, and hand the
+    recombined (L, B, d, d) stack back so the driver
+    ``reprecondition_padded``s mid-solve — the injected form of losing a
+    data shard on a real pod. Pass as
+    ``segmented_padded_solve_batched(on_segment=…)`` with a
+    ``core.distributed.ShardLadderCache`` built before the solve."""
+
+    def __init__(self, cache, *, shard: int, at_segment: int):
+        self.cache = cache
+        self.shard = shard
+        self.at_segment = at_segment
+        self.fired = False
+        self.fired_at: int | None = None
+
+    def __call__(self, segment: int, state):
+        if self.fired or segment < self.at_segment:
+            return None
+        self.fired = True
+        self.fired_at = segment
+        return self.cache.drop(self.shard)

@@ -18,13 +18,24 @@ sharded engine over a K-device data mesh — see DESIGN.md §5; ``--glm N``
 adds N logistic requests served by the adaptive sketched-Newton driver
 with Newton-level certificates — DESIGN.md §8; ``--dtype bf16``/``int8``
 runs the one-touch sketch pass at reduced stream precision with fp32
-certificates — DESIGN.md §10.)
+certificates — DESIGN.md §10; ``--deadline-s T`` bounds the flush —
+expired requests return DEADLINE_EXCEEDED with their best finite iterate
+— DESIGN.md §11.)
+
+``--preempt-after N`` drives the preemption chaos cycle instead (DESIGN.md
+§11): launch ``examples/solve_service.py`` as a checkpointing subprocess,
+SIGTERM it N seconds into the flush, assert it exits 75 after committing
+its solver state, restart it with ``--resume``, and assert every request
+terminates finite with an honest status:
+
+    PYTHONPATH=src python -m repro.launch.serve --preempt-after 3
 """
 
 from __future__ import annotations
 
 import argparse
 import time
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -81,7 +92,7 @@ def serve_ridge(args):
         svc.submit_glm(A, y, nu=float(rng.uniform(0.1, 0.5)),
                        family="logistic")
     t0 = time.perf_counter()
-    sols = svc.flush()
+    sols = svc.flush(deadline_s=args.deadline_s)
     dt = time.perf_counter() - t0
     if not sols:
         print("ridge service: no requests")
@@ -129,6 +140,60 @@ def serve_ridge(args):
               f"{glm_sols[0].m_trajectory}")
 
 
+def serve_preempt(args):
+    """The kill → restart serving story, end to end (DESIGN.md §11):
+    run the checkpointing ridge demo as a subprocess, SIGTERM it
+    ``--preempt-after`` seconds in, restart with ``--resume``, and verify
+    every request still terminates finite with a truthful status."""
+    import os
+    import shutil
+    import signal
+    import subprocess
+    import sys
+    import tempfile
+
+    root = Path(__file__).resolve().parents[3]
+    ck = tempfile.mkdtemp(prefix="preempt_ck_")
+    env = {**os.environ,
+           "PYTHONPATH": os.pathsep.join(
+               [str(root / "src")]
+               + ([os.environ["PYTHONPATH"]]
+                  if os.environ.get("PYTHONPATH") else []))}
+    # tol=0 + bounded iters + no fallback keeps the flush long enough for
+    # the signal to land mid-solve, while still terminating on restart
+    cmd = [sys.executable, "-u", str(root / "examples" / "solve_service.py"),
+           "--requests", "6", "--tol", "0", "--max-iters", "1200",
+           "--max-retries", "0", "--no-fallback", "--segment-trips", "16",
+           "--checkpoint-dir", ck]
+    try:
+        print(f"preemption cycle: checkpoints in {ck}")
+        p = subprocess.Popen(cmd, env=env, stdout=subprocess.PIPE,
+                             stderr=subprocess.STDOUT, text=True)
+        time.sleep(args.preempt_after)
+        p.send_signal(signal.SIGTERM)
+        out, _ = p.communicate(timeout=600)
+        print(out, end="")
+        if p.returncode == 0:
+            print("note: flush finished before the SIGTERM landed; "
+                  "restart will resume-from-complete")
+        elif p.returncode != 75:
+            raise SystemExit(
+                f"preempted service exited {p.returncode}, expected 75")
+        r = subprocess.run(cmd + ["--resume"], env=env,
+                           capture_output=True, text=True, timeout=600)
+        print(r.stdout, end="")
+        if r.returncode != 0:
+            raise SystemExit(
+                f"resumed service exited {r.returncode}:\n"
+                f"{r.stderr[-2000:]}")
+        if "ALL_FINITE=1" not in r.stdout:
+            raise SystemExit("resumed service returned non-finite answers")
+        print("preemption cycle OK: SIGTERM → exit 75 → --resume → "
+              "all requests finite with honest statuses")
+    finally:
+        shutil.rmtree(ck, ignore_errors=True)
+
+
 def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-0.5b")
@@ -160,6 +225,15 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--mesh", type=int, default=0,
                     help="row-shard each packed batch's A over this many "
                          "data-mesh devices (--ridge); 0 = single device")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="wall-clock budget for the ridge flush (--ridge); "
+                         "expired requests return DEADLINE_EXCEEDED with "
+                         "their best finite iterate (DESIGN.md §11)")
+    ap.add_argument("--preempt-after", type=float, default=0.0,
+                    help="run the preemption chaos cycle instead: SIGTERM "
+                         "the checkpointing ridge demo this many seconds "
+                         "into its flush, then restart it with --resume "
+                         "and verify finite, honest results")
     from repro.core.level_grams import COMPUTE_DTYPES, PADDED_SKETCHES
 
     ap.add_argument("--sketch", default="gaussian",
@@ -177,6 +251,8 @@ def build_parser() -> argparse.ArgumentParser:
 def main(argv=None):
     args = build_parser().parse_args(argv)
 
+    if args.preempt_after:
+        return serve_preempt(args)
     if args.ridge:
         return serve_ridge(args)
 

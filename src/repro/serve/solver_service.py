@@ -99,6 +99,7 @@ class RidgeRequest:
     y: jnp.ndarray           # (n,) targets
     nu: float                # regularization ν
     lam_diag: jnp.ndarray | None = None
+    deadline: float | None = None   # absolute time.perf_counter() stamp
 
 
 @dataclasses.dataclass(frozen=True)
@@ -109,6 +110,7 @@ class GLMRequest:
     nu: float                # regularization ν
     family: str              # "logistic" | "poisson" | "huber[:delta]"
     lam_diag: jnp.ndarray | None = None
+    deadline: float | None = None   # absolute time.perf_counter() stamp
 
 
 @dataclasses.dataclass(frozen=True)
@@ -203,6 +205,9 @@ class SolverService:
         max_retries: int = 2,
         fallback: bool = True,
         flush_deadline_s: float | None = None,
+        segment_trips: int = 32,
+        checkpoint_dir=None,
+        preempt=None,
     ):
         if shape_classes is None:
             # the pod-scale n=65536 tail only exists where the batch is
@@ -244,11 +249,20 @@ class SolverService:
         self.max_retries = max_retries
         self.fallback = fallback
         self.flush_deadline_s = flush_deadline_s
+        # preemptible-solve knobs (DESIGN.md §11): segment_trips bounds each
+        # engine dispatch so deadlines/preemption bind mid-solve;
+        # checkpoint_dir persists per-chunk solver state (deterministic
+        # directory names, so a restarted process resumes its chunks);
+        # preempt is an ft.PreemptionHandler polled between segments.
+        self.segment_trips = segment_trips
+        self.checkpoint_dir = checkpoint_dir
+        self.preempt = preempt
         self._quarantined: dict[int, "RidgeSolution | GLMSolution"] = {}
         self.rejection_reasons: dict[int, str] = {}
         self.stats = {"requests": 0, "batches": 0, "padded_slots": 0,
                       "solve_seconds": 0.0, "retries": 0, "fallbacks": 0,
-                      "rejected": 0, "deadline_exceeded": 0}
+                      "rejected": 0, "deadline_exceeded": 0,
+                      "segments": 0, "resumed_chunks": 0}
 
     def slot_utilization(self) -> float:
         """Fraction of solved batch slots that held a real request."""
@@ -267,8 +281,17 @@ class SolverService:
             f"no shape class fits (n={n}, d={d}); "
             f"largest is {self.shape_classes[-1]}")
 
-    def submit(self, A, y, nu, lam_diag=None) -> int:
+    def submit(self, A, y, nu, lam_diag=None, *,
+               deadline_s: float | None = None) -> int:
         """Enqueue one ridge problem; returns its request id.
+
+        ``deadline_s``: per-request wall-clock budget, counted from submit.
+        Urgent requests are dispatched earliest-deadline-first at flush,
+        and the deadline binds MID-solve (the segmented engine): a request
+        that runs out of time returns its best finite iterate, its real δ̃
+        and an honest ``DEADLINE_EXCEEDED``; one whose budget is already
+        spent before its chunk dispatches returns x = 0 with no
+        certificate.
 
         ν must be a positive finite float: the service pads requests to the
         class shape with zero A-columns and Λ = 1 on padded coordinates, so
@@ -299,8 +322,11 @@ class SolverService:
                 status=SolveStatus.REJECTED.name,
                 converged=False))
             return rid
+        deadline = (None if deadline_s is None
+                    else time.perf_counter() + float(deadline_s))
         self._queues[cls].append(RidgeRequest(
-            req_id=rid, A=A, y=y, nu=nu, lam_diag=lam_diag))
+            req_id=rid, A=A, y=y, nu=nu, lam_diag=lam_diag,
+            deadline=deadline))
         return rid
 
     def _validate(self, A, y, nu, lam_diag) -> tuple[float, str | None]:
@@ -349,7 +375,7 @@ class SolverService:
         return nu
 
     def submit_glm(self, A, y, nu, family: str = "logistic",
-                   lam_diag=None) -> int:
+                   lam_diag=None, *, deadline_s: float | None = None) -> int:
         """Enqueue one regularized GLM problem (``family``: logistic /
         poisson / huber[:delta]); returns its request id.
 
@@ -361,7 +387,9 @@ class SolverService:
         zero gradient, zero Hessian weight contribution.
 
         Admission validation mirrors ``submit`` (finiteness of A/y/Λ and
-        ν > 0; strict raise vs quarantine)."""
+        ν > 0; strict raise vs quarantine), as does ``deadline_s`` (EDF
+        dispatch; the budget binds between the Newton driver's outer
+        steps)."""
         get_objective(family)          # validate the family name up front
         A = jnp.asarray(A)
         y = jnp.asarray(y)
@@ -380,8 +408,10 @@ class SolverService:
                 compute_dtype=cls.compute_dtype or self.compute_dtype,
                 status=SolveStatus.REJECTED.name))
             return rid
+        deadline = (None if deadline_s is None
+                    else time.perf_counter() + float(deadline_s))
         req = GLMRequest(req_id=rid, A=A, y=y, nu=nu,
-                         family=family, lam_diag=lam_diag)
+                         family=family, lam_diag=lam_diag, deadline=deadline)
         self._glm_queues.setdefault((cls, family), []).append(req)
         return rid
 
@@ -458,14 +488,27 @@ class SolverService:
         GLM requests come back in one map, each with its certificate type).
 
         ``deadline_s`` (default: the service's ``flush_deadline_s``) is a
-        per-flush wall-clock budget checked *between* chunk dispatches — a
-        jitted solve cannot be interrupted, so the granularity is one
-        batch. Once the budget is spent, every not-yet-dispatched request
-        comes back immediately with status ``DEADLINE_EXCEEDED`` (x = 0,
-        no certificate) instead of blocking the flush — partial results
-        with truthful verdicts beat a late answer for every tenant.
+        per-flush wall-clock budget. Chunks dispatch **earliest-deadline-
+        first**: within each queue requests sort by their per-request
+        deadline (undeadlined last, insertion order preserved), and across
+        queues the chunk with the most urgent member goes first — a
+        just-submitted urgent request is no longer stuck behind a backlog
+        of patient ones. Each dispatched chunk gets the minimum of the
+        remaining flush budget and its most urgent member's remaining
+        budget, and the deadline binds MID-solve through the segmented
+        engine (``DESIGN.md §11``): requests that run out of time come back
+        with their best finite iterate, its real δ̃, and an honest
+        ``DEADLINE_EXCEEDED``. A chunk whose budget is already spent
+        before dispatch is expired wholesale (x = 0, no certificate).
         Quarantined (REJECTED) requests are always returned first; they
         cost no solve time.
+
+        With ``checkpoint_dir``/``preempt`` set, each chunk solve
+        checkpoints between segments and a SIGTERM raises
+        ``core.PreemptedError`` out of flush after committing state; a
+        restarted service that receives the SAME submissions (ids and
+        problems — the deterministic replay contract) resumes each chunk
+        from its last committed segment.
         """
         if deadline_s is None:
             deadline_s = self.flush_deadline_s
@@ -474,27 +517,68 @@ class SolverService:
         out.update(self._quarantined)
         self._quarantined = {}
 
-        def expired() -> bool:
-            return (deadline_s is not None
-                    and time.perf_counter() - t0 >= deadline_s)
+        def edf(queue):
+            # stable: deadlined requests first by deadline, rest in
+            # insertion order
+            return sorted(queue, key=lambda r: (r.deadline is None,
+                                                r.deadline or 0.0))
 
+        # (urgency, seq, cls, family|None, chunk) — family=None ⇒ ridge
+        chunks = []
+        seq = 0
         for cls in self.shape_classes:
             queue, self._queues[cls] = self._queues[cls], []
+            queue = edf(queue)
             for i in range(0, len(queue), self.batch_size):
                 chunk = queue[i: i + self.batch_size]
-                if expired():
-                    out.update(self._expire_chunk(cls, chunk))
-                else:
-                    out.update(self._solve_chunk(cls, chunk))
+                dl = [r.deadline for r in chunk if r.deadline is not None]
+                chunks.append((min(dl) if dl else None, seq, cls, None, chunk))
+                seq += 1
         for (cls, family), queue in list(self._glm_queues.items()):
             self._glm_queues[(cls, family)] = []
+            queue = edf(queue)
             for i in range(0, len(queue), self.batch_size):
                 chunk = queue[i: i + self.batch_size]
-                if expired():
-                    out.update(self._expire_chunk(cls, chunk, family=family))
-                else:
-                    out.update(self._solve_glm_chunk(cls, family, chunk))
+                dl = [r.deadline for r in chunk if r.deadline is not None]
+                chunks.append((min(dl) if dl else None, seq, cls, family,
+                               chunk))
+                seq += 1
+        chunks.sort(key=lambda c: (c[0] is None, c[0] or 0.0, c[1]))
+
+        for chunk_deadline, _, cls, family, chunk in chunks:
+            now = time.perf_counter()
+            budgets = []
+            if deadline_s is not None:
+                budgets.append(deadline_s - (now - t0))
+            if chunk_deadline is not None:
+                budgets.append(chunk_deadline - now)
+            budget = min(budgets) if budgets else None
+            if budget is not None and budget <= 0:
+                out.update(self._expire_chunk(cls, chunk, family=family))
+            elif family is None:
+                out.update(self._solve_chunk(cls, chunk, budget_s=budget))
+            else:
+                out.update(self._solve_glm_chunk(cls, family, chunk,
+                                                 budget_s=budget))
         return out
+
+    def _chunk_checkpoint(self, cls: ShapeClass, reqs,
+                          family: str | None = None):
+        """Per-chunk CheckpointManager under ``checkpoint_dir``, with a
+        DETERMINISTIC directory name derived from the chunk's membership —
+        a restarted process that replays the same submissions re-derives
+        the same directory and resumes the committed state."""
+        if self.checkpoint_dir is None:
+            return None
+        import hashlib
+        from pathlib import Path
+
+        from repro.ft.checkpoint import CheckpointManager
+
+        ids = ",".join(str(r.req_id) for r in reqs)
+        token = f"{cls.n}x{cls.d}x{cls.m_max}:{family or 'ridge'}:{ids}"
+        tag = hashlib.sha1(token.encode()).hexdigest()[:12]
+        return CheckpointManager(Path(self.checkpoint_dir) / f"chunk_{tag}")
 
     def _expire_chunk(self, cls: ShapeClass, reqs, family: str | None = None):
         """DEADLINE_EXCEEDED solutions for an undispatched chunk."""
@@ -521,7 +605,8 @@ class SolverService:
         return out
 
     def _solve_glm_chunk(self, cls: ShapeClass, family: str,
-                         reqs: list[GLMRequest]):
+                         reqs: list[GLMRequest],
+                         budget_s: float | None = None):
         A, y, nu, lam, keys = self._pack_glm(cls, reqs)
         sketch = cls.sketch or self.sketch
         cd = cls.compute_dtype or self.compute_dtype
@@ -531,7 +616,8 @@ class SolverService:
             method=self.method, sketch=sketch,
             newton_iters=self.newton_iters, tol=self.newton_tol,
             inner_max_iters=self.max_iters, rho=self.rho,
-            inner_tol=self.tol, mesh=self.mesh, compute_dtype=cd)
+            inner_tol=self.tol, mesh=self.mesh, compute_dtype=cd,
+            deadline_s=budget_s)
         x = jax.block_until_ready(x)
         self.stats["solve_seconds"] += time.perf_counter() - t0
         self.stats["batches"] += 1
@@ -541,6 +627,8 @@ class SolverService:
         for i, r in enumerate(reqs):
             di = r.A.shape[1]
             traj = tuple(int(m) for m in m_traj[:, i] if m > 0)
+            if int(stats["status"][i]) == int(SolveStatus.DEADLINE_EXCEEDED):
+                self.stats["deadline_exceeded"] += 1
             out[r.req_id] = GLMSolution(
                 req_id=r.req_id,
                 x=x[i, :di],
@@ -560,7 +648,8 @@ class SolverService:
             )
         return out
 
-    def _solve_chunk(self, cls: ShapeClass, reqs: list[RidgeRequest]):
+    def _solve_chunk(self, cls: ShapeClass, reqs: list[RidgeRequest],
+                     budget_s: float | None = None):
         q, keys = self._pack(cls, reqs)
         sketch = cls.sketch or self.sketch
         cd = cls.compute_dtype or self.compute_dtype
@@ -568,21 +657,37 @@ class SolverService:
         # the robust driver = guarded engine + per-problem sketch-redraw
         # retries + direct_solve degradation; a quarantine-evading fault
         # (e.g. numerically degenerate but finite data) still ends in a
-        # finite answer with an honest verdict, isolated to its slot
+        # finite answer with an honest verdict, isolated to its slot.
+        # Any preemptibility knob (budget / checkpoint / SIGTERM handler)
+        # routes the solve through the segmented driver; with none set the
+        # call — and its numbers — are the single-dispatch ones.
+        seg_kwargs = {}
+        if (budget_s is not None or self.checkpoint_dir is not None
+                or self.preempt is not None):
+            seg_kwargs = dict(
+                deadline_s=budget_s,
+                segment_trips=self.segment_trips,
+                checkpoint=self._chunk_checkpoint(cls, reqs),
+                preempt=self.preempt,
+            )
         x, stats = robust_padded_solve_batched(
             q, keys, m_max=cls.m_max, method=self.method, sketch=sketch,
             max_iters=self.max_iters, rho=self.rho, tol=self.tol,
             mesh=self.mesh, max_retries=self.max_retries,
-            fallback=self.fallback, compute_dtype=cd)
+            fallback=self.fallback, compute_dtype=cd, **seg_kwargs)
         x = jax.block_until_ready(x)
         self.stats["solve_seconds"] += time.perf_counter() - t0
         self.stats["batches"] += 1
         self.stats["padded_slots"] += self.batch_size - len(reqs)
+        self.stats["segments"] += int(stats.get("segments", 0))
+        self.stats["resumed_chunks"] += int(bool(stats.get("resumed", False)))
         out = {}
         for i, r in enumerate(reqs):
             di = r.A.shape[1]
             self.stats["retries"] += int(stats["retries"][i])
             self.stats["fallbacks"] += int(stats["fell_back"][i])
+            if int(stats["status"][i]) == int(SolveStatus.DEADLINE_EXCEEDED):
+                self.stats["deadline_exceeded"] += 1
             out[r.req_id] = RidgeSolution(
                 req_id=r.req_id,
                 x=x[i, :di],

@@ -58,6 +58,80 @@ def test_checkpoint_ignores_uncommitted(tmp_path):
     assert ckpt.latest_step() == 5
 
 
+def test_checkpoint_interrupted_save_restores_previous(tmp_path):
+    """Crash-safety (DESIGN.md §11): a save torn mid-write (arrays +
+    manifest on disk, COMMITTED never written — the kill -9 window) must
+    leave the PREVIOUS committed step as the restore target, with its
+    data intact."""
+    ckpt = CheckpointManager(tmp_path)
+    t = _tree()
+    ckpt.save(1, t, extra={"segment": 1})
+    # torn step 2: everything except the COMMITTED marker
+    t2 = jax.tree.map(lambda x: x * 7, t)
+    ckpt.save(2, t2, extra={"segment": 2})
+    (tmp_path / "step_000000002" / "COMMITTED").unlink()
+    assert ckpt.latest_step() == 1
+    restored, extra = ckpt.restore(t)
+    assert extra["segment"] == 1
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    # a staging dir abandoned mid-rename is never mistaken for a step
+    stray = tmp_path / "step_000000003.tmp" / "arrays"
+    stray.mkdir(parents=True)
+    assert ckpt.latest_step() == 1
+    # and the next real save recovers cleanly past both
+    ckpt.save(3, t2, extra={"segment": 3})
+    assert ckpt.latest_step() == 3
+    _, extra3 = ckpt.restore(t2)
+    assert extra3["segment"] == 3
+
+
+def test_checkpoint_gc_skips_uncommitted(tmp_path):
+    """keep-last-k GC counts only COMMITTED steps: torn dirs neither age
+    out good checkpoints nor survive as restore candidates."""
+    ckpt = CheckpointManager(tmp_path, keep=2)
+    t = _tree()
+    for s in (1, 2):
+        ckpt.save(s, t)
+    bad = tmp_path / "step_000000005"
+    (bad / "arrays").mkdir(parents=True)
+    (bad / "manifest.json").write_text("{}")
+    ckpt.save(6, t)
+    assert ckpt.all_steps() == [2, 6]
+
+
+def test_checkpoint_solver_state_restores_onto_mesh(tmp_path):
+    """The elastic-restart path: a solver ``PaddedState`` checkpointed on
+    one process restores onto a DIFFERENT mesh shape — leaves are stored
+    as full logical arrays and device_put onto the target shardings."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+    from repro.core import from_least_squares_batch, prepare_padded_solve
+
+    B, n, d = 4, 64, 8
+    ks = jax.random.split(jax.random.PRNGKey(0), B)
+    A = jnp.stack([jax.random.normal(k, (n, d)) / np.sqrt(n) for k in ks])
+    Y = jax.random.normal(jax.random.PRNGKey(1), (B, n))
+    q = from_least_squares_batch(A, Y, 0.1)
+    keys = jax.random.split(jax.random.PRNGKey(42), B)
+    _, st = prepare_padded_solve(q, keys, m_max=16)
+    tree = st._asdict()
+
+    ckpt = CheckpointManager(tmp_path)
+    ckpt.save(1, tree, extra={"segment": 1})
+
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    shardings = jax.tree.map(
+        lambda _: NamedSharding(mesh, P()), tree)
+    restored, extra = ckpt.restore(tree, shardings=shardings)
+    assert extra["segment"] == 1
+    for key, leaf in restored.items():
+        assert leaf.sharding.mesh.shape == mesh.shape, key
+        np.testing.assert_array_equal(np.asarray(leaf),
+                                      np.asarray(tree[key]), err_msg=key)
+
+
 def test_checkpoint_async(tmp_path):
     ckpt = CheckpointManager(tmp_path)
     ckpt.save(7, _tree(), blocking=False)
