@@ -14,7 +14,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import from_least_squares
 from repro.core.effective_dim import exp_decay_singular_values

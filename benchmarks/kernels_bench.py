@@ -8,7 +8,6 @@ from __future__ import annotations
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.ops import sjlt_apply

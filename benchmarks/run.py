@@ -151,6 +151,15 @@ def main() -> None:
                 print(f"warning: could not merge into {BENCH_JSON} ({e!r}); "
                       f"rewriting from this run only")
         rows = merge_rows(prior, json_rows)
+        # invariant status at this commit, next to the perf rows: a perf
+        # win that broke one-touch/precision/collective invariants is not
+        # a win. Quick static subset (traces + source lints, no execution).
+        try:
+            from repro.analysis.audit.runner import run_audit
+
+            audit = run_audit(quick=True, run_exec=False).summary()
+        except Exception as e:  # the perf artifact survives an audit crash
+            audit = {"passed": None, "error": repr(e)}
         payload = {
             "meta": {
                 "fast": args.fast,
@@ -159,6 +168,7 @@ def main() -> None:
                 "python": platform.python_version(),
                 "machine": platform.machine(),
                 "elapsed_s": round(time.time() - t_all, 1),
+                "audit": audit,
             },
             "rows": rows,
         }

@@ -7,15 +7,11 @@ formulas as §4.1) and verify the adaptive advantage predicted by (1.6) vs
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import (
     AdaptiveConfig,
     adaptive_solve,
     effective_dimension,
-    factorize,
-    make_sketch,
-    run_fixed,
 )
 from repro.core.precond import factorization_cost_flops
 from repro.core.sketches import sketch_cost_flops

@@ -21,7 +21,7 @@ from repro.core import (
     direct_solve,
     from_least_squares,
 )
-from repro.models import forward, init_params
+from repro.models import init_params
 from repro.models import transformer as T
 from repro.models import layers as L
 

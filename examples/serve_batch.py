@@ -9,7 +9,6 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.serve.step import greedy_generate

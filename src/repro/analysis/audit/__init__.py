@@ -1,0 +1,52 @@
+"""Invariant auditor: a jaxpr/HLO rule engine for the solver stack.
+
+The paper's complexity claims rest on structural invariants — each sketch
+family touches A exactly once, the sharded ladder combines in exactly ONE
+psum, reduced-precision streams never cross the fp32 Gram/Cholesky/δ̃
+boundary, entry points never silently retrace, PRNG keys reaching
+sketches carry distinct coordinates. This package checks all of them
+STATICALLY: every public entry point is traced to a closed jaxpr (never
+executed), and a registry of declarative rules walks the equations.
+
+    PYTHONPATH=src python -m repro.analysis.audit            # human report
+    PYTHONPATH=src python -m repro.analysis.audit --json AUDIT.json
+    PYTHONPATH=src python -m repro.analysis.audit --quick    # CI-fast subset
+
+Layout:
+
+* ``jaxpr_utils``  — the ONE jaxpr walker (sub-jaxpr recursion, primitive
+  inventory, intermediate avals, eqn provenance). ``analysis.memscan`` and
+  the tier-1 tests delegate here instead of keeping private copies.
+* ``hlo_utils``    — optimized-HLO text scans (collective inventory,
+  donation/aliasing markers). ``analysis.collectives`` delegates here.
+* ``entrypoints``  — the audited surface: provider families × dtypes ×
+  weighted, the engine segment executable, sharded precompute, Newton
+  inner step, service pack/flush graphs.
+* ``rules``        — the declarative rules (one-touch, collective
+  inventory, precision boundary, retrace sentinel) + the registry.
+* ``ast_rules``    — source-level lints (PRNG key hygiene, status-lattice
+  handling) that do not need a trace at all.
+* ``runner``       — run rules × entry points, emit AUDIT.json + report.
+* ``fixtures``     — deliberately-violating graphs each rule must FAIL on
+  (tests/test_audit.py proves every rule fires before trusting a pass).
+"""
+
+from .jaxpr_utils import (  # noqa: F401
+    collect_eqns,
+    count_primitive,
+    eqn_provenance,
+    has_intermediate_of_shape,
+    iter_eqns,
+    iter_intermediate_avals,
+    jaxpr_text,
+    max_intermediate_bytes,
+    subjaxprs,
+    while_body_jaxprs,
+)
+from .hlo_utils import (  # noqa: F401
+    collective_bytes_from_hlo,
+    donated_input_indices,
+)
+from .rules import RULES, Rule, RuleResult, Violation  # noqa: F401
+from .entrypoints import ENTRY_POINTS, EntryPoint, build_targets  # noqa: F401
+from .runner import AuditReport, run_audit  # noqa: F401

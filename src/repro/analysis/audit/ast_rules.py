@@ -1,0 +1,130 @@
+"""Source-level lints that need no trace: PRNG key hygiene and
+status-lattice handling, over every module in ``src/repro``.
+
+Key hygiene (DESIGN.md §6/§9): every key that reaches a sketch is derived
+with ``fold_in``/``split`` using distinct coordinates — the service folds
+request ids (padded slots take the reserved top-of-range stream), retries
+fold the attempt index, shards fold the shard index, the Newton driver
+folds the outer step. The statically-checkable residue of that contract:
+
+* a module must not construct ``jax.random.PRNGKey(<literal>)`` twice
+  with the SAME literal — two identical root keys in one module is how
+  two "independent" sketches end up correlated;
+* one function must not call ``fold_in(key, <literal>)`` twice with the
+  same constant coordinate — that is the literal-reuse bug the slot-key
+  scheme exists to prevent.
+
+Status lattice (DESIGN.md §9): any module that consumes engine stats'
+``status`` field must reference the lattice (``SolveStatus``,
+``ENGINE_FAILURES``, ``status_name`` or ``CONVERGED_STATUSES``) — an
+integer comparison against a bare literal silently breaks when the
+lattice gains a member (exactly how DEADLINE_EXCEEDED was added).
+"""
+
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+
+from .rules import Violation
+
+_LATTICE_NAMES = ("SolveStatus", "ENGINE_FAILURES", "status_name",
+                  "CONVERGED_STATUSES")
+
+
+def _is_call_named(node: ast.Call, name: str) -> bool:
+    fn = node.func
+    if isinstance(fn, ast.Name):
+        return fn.id == name
+    if isinstance(fn, ast.Attribute):
+        return fn.attr == name
+    return False
+
+
+def _int_literal(node) -> int | None:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return node.value
+    return None
+
+
+def lint_module_source(source: str, module_name: str,
+                       path: str = "<string>") -> list[Violation]:
+    """All key-hygiene + status-lattice findings for one module's source."""
+    out: list[Violation] = []
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as e:  # unparsable files regress loudly
+        return [Violation("key_hygiene", module_name,
+                          f"unparsable source: {e}", f"{path}:{e.lineno}")]
+
+    # -- PRNGKey literal reuse (module scope) -------------------------------
+    seen_roots: dict[int, int] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and _is_call_named(node, "PRNGKey"):
+            if node.args:
+                lit = _int_literal(node.args[0])
+                if lit is None:
+                    continue
+                if lit in seen_roots:
+                    out.append(Violation(
+                        "key_hygiene", module_name,
+                        f"PRNGKey({lit}) constructed twice (first at line "
+                        f"{seen_roots[lit]}) — duplicate root keys correlate "
+                        f"sketches", f"{path}:{node.lineno}"))
+                else:
+                    seen_roots[lit] = node.lineno
+
+    # -- fold_in constant-coordinate reuse (function scope) -----------------
+    for fn_node in ast.walk(tree):
+        if not isinstance(fn_node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                    ast.Lambda)):
+            continue
+        seen_coords: dict[int, int] = {}
+        for node in ast.walk(fn_node):
+            if (isinstance(node, ast.Call)
+                    and _is_call_named(node, "fold_in")
+                    and len(node.args) >= 2):
+                lit = _int_literal(node.args[1])
+                if lit is None:
+                    continue
+                if lit in seen_coords:
+                    fname = getattr(fn_node, "name", "<lambda>")
+                    out.append(Violation(
+                        "key_hygiene", module_name,
+                        f"fold_in(…, {lit}) called twice in `{fname}` "
+                        f"(first at line {seen_coords[lit]}) — reused "
+                        f"coordinates yield identical derived keys",
+                        f"{path}:{node.lineno}"))
+                else:
+                    seen_coords[lit] = node.lineno
+
+    # -- status-lattice handling -------------------------------------------
+    reads_status = any(
+        isinstance(node, ast.Subscript)
+        and isinstance(node.slice, ast.Constant)
+        and node.slice.value == "status"
+        and isinstance(node.value, ast.Name)
+        and "stats" in node.value.id
+        for node in ast.walk(tree))
+    if reads_status and not any(n in source for n in _LATTICE_NAMES):
+        out.append(Violation(
+            "status_lattice", module_name,
+            "consumes engine stats['status'] without referencing the "
+            "status lattice (SolveStatus / ENGINE_FAILURES / status_name)",
+            path))
+    return out
+
+
+def lint_tree(root: str | Path = "src/repro") -> list[Violation]:
+    """Lint every module under ``root`` (the audit package's own fixtures
+    are skipped — they exist to violate)."""
+    root = Path(root)
+    out: list[Violation] = []
+    for f in sorted(root.rglob("*.py")):
+        if f.name == "fixtures.py" and "audit" in f.parts:
+            continue
+        rel = f.relative_to(root.parent if root.name == "repro" else root)
+        out.extend(lint_module_source(
+            f.read_text(), str(rel).replace("/", ".").removesuffix(".py"),
+            str(f)))
+    return out

@@ -1,0 +1,275 @@
+"""The audited surface: every public entry point, traced — never executed.
+
+Each :class:`EntryPoint` knows how to build its closed jaxpr from
+``ShapeDtypeStruct`` arguments (``jax.make_jaxpr`` needs avals only, so
+even the n = 65536 pod-scale service class traces in ~a second on a
+laptop) plus the metadata rules key on: sketch family, compute dtype,
+weightedness, and the per-family shape allowances of the one-touch claim.
+
+The point of a *registry* is that new entry points are audited by
+default: a fifth provider family lands in ``PADDED_SKETCHES`` and
+immediately appears in the families × dtypes × weighted product below; a
+new service shape class is picked up from ``DEFAULT_SHAPE_CLASSES``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.adaptive_padded import (
+    PADDED_METHODS,
+    doubling_ladder,
+    finalize_padded_solve,
+    padded_adaptive_solve_batched,
+    padded_solve_segment,
+    prepare_padded_solve,
+)
+from repro.core.level_grams import PADDED_SKETCHES, get_provider
+from repro.core.quadratic import Quadratic
+from repro.kernels.precision import COMPUTE_DTYPES
+
+# Audit shapes: big enough that the memory claims bind (the streamed-pass
+# peak budget is meaningless when n-chunking pads past n), small enough
+# that d×d factorizations trace instantly. n is deliberately NOT a power
+# of two so the SRHT pad-to-n_pad path is exercised.
+B, N, D, M_MAX = 3, 2000, 16, 128
+
+
+@dataclasses.dataclass(frozen=True)
+class EntryPoint:
+    """One audited entry point: ``build()`` returns its ClosedJaxpr."""
+
+    name: str
+    kind: str                      # provider | engine | sharded | segment |
+    build: Callable[[], object]    # newton | service
+    meta: dict
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _quadratic(b=B, n=N, d=D, weighted=False):
+    return Quadratic(
+        A=_sds((b, n, d)), b=_sds((b, d)), nu=_sds((b,)),
+        lam_diag=_sds((b, d)), batched=True,
+        row_weights=_sds((b, n)) if weighted else None)
+
+
+def _keys(b=B):
+    return jax.random.split(jax.random.PRNGKey(0), b)
+
+
+def _provider_ep(family: str, cd: str, weighted: bool) -> EntryPoint:
+    def build():
+        prov = get_provider(family)
+        ladder = doubling_ladder(M_MAX)
+        q = _quadratic(weighted=weighted)
+
+        def fn(q, keys):
+            data = prov.sample(keys, M_MAX, N, jnp.float32)
+            return prov.level_grams(data, q, ladder, compute_dtype=cd)
+
+        return jax.make_jaxpr(fn)(q, _keys())
+
+    w = "weighted" if weighted else "unweighted"
+    return EntryPoint(
+        name=f"provider:{family}:{cd}:{w}", kind="provider", build=build,
+        meta={"family": family, "compute_dtype": cd, "weighted": weighted,
+              "B": B, "n": N, "d": D, "m_max": M_MAX})
+
+
+def _engine_ep(family: str, method: str, cd: str) -> EntryPoint:
+    def build():
+        q = _quadratic()
+        return jax.make_jaxpr(
+            lambda q, k: padded_adaptive_solve_batched(
+                q, k, m_max=M_MAX, method=method, sketch=family,
+                compute_dtype=cd)[0])(q, _keys())
+
+    return EntryPoint(
+        name=f"engine:{family}:{method}:{cd}", kind="engine", build=build,
+        meta={"family": family, "method": method, "compute_dtype": cd,
+              "B": B, "n": N, "d": D, "m_max": M_MAX})
+
+
+def _segment_ep() -> EntryPoint:
+    """The re-dispatched segment executable + finalize, traced from the
+    prepare-time state SHAPES (``jax.eval_shape`` — prepare itself never
+    runs)."""
+
+    def build():
+        q = _quadratic()
+        pre, st = jax.eval_shape(
+            lambda q, k: prepare_padded_solve(q, k, m_max=M_MAX),
+            q, _keys())
+        return jax.make_jaxpr(
+            lambda q, pre, st, lim: finalize_padded_solve(
+                pre, padded_solve_segment(q, pre, st, lim, method="pcg"),
+                m_max=M_MAX))(q, pre, st, _sds((), jnp.int32))
+
+    return EntryPoint(
+        name="engine:segment:pcg:fp32", kind="segment", build=build,
+        meta={"family": "gaussian", "method": "pcg", "compute_dtype": "fp32",
+              "B": B, "n": N, "d": D, "m_max": M_MAX})
+
+
+def _sharded_ep(family: str) -> EntryPoint:
+    """The one-psum ladder precompute on a 1-device mesh: shard_map traces
+    identically at any device count, so the collective *inventory* (how
+    many psums, of what) is auditable without an 8-device subprocess."""
+
+    def build():
+        from repro.core.distributed import shard_level_grams
+
+        mesh = jax.make_mesh((1,), ("data",))
+        prov = get_provider(family)
+        ladder = doubling_ladder(M_MAX)
+        q = _quadratic()
+        return jax.make_jaxpr(
+            lambda q, ks: shard_level_grams(prov, ks, q, ladder, mesh))(
+                q, _keys())
+
+    return EntryPoint(
+        name=f"sharded:{family}:fp32", kind="sharded", build=build,
+        meta={"family": family, "compute_dtype": "fp32", "psum_budget": 1,
+              "B": B, "n": N, "d": D, "m_max": M_MAX})
+
+
+def _sharded_weighted_gram_ep() -> EntryPoint:
+    def build():
+        from repro.core.distributed import shard_weighted_gram
+
+        mesh = jax.make_mesh((1,), ("data",))
+        q = _quadratic(weighted=True)
+        return jax.make_jaxpr(
+            lambda q: shard_weighted_gram(q, mesh))(q)
+
+    return EntryPoint(
+        name="sharded:weighted_gram", kind="sharded", build=build,
+        meta={"family": None, "compute_dtype": "fp32", "psum_budget": 1,
+              "B": B, "n": N, "d": D, "m_max": M_MAX})
+
+
+def _newton_inner_ep() -> EntryPoint:
+    """The Newton driver's inner solve: the weighted engine with a warm
+    ``init_level`` — exactly what ``core.newton`` dispatches per step."""
+
+    def build():
+        q = _quadratic(weighted=True)
+        return jax.make_jaxpr(
+            lambda q, k, lvl: padded_adaptive_solve_batched(
+                q, k, m_max=M_MAX, method="pcg", sketch="gaussian",
+                init_level=lvl)[0])(q, _keys(), _sds((B,), jnp.int32))
+
+    return EntryPoint(
+        name="newton:inner:gaussian:fp32", kind="newton", build=build,
+        meta={"family": "gaussian", "method": "pcg", "compute_dtype": "fp32",
+              "weighted": True, "B": B, "n": N, "d": D, "m_max": M_MAX})
+
+
+def _newton_step_ep(family: str = "logistic") -> EntryPoint:
+    """The driver's per-step jitted pieces (gradient/Hessian weights and
+    the vmapped Armijo line search) as one traced graph."""
+
+    def build():
+        from repro.core.newton import _grad_and_weights, _line_search
+        from repro.core.objectives import get_objective
+
+        obj = get_objective(family)
+        A, y = _sds((B, N, D)), _sds((B, N))
+        nu, lam = _sds((B,)), _sds((B, D))
+        x, delta = _sds((B, D)), _sds((B, D))
+        dec, active = _sds((B,)), _sds((B,), jnp.bool_)
+
+        def fn(A, y, nu, lam, x, delta, dec, active):
+            g, w = _grad_and_weights(obj, A, y, nu, lam, x)
+            return _line_search(obj, A, y, nu, lam, x, delta, dec, active,
+                                backtracks=12, c1=1e-4), g, w
+
+        return jax.make_jaxpr(fn)(A, y, nu, lam, x, delta, dec, active)
+
+    return EntryPoint(
+        name=f"newton:step:{family}", kind="newton", build=build,
+        meta={"family": family, "compute_dtype": "fp32",
+              "B": B, "n": N, "d": D})
+
+
+def _service_pack_keys_ep() -> EntryPoint:
+    """The pack path's slot-key derivation: ONE vmapped fold_in over the
+    slot-id vector (real slots: req_id; padded slots: 2³²−1−slot)."""
+
+    def build():
+        def fn(base_key, slot_ids):
+            return jax.vmap(
+                lambda i: jax.random.fold_in(base_key, i))(slot_ids)
+
+        return jax.make_jaxpr(fn)(
+            _sds((2,), jnp.uint32), _sds((16,), jnp.uint32))
+
+    return EntryPoint(
+        name="service:pack_keys", kind="service", build=build,
+        meta={"compute_dtype": None})
+
+
+def _service_class_ep(cls) -> EntryPoint:
+    """The engine graph a flush dispatches for one shape class, at the
+    class's padded dims, sketch family and compute dtype."""
+
+    def build():
+        q = _quadratic(b=4, n=cls.n, d=cls.d)
+        return jax.make_jaxpr(
+            lambda q, k: padded_adaptive_solve_batched(
+                q, k, m_max=cls.m_max, method="pcg",
+                sketch=cls.sketch or "gaussian",
+                compute_dtype=cls.compute_dtype or "fp32")[0])(
+                    q, _keys(4))
+
+    fam = cls.sketch or "gaussian"
+    cd = cls.compute_dtype or "fp32"
+    return EntryPoint(
+        name=f"service:class:n{cls.n}:d{cls.d}:{fam}:{cd}", kind="service",
+        build=build,
+        meta={"family": fam, "method": "pcg", "compute_dtype": cd,
+              "B": 4, "n": cls.n, "d": cls.d, "m_max": cls.m_max})
+
+
+def build_targets(quick: bool = False) -> list[EntryPoint]:
+    """The full audited surface (or the CI-quick subset: one dtype, the
+    engine's default method, the smallest service class)."""
+    eps: list[EntryPoint] = []
+    dtypes = ("fp32",) if quick else COMPUTE_DTYPES
+    for family in PADDED_SKETCHES:
+        for cd in dtypes:
+            for weighted in (False, True):
+                eps.append(_provider_ep(family, cd, weighted))
+    for family in PADDED_SKETCHES:
+        eps.append(_engine_ep(family, "pcg", "fp32"))
+    if not quick:
+        for method in PADDED_METHODS:
+            if method != "pcg":
+                eps.append(_engine_ep("gaussian", method, "fp32"))
+        for cd in ("bf16", "int8"):
+            eps.append(_engine_ep("gaussian", "pcg", cd))
+    eps.append(_segment_ep())
+    for family in PADDED_SKETCHES:
+        if quick and family != "gaussian":
+            continue
+        eps.append(_sharded_ep(family))
+    eps.append(_sharded_weighted_gram_ep())
+    eps.append(_newton_inner_ep())
+    eps.append(_newton_step_ep("logistic"))
+    eps.append(_service_pack_keys_ep())
+    from repro.serve.solver_service import DEFAULT_SHAPE_CLASSES
+
+    classes = DEFAULT_SHAPE_CLASSES[:1] if quick else DEFAULT_SHAPE_CLASSES
+    for cls in classes:
+        eps.append(_service_class_ep(cls))
+    return eps
+
+
+ENTRY_POINTS = build_targets  # legacy alias: callable registry

@@ -1,0 +1,224 @@
+"""Deliberately-violating graphs: every rule's negative control.
+
+Each fixture builds an :class:`EntryPoint` whose graph breaks exactly the
+invariant its name says — a dense sketch parked in HBM, a second psum, a
+bf16 Cholesky, a reused key literal, a value-leaking static argument. The
+audit suite (``tests/test_audit.py``) runs the real rules against these
+and asserts they FAIL with the right provenance: a rule that cannot catch
+its own seeded violation is a rubber stamp, not a gate.
+
+This module is excluded from the source lints (``ast_rules.lint_tree``
+skips ``fixtures.py``) because existing to violate is its job.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .entrypoints import EntryPoint, _sds
+
+# Big enough that the chunk-aware one-touch allowances do NOT excuse the
+# violation: n must exceed the 2048-column stream chunk.
+_B, _N, _D, _M = 2, 4096, 8, 64
+
+
+# ---------------------------------------------------------------------------
+# one_touch violations
+# ---------------------------------------------------------------------------
+
+def dense_sketch_ep() -> EntryPoint:
+    """A 'gaussian' pass that materializes the full (B, m_max, n) sketch —
+    the exact HBM blow-up the streamed pass exists to avoid."""
+
+    def build():
+        def fn(A, key):
+            S = jax.random.normal(key, (_B, _M, _N), jnp.float32)
+            SA = jnp.einsum("bmn,bnd->bmd", S, A)
+            return jnp.einsum("bmd,bme->bde", SA, SA)
+
+        return jax.make_jaxpr(fn)(_sds((_B, _N, _D)),
+                                  jax.random.PRNGKey(0))
+
+    return EntryPoint(
+        name="fixture:dense_sketch", kind="provider", build=build,
+        meta={"family": "gaussian", "compute_dtype": "fp32",
+              "B": _B, "n": _N, "d": _D, "m_max": _M})
+
+
+def a_copy_ep() -> EntryPoint:
+    """A 'gaussian' pass that takes a second, full-size fp32 touch of A
+    (the sign-flipped copy the families promise to fuse)."""
+
+    def build():
+        def fn(A, w):
+            Aw = A * w[:, :, None]          # fp32 (B, n, d) second touch
+            return jnp.einsum("bnd,bne->bde", Aw, Aw)
+
+        return jax.make_jaxpr(fn)(_sds((_B, _N, _D)), _sds((_B, _N)))
+
+    return EntryPoint(
+        name="fixture:a_copy", kind="provider", build=build,
+        meta={"family": "gaussian", "compute_dtype": "fp32",
+              "B": _B, "n": _N, "d": _D, "m_max": _M})
+
+
+# ---------------------------------------------------------------------------
+# collective_inventory violations
+# ---------------------------------------------------------------------------
+
+def double_psum_ep() -> EntryPoint:
+    """A sharded precompute that psums TWICE (partial Grams, then again
+    'for safety') — double the collective bytes of the documented one."""
+
+    def build():
+        from repro.core.distributed import _smap
+
+        mesh = jax.make_mesh((1,), ("data",))
+
+        def local(A):
+            G = jnp.einsum("bnd,bne->bde", A, A)
+            G = jax.lax.psum(G, axis_name="data")
+            return jax.lax.psum(G, axis_name="data")
+
+        fn = _smap(local, mesh, in_specs=(P(None, "data", None),),
+                   out_specs=P())
+        return jax.make_jaxpr(fn)(_sds((_B, _N, _D)))
+
+    return EntryPoint(
+        name="fixture:double_psum", kind="sharded", build=build,
+        meta={"family": "gaussian", "compute_dtype": "fp32",
+              "psum_budget": 1, "B": _B, "n": _N, "d": _D, "m_max": _M})
+
+
+def loop_collective_ep() -> EntryPoint:
+    """A psum INSIDE the adaptive while_loop body — one collective per
+    iteration instead of one per solve."""
+
+    def build():
+        from repro.core.distributed import _smap
+
+        mesh = jax.make_mesh((1,), ("data",))
+
+        def local(A):
+            g0 = jnp.einsum("bnd,bne->bde", A, A)
+
+            def body(carry):
+                i, g = carry
+                return i + 1, jax.lax.psum(g, axis_name="data")
+
+            _, g = jax.lax.while_loop(lambda c: c[0] < 3, body,
+                                      (jnp.int32(0), g0))
+            return g
+
+        fn = _smap(local, mesh, in_specs=(P(None, "data", None),),
+                   out_specs=P())
+        return jax.make_jaxpr(fn)(_sds((_B, _N, _D)))
+
+    return EntryPoint(
+        name="fixture:loop_collective", kind="sharded", build=build,
+        meta={"family": "gaussian", "compute_dtype": "fp32",
+              "psum_budget": 1, "B": _B, "n": _N, "d": _D, "m_max": _M})
+
+
+# ---------------------------------------------------------------------------
+# precision_boundary violations
+# ---------------------------------------------------------------------------
+
+def bf16_cholesky_ep() -> EntryPoint:
+    """A bf16 pipeline that forgets the fp32 promotion: the Gram is
+    accumulated in bf16, factorized in bf16, and a bf16 residual is
+    carried through the iteration loop."""
+
+    def build():
+        def fn(A):
+            Ah = A.astype(jnp.bfloat16)
+            G = jax.lax.dot_general(                    # bf16 accumulate
+                Ah, Ah, (((1,), (1,)), ((0,), (0,))))
+            G = G + 1e-3 * jnp.eye(_D, dtype=jnp.bfloat16)
+            L = jax.lax.linalg.cholesky(G)              # bf16 factorization
+
+            def body(carry):
+                i, r = carry                            # bf16 loop carry
+                return i + 1, r * jnp.bfloat16(0.5)
+
+            _, r = jax.lax.while_loop(
+                lambda c: c[0] < 4, body,
+                (jnp.int32(0), jnp.zeros((_B, _D), jnp.bfloat16)))
+            return L, r
+
+        return jax.make_jaxpr(fn)(_sds((_B, _N, _D)))
+
+    return EntryPoint(
+        name="fixture:bf16_cholesky", kind="provider", build=build,
+        meta={"family": "gaussian", "compute_dtype": "bf16",
+              "B": _B, "n": _N, "d": _D, "m_max": _M})
+
+
+# ---------------------------------------------------------------------------
+# retrace_sentinel violations
+# ---------------------------------------------------------------------------
+
+def make_leaky_static_fn():
+    """A jitted solve that routes a per-request VALUE (the regularizer)
+    through a static argument: every fresh request compiles a fresh
+    executable — the exact cliff the retrace sentinel exists to catch."""
+    from functools import partial
+
+    @partial(jax.jit, static_argnames=("nu",))
+    def leaky_solve(x, nu):
+        return x / (1.0 + nu)
+
+    return leaky_solve
+
+
+def make_undonated_segment_fn():
+    """A segment-shaped executable whose state is NOT donated: the 20-leaf
+    analogue is ``padded_solve_segment`` before buffer donation landed."""
+
+    @jax.jit
+    def undonated_segment(q, st):
+        return jax.tree_util.tree_map(lambda a: a + q, st)
+
+    return undonated_segment
+
+
+# ---------------------------------------------------------------------------
+# key_hygiene / status_lattice violating SOURCE (strings, so the tree lint
+# over real modules never sees them)
+# ---------------------------------------------------------------------------
+
+REUSED_ROOT_KEY_SRC = """
+import jax
+
+def sketch_a():
+    return jax.random.PRNGKey(42)
+
+def sketch_b():
+    return jax.random.PRNGKey(42)
+"""
+
+REUSED_FOLD_IN_SRC = """
+import jax
+
+def derive(key):
+    ka = jax.random.fold_in(key, 7)
+    kb = jax.random.fold_in(key, 7)
+    return ka, kb
+"""
+
+BARE_STATUS_SRC = """
+def converged(stats):
+    return stats["status"] == 0
+"""
+
+CLEAN_STATUS_SRC = """
+from repro.core.adaptive_padded import SolveStatus
+
+def converged(stats):
+    return stats["status"] == SolveStatus.CONVERGED
+"""
+
+ALL_FIXTURES = (dense_sketch_ep, a_copy_ep, double_psum_ep,
+                loop_collective_ep, bf16_cholesky_ep)

@@ -1,0 +1,81 @@
+"""Optimized-HLO text scans: collective traffic and donation markers.
+
+The canonical home of the collective-bytes parser (``cost_analysis()``
+does not report collective traffic); ``repro.analysis.collectives`` is a
+compatibility shim over this module. The donation scan reads the lowering
+of a jitted entry point and reports which inputs carry buffer-donation /
+aliasing annotations — how the retrace-sentinel rule proves the 20-field
+``PaddedState`` is donated across segment re-dispatch instead of doubling
+the engine's state footprint every segment.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast",
+)
+
+# e.g.  %ag = bf16[4,128,256]{2,1,0} all-gather(...)
+_LINE_RE = re.compile(
+    r"=\s*(?:\([^)]*\)\s*)?((?:\w+\[[0-9,]*\][^ ]*\s*,?\s*)+)\s*"
+    r"(" + "|".join(COLLECTIVE_OPS) + r")(?:-start|-done)?\("
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict:
+    """Returns {'total_bytes', 'by_op': {op: {'bytes', 'count'}}} where bytes
+    is the summed *output* operand size of each collective instruction
+    (counting -start once, ignoring -done duplicates)."""
+    by_op: dict = defaultdict(lambda: {"bytes": 0, "count": 0})
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if not any(op in s for op in COLLECTIVE_OPS):
+            continue
+        if "-done(" in s or "-done.1(" in s:
+            continue  # counted at -start
+        m = _LINE_RE.search(s)
+        if not m:
+            continue
+        shapes_str, op = m.group(1), m.group(2)
+        nbytes = sum(
+            _shape_bytes(dt, dims) for dt, dims in _SHAPE_RE.findall(shapes_str)
+        )
+        by_op[op]["bytes"] += nbytes
+        by_op[op]["count"] += 1
+    total = sum(v["bytes"] for v in by_op.values())
+    return {"total_bytes": total, "by_op": dict(by_op)}
+
+
+# StableHLO spells input donation either as the modern jax.buffer_donor
+# attribute or as an input/output aliasing pair; match both so the check
+# survives jaxlib bumps.
+_DONOR_RE = re.compile(r"%arg(\d+)[^\n{]*\{[^}]*jax\.buffer_donor[^}]*\}")
+_ALIAS_RE = re.compile(r"%arg(\d+)[^\n{]*\{[^}]*tf\.aliasing_output[^}]*\}")
+
+
+def donated_input_indices(stablehlo_text: str) -> set[int]:
+    """Flat input indices carrying a donation/aliasing annotation in a
+    lowered module's text (``fn.lower(...).as_text()``)."""
+    out: set[int] = set()
+    for rx in (_DONOR_RE, _ALIAS_RE):
+        out.update(int(m.group(1)) for m in rx.finditer(stablehlo_text))
+    return out

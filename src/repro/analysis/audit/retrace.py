@@ -1,0 +1,117 @@
+"""Behavioral checks: retrace sentinel + state-donation audit.
+
+These are the two invariants a jaxpr cannot show. The retrace sentinel
+EXECUTES each jitted entry point twice on tiny problems — the second call
+with fresh same-shaped dynamic arguments — and asserts the compilation
+cache did not grow: a new trace on shape-identical inputs means a dynamic
+value leaked into a static argument (one silent recompile per service
+request, the classic serving perf cliff). The donation audit lowers the
+segment executable and checks the 20-field ``PaddedState`` carries
+buffer-donation/aliasing markers: the host driver re-dispatches that
+executable every ``segment_trips`` loop trips, and an undonated state
+doubles the engine's state footprint on every dispatch.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .hlo_utils import donated_input_indices
+from .rules import Violation
+
+# tiny but structurally faithful: batched, non-pow2 n, real ladder
+_B, _N, _D, _M = 2, 48, 6, 8
+
+
+def _problem(seed: int):
+    from repro.core.quadratic import from_least_squares_batch
+
+    key = jax.random.PRNGKey(seed)
+    A = jax.random.normal(key, (_B, _N, _D), jnp.float32)
+    y = jax.random.normal(jax.random.fold_in(key, 1), (_B, _N), jnp.float32)
+    q = from_least_squares_batch(A, y, jnp.asarray([0.1, 0.2]))
+    return q, jax.random.split(jax.random.fold_in(key, 2), _B)
+
+
+def _cache_size(fn) -> int | None:
+    get = getattr(fn, "_cache_size", None)
+    return get() if callable(get) else None
+
+
+def check_retrace_sentinel() -> list[Violation]:
+    """Zero new traces when an entry point is re-dispatched with fresh
+    same-shape dynamic args, across the whole segmented lifecycle."""
+    from repro.core.adaptive_padded import (
+        finalize_padded_solve,
+        padded_adaptive_solve_batched,
+        padded_solve_segment,
+        prepare_padded_solve,
+        reprecondition_padded,
+    )
+
+    out: list[Violation] = []
+
+    def run_cycle(seed: int):
+        q, keys = _problem(seed)
+        pre, st = prepare_padded_solve(q, keys, m_max=_M, sketch="gaussian")
+        st = padded_solve_segment(q, pre, st, jnp.int32(4), method="pcg")
+        grams = jnp.broadcast_to(
+            jnp.eye(_D, dtype=jnp.float32),
+            (pre.pinvs.shape[0], _B, _D, _D))
+        pre2, st = reprecondition_padded(q, pre, st, grams)
+        x, stats = finalize_padded_solve(pre2, st, m_max=_M)
+        x2, _ = padded_adaptive_solve_batched(q, keys, m_max=_M,
+                                              method="pcg")
+        return jax.block_until_ready((x, x2))
+
+    tracked = {
+        "prepare_padded_solve": prepare_padded_solve,
+        "padded_solve_segment": padded_solve_segment,
+        "finalize_padded_solve": finalize_padded_solve,
+        "reprecondition_padded": reprecondition_padded,
+        "padded_adaptive_solve_batched": padded_adaptive_solve_batched,
+    }
+    run_cycle(0)  # populate the caches
+    before = {name: _cache_size(fn) for name, fn in tracked.items()}
+    run_cycle(1)  # fresh data, identical shapes/statics
+    for name, fn in tracked.items():
+        after = _cache_size(fn)
+        if before[name] is None or after is None:
+            continue  # cache introspection unavailable on this jax
+        if after != before[name]:
+            out.append(Violation(
+                "retrace_sentinel", name,
+                f"re-dispatch with fresh same-shape args grew the "
+                f"compilation cache {before[name]} → {after} (a dynamic "
+                f"value is flowing into a static argument)"))
+    return out
+
+
+def check_state_donation() -> list[Violation]:
+    """The segment executable must donate (alias) every ``PaddedState``
+    leaf — and nothing else — across re-dispatch."""
+    from repro.core.adaptive_padded import (
+        padded_solve_segment,
+        prepare_padded_solve,
+    )
+
+    q, keys = _problem(0)
+    pre, st = jax.eval_shape(
+        lambda q, k: prepare_padded_solve(q, k, m_max=_M), q, keys)
+    lowered = padded_solve_segment.lower(q, pre, st, jnp.int32(4),
+                                         method="pcg")
+    donated = donated_input_indices(lowered.as_text())
+    n_state = len(jax.tree_util.tree_leaves(st))
+    out: list[Violation] = []
+    if len(donated) != n_state:
+        out.append(Violation(
+            "retrace_sentinel", "padded_solve_segment",
+            f"{len(donated)} of the {n_state} PaddedState leaves are "
+            f"donated across segment re-dispatch (every state field must "
+            f"alias its output buffer)"))
+    return out
+
+
+def run_behavioral_checks() -> list[Violation]:
+    return check_retrace_sentinel() + check_state_donation()

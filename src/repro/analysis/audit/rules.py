@@ -1,0 +1,316 @@
+"""The declarative invariant rules (DESIGN.md §12).
+
+Every rule sees one traced entry point (an :class:`EntryPoint` plus its
+``ClosedJaxpr``) and returns the violations it finds — empty means the
+invariant holds for that graph. Rules are registered in ``RULES`` and the
+runner applies every applicable rule to every entry point, so a new
+provider family / method / shape class is audited the moment it exists.
+
+The allowances are the DOCUMENTED exceptions, not escape hatches:
+
+* ``gaussian_dense`` is the materialized-S memory baseline — (B, m_max, n)
+  is its entire point.
+* ``sjlt`` on the jnp reference backend materializes the sign-scaled
+  stream copy of A before its one segment-sum dispatch (the Pallas path
+  fuses it into the kernel's VMEM tile); the copy is A-sized, not
+  sketch-sized, so the O(B·m_max·n) claim is untouched.
+* ``srht`` peaks at the (B, n_pad, d) FWHT stack — the transform is
+  in-place in the padded index space by construction.
+* ``int8`` mode quantizes A per row first; the |A| pass that computes the
+  dequantization scales is fp32 and A-shaped.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+from . import jaxpr_utils as ju
+
+REDUCED_FLOAT = ("bfloat16", "float16")
+COLLECTIVE_PRIMS = (
+    "psum", "psum2", "all_gather", "all_to_all", "ppermute", "pmax", "pmin",
+    "reduce_scatter", "pgather",
+)
+FACTORIZATION_PRIMS = ("cholesky", "triangular_solve")
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    rule: str
+    entry_point: str
+    message: str
+    provenance: str = ""
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    name: str
+    description: str
+    applies: Callable[[object], bool]
+    check: Callable[[object, object], list[Violation]]
+
+
+@dataclasses.dataclass(frozen=True)
+class RuleResult:
+    rule: str
+    entry_point: str
+    passed: bool
+    violations: tuple[Violation, ...] = ()
+
+    def as_dict(self) -> dict:
+        return {
+            "rule": self.rule,
+            "entry_point": self.entry_point,
+            "passed": self.passed,
+            "violations": [v.as_dict() for v in self.violations],
+        }
+
+
+def _v(rule, ep, msg, site=None) -> Violation:
+    prov = ju.eqn_provenance(site.eqn) if site is not None else ""
+    return Violation(rule=rule, entry_point=ep.name, message=msg,
+                     provenance=prov)
+
+
+# ---------------------------------------------------------------------------
+# Rule 1: one-touch — no sketch-sized or A-copy intermediates outside the
+# family's documented allowance; the streamed pass stays under its budget.
+# ---------------------------------------------------------------------------
+
+def _one_touch_applies(ep) -> bool:
+    m = ep.meta
+    return bool(m.get("family")) and all(
+        k in m for k in ("B", "n", "d", "m_max"))
+
+
+def _doubling_ladder(m_max: int) -> tuple[int, ...]:
+    from repro.core.adaptive_padded import doubling_ladder
+
+    return doubling_ladder(m_max)
+
+
+def _stream_chunk(n: int) -> int:
+    """The gaussian streamed pass's n-chunk: _MICRO = 256 column
+    micro-tiles up to the 2048-column default (kernels.gaussian_gram)."""
+    return min(-(-n // 256) * 256, 2048)
+
+
+def _one_touch_check(ep, closed) -> list[Violation]:
+    m = ep.meta
+    fam, cd = m["family"], m.get("compute_dtype") or "fp32"
+    B, n, d, m_max = m["B"], m["n"], m["d"], m["m_max"]
+    n_pad = 1 << max(0, (n - 1).bit_length())
+    chunk = _stream_chunk(n)
+    out: list[Violation] = []
+
+    # (a) the dense sketch (B, m_max, n) exists ONLY in the materialized
+    # baseline family. Vacuous when n fits one stream chunk — the chunk
+    # tile legitimately IS (B, m_max, n)-shaped there.
+    if fam != "gaussian_dense" and n > chunk:
+        sites = ju.find_intermediates(
+            closed, lambda a: tuple(a.shape) == (B, m_max, n))
+        for s in sites[:3]:
+            out.append(_v("one_touch", ep,
+                          f"dense sketch materialized: (B={B}, m_max={m_max},"
+                          f" n={n}) intermediate in the {fam} family", s))
+
+    # (b) no fp32 A-copy: a float32 (B, n, d) intermediate is a second
+    # touch of the data (the weighted/sign-flipped copy every family
+    # promises to fuse). Allowed: sjlt's ref-backend sign-scaled stream
+    # copy; srht when n is already a power of two (the FWHT stack IS
+    # (B, n_pad, d)); int8 mode's quantization-scale pass; n inside one
+    # stream chunk (the chunk slice of A is full-A-shaped there).
+    banned_a_copy = (fam in ("gaussian", "gaussian_dense", "srht")
+                     and cd in ("fp32", "bf16")
+                     and n > chunk
+                     and not (fam == "srht" and n_pad == n))
+    if banned_a_copy:
+        sites = ju.find_intermediates(
+            closed, lambda a: tuple(a.shape) == (B, n, d)
+            and a.dtype == np.dtype(np.float32))
+        for s in sites[:3]:
+            out.append(_v("one_touch", ep,
+                          f"fp32 (B, n, d) copy of A materialized in the "
+                          f"{fam}/{cd} pass", s))
+
+    # (c) streamed-pass peak budget: the gaussian family's largest live
+    # intermediate stays within 2× the documented live set — the
+    # (B, m_max, 256) generated micro-tile, the (B, chunk, d) A chunk,
+    # the (L, B, d, d) Gram/inverse ladder and the (B, m_max, d) SA
+    # accumulator (module docstring of core.level_grams) — which is ≥4×
+    # below the dense sketch whenever the shapes can tell them apart.
+    if fam == "gaussian":
+        ladder_len = len(_doubling_ladder(m_max))
+        live = 4 * max(B * m_max * 256, B * chunk * d,
+                       ladder_len * B * d * d, B * m_max * d)
+        budget = 2 * live
+        peak, shape = ju.max_intermediate_bytes(closed)
+        if peak > budget:
+            out.append(Violation(
+                "one_touch", ep.name,
+                f"streamed gaussian peak {peak} B @ {shape} exceeds the "
+                f"live-set budget {budget} B (dense S would be "
+                f"{4 * B * m_max * n} B)"))
+
+    # (d) SJLT single-dispatch: the cap level folds the one dispatch's
+    # tail rows, so exactly ONE scatter-add touches A (CPU lowering of the
+    # segment-sum; the provider graph is where the claim is crisp).
+    if fam == "sjlt" and ep.kind == "provider":
+        n_scatter = ju.count_primitive(closed, ("scatter-add", "scatter_add"))
+        if n_scatter != 1:
+            out.append(Violation(
+                "one_touch", ep.name,
+                f"SJLT issued {n_scatter} scatter-add dispatches against A "
+                f"(expected exactly 1, cap level included)"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Rule 2: collective inventory — sharded precompute combines in exactly one
+# psum of the Gram stack; the adaptive while_loop body is collective-free;
+# unsharded graphs have no collectives at all.
+# ---------------------------------------------------------------------------
+
+def _collectives_check(ep, closed) -> list[Violation]:
+    out: list[Violation] = []
+    sites = ju.collect_sites(closed, COLLECTIVE_PRIMS)
+
+    for s in sites:
+        if s.in_while_body:
+            out.append(_v("collective_inventory", ep,
+                          f"collective `{s.primitive}` inside the adaptive "
+                          f"while_loop body", s))
+
+    if ep.kind == "sharded":
+        budget = ep.meta.get("psum_budget", 1)
+        psums = [s for s in sites if s.primitive.startswith("psum")]
+        if len(psums) != budget:
+            out.append(Violation(
+                "collective_inventory", ep.name,
+                f"sharded precompute lowered {len(psums)} psums "
+                f"(budget: exactly {budget})"))
+        want = ep.meta.get("psum_shape")
+        if want is not None and psums:
+            got = tuple(psums[0].eqn.outvars[0].aval.shape)
+            if got != tuple(want):
+                out.append(_v("collective_inventory", ep,
+                              f"psum payload shape {got} != documented "
+                              f"{tuple(want)}", psums[0]))
+    elif sites:
+        for s in sites[:3]:
+            out.append(_v("collective_inventory", ep,
+                          f"unexpected collective `{s.primitive}` in an "
+                          f"unsharded graph", s))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Rule 3: precision boundary — reduced-dtype values only flow into
+# fp32-promoting contractions; factorizations, loop state and certificates
+# are provably fp32; fp32 mode contains no reduced-precision values.
+# ---------------------------------------------------------------------------
+
+def _precision_check(ep, closed) -> list[Violation]:
+    out: list[Violation] = []
+    cd = ep.meta.get("compute_dtype") or "fp32"
+
+    # (a) Cholesky / triangular solves never see reduced precision.
+    for s in ju.collect_sites(closed, FACTORIZATION_PRIMS):
+        dts = {str(v.aval.dtype) for v in s.eqn.invars
+               if hasattr(v, "aval")}
+        bad = dts - {"float32", "float64"}
+        if bad:
+            out.append(_v("precision_boundary", ep,
+                          f"{s.primitive} operates on {sorted(bad)} "
+                          f"(factorizations must be fp32)", s))
+
+    # (b) the while_loop carry (iterates, residuals, δ̃ anchors — what the
+    # certificates are computed from) holds no reduced-precision floats.
+    for s in ju.collect_sites(closed, "while"):
+        for var in s.eqn.outvars:
+            if str(var.aval.dtype) in REDUCED_FLOAT:
+                out.append(_v("precision_boundary", ep,
+                              f"while_loop carries a {var.aval.dtype} value "
+                              f"of shape {tuple(var.aval.shape)}", s))
+                break
+
+    # (c) every contraction with a reduced-float operand accumulates into
+    # fp32 (`preferred_element_type` on the one designated boundary).
+    for s in ju.collect_sites(closed, "dot_general"):
+        in_dts = {str(v.aval.dtype) for v in s.eqn.invars
+                  if hasattr(v, "aval")}
+        if in_dts & set(REDUCED_FLOAT):
+            out_dt = str(s.eqn.outvars[0].aval.dtype)
+            if out_dt not in ("float32", "float64"):
+                out.append(_v("precision_boundary", ep,
+                              f"dot_general with {sorted(in_dts)} operands "
+                              f"accumulates into {out_dt}, not fp32", s))
+        if "int8" in in_dts:
+            out_dt = str(s.eqn.outvars[0].aval.dtype)
+            if out_dt not in ("float32", "float64", "int32"):
+                out.append(_v("precision_boundary", ep,
+                              f"int8 dot_general accumulates into {out_dt}",
+                              s))
+
+    # (d) fp32 mode is the pre-axis graph: no reduced floats anywhere.
+    if cd == "fp32":
+        sites = ju.find_intermediates(
+            closed, lambda a: str(a.dtype) in REDUCED_FLOAT)
+        for s in sites[:3]:
+            out.append(_v("precision_boundary", ep,
+                          f"reduced-precision intermediate in fp32 mode "
+                          f"({s.primitive})", s))
+    return out
+
+
+def check_fp32_identity(family: str) -> list[Violation]:
+    """``compute_dtype="fp32"`` must trace to an equation-identical graph
+    as the pre-dtype-axis default (``compute_dtype=None``) — the fp32 mode
+    is a no-op, not a third numerical regime."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.adaptive_padded import doubling_ladder
+    from repro.core.level_grams import get_provider
+
+    from .entrypoints import M_MAX, N, _keys, _quadratic
+
+    prov = get_provider(family)
+    ladder = doubling_ladder(M_MAX)
+    q = _quadratic()
+
+    def trace(cd):
+        def fn(q, keys):
+            data = prov.sample(keys, M_MAX, N, jnp.float32)
+            return prov.level_grams(data, q, ladder, compute_dtype=cd)
+
+        return ju.jaxpr_text(jax.make_jaxpr(fn)(q, _keys()))
+
+    if trace("fp32") != trace(None):
+        return [Violation(
+            "precision_boundary", f"provider:{family}:fp32:identity",
+            f"compute_dtype='fp32' traces a different graph than the "
+            f"pre-axis default for the {family} family")]
+    return []
+
+
+RULES: tuple[Rule, ...] = (
+    Rule("one_touch",
+         "A is consumed by exactly one streaming pass; no sketch-sized or "
+         "A-copy intermediate outside the family's documented allowance",
+         _one_touch_applies, _one_touch_check),
+    Rule("collective_inventory",
+         "exactly one psum combines the sharded ladder; the adaptive loop "
+         "body is collective-free",
+         lambda ep: True, _collectives_check),
+    Rule("precision_boundary",
+         "reduced-precision streams stop at the fp32-promoting contraction;"
+         " Grams, Cholesky, δ̃ and certificates are provably fp32",
+         lambda ep: True, _precision_check),
+)

@@ -1,0 +1,186 @@
+"""Run rules × entry points; emit AUDIT.json and the human report.
+
+    PYTHONPATH=src python -m repro.analysis.audit [--json AUDIT.json]
+                                                  [--quick] [--no-exec]
+                                                  [--entry SUBSTR] [--rule R]
+
+Exit code 0 iff every applicable rule passes on every entry point (CI
+gates on this). ``AUDIT.json`` is the machine-readable matrix: rule →
+entry point → pass/fail plus offending-equation provenance — what lets a
+perf-trajectory row (``benchmarks/run.py --json``) be correlated with the
+invariant status at that commit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import sys
+import time
+
+from .ast_rules import lint_tree
+from .entrypoints import build_targets
+from .rules import RULES, RuleResult, Violation, check_fp32_identity
+
+
+@dataclasses.dataclass
+class AuditReport:
+    results: list[RuleResult]
+    elapsed_s: float
+    quick: bool
+
+    @property
+    def passed(self) -> bool:
+        return all(r.passed for r in self.results)
+
+    @property
+    def n_failed(self) -> int:
+        return sum(not r.passed for r in self.results)
+
+    def summary(self) -> dict:
+        """The compact pass/fail summary benchmarks embed next to rows."""
+        by_rule: dict[str, dict] = {}
+        for r in self.results:
+            cell = by_rule.setdefault(r.rule, {"checked": 0, "failed": 0})
+            cell["checked"] += 1
+            cell["failed"] += not r.passed
+        return {"passed": self.passed, "checks": len(self.results),
+                "failed": self.n_failed, "quick": self.quick,
+                "by_rule": by_rule}
+
+    def as_dict(self) -> dict:
+        return {
+            "passed": self.passed,
+            "elapsed_s": round(self.elapsed_s, 1),
+            "summary": self.summary(),
+            "results": [r.as_dict() for r in self.results],
+        }
+
+    def human_report(self) -> str:
+        lines = []
+        by_rule: dict[str, list[RuleResult]] = {}
+        for r in self.results:
+            by_rule.setdefault(r.rule, []).append(r)
+        for rule, rs in sorted(by_rule.items()):
+            n_bad = sum(not r.passed for r in rs)
+            mark = "FAIL" if n_bad else "ok"
+            lines.append(f"[{mark:4s}] {rule}: {len(rs) - n_bad}/{len(rs)} "
+                         f"entry points clean")
+            for r in rs:
+                if r.passed:
+                    continue
+                for v in r.violations:
+                    where = f"  {v.provenance}" if v.provenance else ""
+                    lines.append(f"       ✗ {r.entry_point}: {v.message}"
+                                 f"{where}")
+        verdict = "PASS" if self.passed else "FAIL"
+        lines.append(f"audit: {verdict} ({len(self.results)} checks, "
+                     f"{self.n_failed} failed, {self.elapsed_s:.1f}s)")
+        return "\n".join(lines)
+
+
+def _group(violations: list[Violation], rule: str,
+           entry_point: str) -> RuleResult:
+    mine = tuple(v for v in violations
+                 if v.rule == rule and v.entry_point == entry_point)
+    return RuleResult(rule=rule, entry_point=entry_point,
+                      passed=not mine, violations=mine)
+
+
+def run_audit(quick: bool = False, run_exec: bool = True,
+              entry_filter: str = "", rule_filter: str = "",
+              src_root: str = "src/repro") -> AuditReport:
+    """The whole gate. ``run_exec=False`` skips the behavioral checks
+    (retrace sentinel / donation), which execute tiny problems — everything
+    else is pure tracing + AST."""
+    t0 = time.time()
+    results: list[RuleResult] = []
+
+    def want(rule_name: str) -> bool:
+        return not rule_filter or rule_filter in rule_name
+
+    # -- jaxpr rules over the traced surface --------------------------------
+    for ep in build_targets(quick=quick):
+        if entry_filter and entry_filter not in ep.name:
+            continue
+        applicable = [r for r in RULES if want(r.name) and r.applies(ep)]
+        if not applicable:
+            continue
+        closed = ep.build()
+        for rule in applicable:
+            try:
+                vs = rule.check(ep, closed)
+            except Exception as e:  # a crashed rule is a failed rule
+                vs = [Violation(rule.name, ep.name,
+                                f"rule crashed: {type(e).__name__}: {e}")]
+            results.append(RuleResult(
+                rule=rule.name, entry_point=ep.name, passed=not vs,
+                violations=tuple(vs)))
+
+    # -- fp32 ≡ pre-axis equation identity ----------------------------------
+    if want("precision_boundary") and not entry_filter:
+        from repro.core.level_grams import PADDED_SKETCHES
+
+        for family in PADDED_SKETCHES if not quick else ("gaussian",):
+            vs = check_fp32_identity(family)
+            results.append(RuleResult(
+                rule="precision_boundary",
+                entry_point=f"provider:{family}:fp32:identity",
+                passed=not vs, violations=tuple(vs)))
+
+    # -- source lints -------------------------------------------------------
+    if not entry_filter:
+        lint_vs = lint_tree(src_root)
+        for rule_name in ("key_hygiene", "status_lattice"):
+            if not want(rule_name):
+                continue
+            mine = tuple(v for v in lint_vs if v.rule == rule_name)
+            results.append(RuleResult(
+                rule=rule_name, entry_point=src_root, passed=not mine,
+                violations=mine))
+
+    # -- behavioral checks (execute tiny problems) --------------------------
+    if run_exec and not entry_filter and want("retrace_sentinel"):
+        from .retrace import run_behavioral_checks
+
+        vs = run_behavioral_checks()
+        eps = sorted({v.entry_point for v in vs}) or ["engine:lifecycle"]
+        for ep_name in eps:
+            results.append(_group(list(vs), "retrace_sentinel", ep_name))
+
+    return AuditReport(results=results, elapsed_s=time.time() - t0,
+                       quick=quick)
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.audit",
+        description="statically audit the solver stack's invariants")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write the machine-readable AUDIT.json")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-fast subset (fp32 only, one service class)")
+    ap.add_argument("--no-exec", action="store_true",
+                    help="skip the behavioral retrace/donation checks")
+    ap.add_argument("--entry", default="",
+                    help="only entry points whose name contains this")
+    ap.add_argument("--rule", default="",
+                    help="only rules whose name contains this")
+    ap.add_argument("--src-root", default="src/repro")
+    args = ap.parse_args(argv)
+
+    report = run_audit(quick=args.quick, run_exec=not args.no_exec,
+                       entry_filter=args.entry, rule_filter=args.rule,
+                       src_root=args.src_root)
+    print(report.human_report())
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report.as_dict(), f, indent=2)
+        print(f"wrote {args.json}")
+    return 0 if report.passed else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,62 +1,18 @@
-"""Parse collective-communication bytes out of optimized HLO text.
+"""Collective-communication accounting — delegation onto the audit engine.
 
 ``cost_analysis()`` does not report collective traffic, so the roofline's
 collective term comes from summing operand sizes of every all-gather /
 all-reduce / reduce-scatter / all-to-all / collective-permute in
-``compiled.as_text()``.
+``compiled.as_text()``. The parser — plus the buffer-donation scanner the
+retrace audit uses on the same HLO text — lives in
+:mod:`repro.analysis.audit.hlo_utils`; this module keeps the historical
+import surface.
 """
 
 from __future__ import annotations
 
-import re
-from collections import defaultdict
-
-_DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
-    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
-    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
-}
-
-COLLECTIVE_OPS = (
-    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-    "collective-permute", "collective-broadcast",
+from .audit.hlo_utils import (  # noqa: F401
+    COLLECTIVE_OPS,
+    collective_bytes_from_hlo,
+    donated_input_indices,
 )
-
-# e.g.  %ag = bf16[4,128,256]{2,1,0} all-gather(...)
-_LINE_RE = re.compile(
-    r"=\s*(?:\([^)]*\)\s*)?((?:\w+\[[0-9,]*\][^ ]*\s*,?\s*)+)\s*"
-    r"(" + "|".join(COLLECTIVE_OPS) + r")(?:-start|-done)?\("
-)
-_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
-
-
-def _shape_bytes(dtype: str, dims: str) -> int:
-    n = 1
-    if dims:
-        for d in dims.split(","):
-            n *= int(d)
-    return n * _DTYPE_BYTES.get(dtype, 4)
-
-
-def collective_bytes_from_hlo(hlo_text: str) -> dict:
-    """Returns {'total_bytes', 'by_op': {op: {'bytes', 'count'}}} where bytes
-    is the summed *output* operand size of each collective instruction
-    (counting -start once, ignoring -done duplicates)."""
-    by_op: dict = defaultdict(lambda: {"bytes": 0, "count": 0})
-    for line in hlo_text.splitlines():
-        s = line.strip()
-        if not any(op in s for op in COLLECTIVE_OPS):
-            continue
-        if "-done(" in s or "-done.1(" in s:
-            continue  # counted at -start
-        m = _LINE_RE.search(s)
-        if not m:
-            continue
-        shapes_str, op = m.group(1), m.group(2)
-        nbytes = sum(
-            _shape_bytes(dt, dims) for dt, dims in _SHAPE_RE.findall(shapes_str)
-        )
-        by_op[op]["bytes"] += nbytes
-        by_op[op]["count"] += 1
-    total = sum(v["bytes"] for v in by_op.values())
-    return {"total_bytes": total, "by_op": dict(by_op)}

@@ -13,10 +13,14 @@ two-pass: build a name → shape table from every instruction definition,
 then resolve each dot's lhs shape and contracting dims.
 
 Limitations (documented in EXPERIMENTS.md): while-loop bodies are counted
-once (the analysis sweep unrolls layer scans; the rwkv time scan gets an
-analytic correction in roofline.py); elementwise flops are ignored (≤ a
-few % for these workloads); cholesky/triangular-solve flops are added
-analytically by the caller when relevant (solver cells).
+once (the solver probe unrolls its PCG scan in the analysis sweep, so all
+iterations are present); elementwise flops are ignored (≤ a few % for
+these workloads); cholesky/triangular-solve flops are added analytically
+by the caller when relevant (``roofline.solver_model_flops``).
+
+``dot_flops_for_entry`` connects this counter to the audited solver
+surface: any entry point from ``repro.analysis.audit.entrypoints`` can be
+compiled for the host platform and measured without executing.
 """
 
 from __future__ import annotations
@@ -31,6 +35,8 @@ _DOT_LINE_RE = re.compile(
 )
 _CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
 _BATCH_RE = re.compile(r"lhs_batch_dims=\{([0-9,]*)\}")
+# operands carry inline shapes in newer HLO text: dot(f32[3,128,256]{...} %a, …)
+_OPERAND_RE = re.compile(rf"(?:{_DTYPES}\[([0-9,]*)\]\S*\s+)?%([\w.\-]+)")
 
 
 def _prod(dims_csv: str) -> int:
@@ -62,8 +68,13 @@ def iter_dots(hlo_text: str):
         mc = _CONTRACT_RE.search(line)
         if not mc:
             continue
-        first = operands.split(",")[0].strip().lstrip("%")
-        lhs_dims = shapes.get(first)
+        mo = _OPERAND_RE.search(operands)
+        if mo is None:
+            continue
+        if mo.group(1) is not None:         # inline-shaped operand
+            lhs_dims = [int(t) for t in mo.group(1).split(",") if t]
+        else:                               # name-referenced operand
+            lhs_dims = shapes.get(mo.group(2))
         if lhs_dims is None:
             continue
         contracted = 1
@@ -76,6 +87,25 @@ def iter_dots(hlo_text: str):
 def dot_flops_from_hlo(hlo_text: str) -> float:
     """Sum of 2·|out|·|contracted| over all dots (per device)."""
     return sum(fl for _, fl in iter_dots(hlo_text))
+
+
+def dot_flops_for_entry(entry_name: str) -> float:
+    """Per-device dot FLOPs of one audited solver entry point (exact name
+    from ``repro.analysis.audit.entrypoints.build_targets``), compiled for
+    the host platform — lowered and counted, never executed."""
+    import jax
+
+    from .audit.entrypoints import build_targets
+
+    for ep in build_targets(quick=False):
+        if ep.name == entry_name:
+            closed = ep.build()
+            fn = jax.core.jaxpr_as_fun(closed)
+            args = [jax.ShapeDtypeStruct(a.shape, a.dtype)
+                    for a in closed.in_avals]
+            hlo = jax.jit(fn).lower(*args).compile().as_text()
+            return dot_flops_from_hlo(hlo)
+    raise KeyError(f"unknown audit entry point: {entry_name}")
 
 
 def dot_inventory(hlo_text: str, top: int = 12):

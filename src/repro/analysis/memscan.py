@@ -1,65 +1,17 @@
-"""Jaxpr shape scans: verify streaming claims without running anything.
+"""Jaxpr shape scans — thin delegation onto the audit rule engine.
 
 The streamed sketch→Gram path promises "S never materializes": no
-intermediate of shape (B, m_max, n) anywhere in the program. These helpers
-walk a jaxpr (recursing into all sub-jaxprs — scan/while/cond/pjit bodies)
-and report every intermediate array, so tests can assert the promise and
-benchmarks can report an analytical peak-live-bytes next to the compiled
-``memory_analysis()`` numbers.
+intermediate of shape (B, m_max, n) anywhere in the program. The walker
+that verifies this lives in :mod:`repro.analysis.audit.jaxpr_utils` now
+(one shared recursion into scan/while/cond/pjit/shard_map bodies, used by
+the invariant auditor, the benchmarks and the tier-1 tests alike); this
+module keeps the historical import surface.
 """
 
 from __future__ import annotations
 
-from typing import Iterable
-
-import jax
-import numpy as np
-
-
-def _subjaxprs(eqn) -> Iterable:
-    for v in eqn.params.values():
-        if isinstance(v, jax.core.ClosedJaxpr):
-            yield v.jaxpr
-        elif isinstance(v, jax.core.Jaxpr):
-            yield v
-        elif isinstance(v, (tuple, list)):
-            for item in v:
-                if isinstance(item, jax.core.ClosedJaxpr):
-                    yield item.jaxpr
-                elif isinstance(item, jax.core.Jaxpr):
-                    yield item
-
-
-def iter_intermediate_avals(closed_jaxpr) -> Iterable:
-    """Yield the aval of every equation output, recursively."""
-    stack = [closed_jaxpr.jaxpr]
-    seen = set()
-    while stack:
-        jx = stack.pop()
-        if id(jx) in seen:
-            continue
-        seen.add(id(jx))
-        for eqn in jx.eqns:
-            for var in eqn.outvars:
-                aval = getattr(var, "aval", None)
-                if aval is not None and hasattr(aval, "shape"):
-                    yield aval
-            stack.extend(_subjaxprs(eqn))
-
-
-def max_intermediate_bytes(closed_jaxpr) -> tuple[int, tuple[int, ...]]:
-    """(bytes, shape) of the single largest intermediate array produced
-    anywhere in the program (sub-jaxprs included)."""
-    best, best_shape = 0, ()
-    for aval in iter_intermediate_avals(closed_jaxpr):
-        nbytes = int(np.prod(aval.shape, dtype=np.int64)) * aval.dtype.itemsize
-        if nbytes > best:
-            best, best_shape = nbytes, tuple(aval.shape)
-    return best, best_shape
-
-
-def has_intermediate_of_shape(closed_jaxpr, shape: tuple[int, ...]) -> bool:
-    """True if any intermediate anywhere has exactly this shape."""
-    shape = tuple(shape)
-    return any(tuple(a.shape) == shape
-               for a in iter_intermediate_avals(closed_jaxpr))
+from .audit.jaxpr_utils import (  # noqa: F401
+    has_intermediate_of_shape,
+    iter_intermediate_avals,
+    max_intermediate_bytes,
+)

@@ -13,7 +13,6 @@ from __future__ import annotations
 import json
 from pathlib import Path
 
-from repro.configs import SHAPES
 from .roofline import analyze_record, markdown_table
 
 
@@ -59,18 +58,21 @@ def roofline_section(results_dir="results/dryrun_analysis") -> str:
     out = [markdown_table(recs)]
     out.append("\nPer-cell bottleneck sentences:\n")
     for r in recs:
+        solver = r.arch.startswith("solver")
         if r.bottleneck == "memory":
             s = ("increase arithmetic intensity: fuse/avoid activation "
                  "round-trips, larger per-device microbatch, bf16 cache")
-            if r.step_kind == "decode":
-                s = ("decode is weight/cache-streaming bound — batch more "
-                     "sequences per chip or quantize weights/KV to int8")
-            if "rwkv" in r.arch and r.step_kind != "decode":
-                s = ("the O(T) recurrence streams the 40×64×64 state per "
-                     "token — chunked wkv turns it into MXU matmuls")
+            if solver:
+                s = ("the A-stream dominates — the sketch and each PCG "
+                     "matvec re-read the row shard; bf16 matvecs halve the "
+                     "stream, fusing sketch+first-matvec removes one pass")
         elif r.bottleneck == "collective":
-            s = ("reduce resharding: co-shard embed/logits with the attention "
-                 "layout; overlap FSDP gathers with compute; int8 grad RS")
+            s = ("reduce resharding: co-shard embed/logits with the "
+                 "attention layout; overlap gathers with compute")
+            if solver:
+                s = ("the per-iteration AᵀAv partial-sum all-reduce "
+                     "dominates — block PCG iterations or move to the "
+                     "one-psum ladder precompute (core.distributed)")
         else:
             s = "compute-bound — already at the MXU roofline knee"
         out.append(f"* **{r.arch}/{r.shape}** → {r.bottleneck}-bound; {s}.\n")

@@ -1,19 +1,25 @@
 """Roofline analysis from the dry-run artifacts (TPU v5e-class constants).
 
-Per (arch × shape × mesh) cell:
+Per (entry point × shape × mesh) cell:
     compute    = HLO_FLOPs        / (chips · 197e12 FLOP/s bf16)
     memory     = HLO_bytes        / (chips · 819e9  B/s HBM)
     collective = collective_bytes / (chips · 50e9   B/s per ICI link)
 
+The first-class records are the SOLVER entry points
+(``launch/dryrun_solver.py``: arch = ``solver-ridge-<variant>``, shape =
+``probe_2m_8k``): useful work is the paper's algorithm — sketch, Gram,
+Cholesky, PCG iterations — counted analytically from the probe dims, so
+``useful_ratio`` measures how much of the lowered program is the
+algorithm vs partitioning overhead. Legacy model-config cells (the
+pre-solver dry-run heritage) still analyze via a lazy ``repro.configs``
+fallback and are skipped when the config is unknown.
+
 Conventions (validated against the compiled artifacts):
 * ``cost_analysis()`` on a GSPMD-partitioned executable reports the
-  *per-device* program, so FLOPs/bytes are multiplied by the device count
-  to get cluster totals, then divided back per the formulas — i.e. the
-  terms below use per-device values directly (chips cancels).
+  *per-device* program, so the terms below use per-device values directly
+  (chips cancels in the time formulas).
 * collective_bytes comes from summing collective op output sizes in the
   optimized (post-partitioning) HLO — also per-device.
-* MODEL_FLOPS = 6·N·D for training (fwd 2ND + bwd 4ND), 2·N_active·D for
-  inference, with D = global tokens processed by the step.
 """
 
 from __future__ import annotations
@@ -22,11 +28,15 @@ import dataclasses
 import json
 from pathlib import Path
 
-from repro.configs import SHAPES, get_config
-
 PEAK_FLOPS = 197e12      # bf16 / chip
 HBM_BW = 819e9           # B/s / chip
 ICI_BW = 50e9            # B/s / link
+
+# the ridge-probe dims every solver dry-run cell uses
+# (launch/dryrun_solver.py)
+SOLVER_SHAPES = {
+    "probe_2m_8k": dict(n=1 << 21, d=8192, c=1024, m=16384, pcg_iters=10),
+}
 
 
 @dataclasses.dataclass
@@ -51,44 +61,42 @@ class Roofline:
         return dataclasses.asdict(self)
 
 
+def solver_model_flops(arch: str, shape: str) -> float:
+    """Analytic FLOPs of one adaptive phase of the paper's solver at the
+    probe dims: sketch + Gram + Cholesky + PCG iterations. This is the
+    'useful work' numerator — anything the lowered HLO does beyond it is
+    partitioning/layout overhead."""
+    dims = SOLVER_SHAPES[shape]
+    n, d, c, m, iters = (dims["n"], dims["d"], dims["c"], dims["m"],
+                         dims["pcg_iters"])
+    if "gaussian" in arch:
+        sketch = 2.0 * m * n * d          # dense S @ A
+    else:
+        sketch = 2.0 * n * d              # SJLT: each row touched once
+    gram = 2.0 * m * d * d                # SAᵀ SA
+    chol = d ** 3 / 3.0
+    # per PCG iteration: Hv = Aᵀ(Av) on the (d, c) RHS block + the
+    # two (d, d)-triangular preconditioner solves on (d, c)
+    pcg = iters * (4.0 * n * d * c + 2.0 * d * d * c)
+    return sketch + gram + chol + pcg
+
+
 def model_flops_for(arch: str, shape: str) -> float:
+    """Useful-FLOPs numerator for any dry-run record; solver cells are
+    analytic (above), legacy model cells go through ``repro.configs``."""
+    if arch.startswith("solver"):
+        return solver_model_flops(arch, shape)
+    # legacy transformer cells (pre-solver dry-run heritage)
+    from repro.configs import SHAPES, get_config
+
     cfg = get_config(arch)
     spec = SHAPES[shape]
     n_active = cfg.active_param_count()
-    n_total = cfg.param_count()
     if spec.step == "train":
-        tokens = spec.global_batch * spec.seq_len
-        return 6.0 * n_active * tokens
+        return 6.0 * n_active * spec.global_batch * spec.seq_len
     if spec.step == "prefill":
-        tokens = spec.global_batch * spec.seq_len
-        return 2.0 * n_active * tokens
-    # decode: one token per sequence
-    return 2.0 * n_active * spec.global_batch
-
-
-def scan_corrections(arch: str, shape: str, chips: int) -> tuple[float, float]:
-    """Analytic per-device (flops, bytes) for time-major ``lax.scan`` bodies
-    that XLA's cost model counts once (the layer scans are unrolled in the
-    analysis sweep, but rwkv6's wkv recurrence scans over T and cannot be
-    unrolled at T = 4k–500k). Per step and head: y = Sᵀr (2·hd²), outer
-    k·vᵀ (hd²), decay·S + add (2·hd²) ⇒ ≈5·hd² flops; state RW ⇒ ≈8·hd²
-    bytes (f32). Training doubles for the backward scan. Everything else
-    (attention, MLPs, RG-LRU associative_scan) is fully counted."""
-    cfg = get_config(arch)
-    if "rwkv" not in cfg.pattern:
-        return 0.0, 0.0
-    spec = SHAPES[shape]
-    T = spec.seq_len if spec.step in ("train", "prefill") else 1
-    if T <= 1:
-        return 0.0, 0.0
-    dp = max(chips // 16, 1)  # model=16 on both production meshes
-    b_loc = max(spec.global_batch // dp, 1)
-    H, hd = cfg.n_rwkv_heads, cfg.rwkv_head_dim
-    per_step_flops = 5.0 * hd * hd * H * b_loc
-    per_step_bytes = 8.0 * hd * hd * H * b_loc  # f32 state read+write
-    mult = 2.0 if spec.step == "train" else 1.0  # bwd replays the scan
-    extra_steps = (T - 1) * cfg.n_layers * mult
-    return extra_steps * per_step_flops, extra_steps * per_step_bytes
+        return 2.0 * n_active * spec.global_batch * spec.seq_len
+    return 2.0 * n_active * spec.global_batch   # decode: 1 token/sequence
 
 
 def analyze_record(rec: dict) -> Roofline | None:
@@ -101,15 +109,15 @@ def analyze_record(rec: dict) -> Roofline | None:
     flops_dev = max(rec.get("hlo_dot_flops") or 0.0, rec["flops"] or 0.0)
     bytes_dev = rec["bytes_accessed"] or 0.0
     coll_dev = rec["collectives"]["total_bytes"]
-    cf, cb = scan_corrections(rec["arch"], rec["shape"], chips)
-    flops_dev += cf
-    bytes_dev += cb
 
     compute_s = flops_dev / PEAK_FLOPS
     memory_s = bytes_dev / HBM_BW
     collective_s = coll_dev / ICI_BW
 
-    mf = model_flops_for(rec["arch"], rec["shape"])
+    try:
+        mf = model_flops_for(rec["arch"], rec["shape"])
+    except KeyError:
+        return None     # unknown legacy config: nothing to normalize by
     hlo_total = flops_dev * chips
     useful = mf / hlo_total if hlo_total else 0.0
     terms = {"compute": compute_s, "memory": memory_s,

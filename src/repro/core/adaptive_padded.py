@@ -94,7 +94,7 @@ import jax.numpy as jnp
 
 from repro.kernels.precision import canonical_compute_dtype
 
-from .level_grams import PADDED_SKETCHES, get_provider
+from .level_grams import get_provider
 from .quadratic import Quadratic, weighted_gram
 from .solvers import c_alpha_rho, rho_to_rate
 from .status import SolveStatus
@@ -570,7 +570,8 @@ def prepare_padded_solve(
     return pre, _init_padded_state(q, pre, init_level, tol)
 
 
-@partial(jax.jit, static_argnames=("method", "max_iters", "rho", "guards"))
+@partial(jax.jit, static_argnames=("method", "max_iters", "rho", "guards"),
+         donate_argnames=("st",))
 def padded_solve_segment(
     q: Quadratic,
     pre: PaddedPrecompute,
@@ -586,7 +587,13 @@ def padded_solve_segment(
     """Advance the adaptive loop to ``trip_limit`` total trips (a traced
     int32 scalar — ONE compiled executable serves every segment size and
     every resume point). State round-trips losslessly, so dispatching
-    k-trip segments back-to-back is bitwise the monolithic while_loop."""
+    k-trip segments back-to-back is bitwise the monolithic while_loop.
+
+    ``st`` is DONATED: the 20-field state aliases its output buffers, so a
+    long segmented solve holds one state's worth of memory instead of two
+    per dispatch. Callers must treat the passed state as consumed — the
+    host driver (``core.robust``) rebinds it on every segment; anything a
+    checkpoint persists is read from the *returned* state."""
     if method not in PADDED_METHODS:
         raise ValueError(
             f"padded engine supports {PADDED_METHODS}, got {method!r}")

@@ -40,7 +40,6 @@ Two execution paths, same math:
 
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

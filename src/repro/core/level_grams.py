@@ -69,7 +69,9 @@ import jax.numpy as jnp
 
 from repro.kernels import ops
 from repro.kernels.gaussian_gram import gaussian_s_dense, resolve_stream
-from repro.kernels.precision import COMPUTE_DTYPES, canonical_compute_dtype
+# COMPUTE_DTYPES is a deliberate re-export (launch/serve, examples,
+# benchmarks all import it from here)
+from repro.kernels.precision import COMPUTE_DTYPES, canonical_compute_dtype  # noqa: F401
 
 from .quadratic import Quadratic
 

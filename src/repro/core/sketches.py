@@ -24,7 +24,6 @@ per-shard randomness (block sketching) — see ``distributed.py``.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
 from typing import Literal
 

@@ -22,10 +22,9 @@ vectors — one compiled step advances B independent problems.
 
 from __future__ import annotations
 
-import dataclasses
 import math
 from functools import partial
-from typing import Callable, NamedTuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -14,7 +14,6 @@ support ``state()``/``restore()`` for exact resume after preemption.
 from __future__ import annotations
 
 import dataclasses
-from pathlib import Path
 
 import jax
 import numpy as np

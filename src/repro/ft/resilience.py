@@ -11,7 +11,6 @@ import statistics
 import time
 from typing import Callable, Optional
 
-import jax
 
 # jax ≥ 0.5 exposes AxisType and takes AbstractMesh(axis_sizes, axis_names);
 # 0.4.x has neither the enum nor that signature (AbstractMesh takes a

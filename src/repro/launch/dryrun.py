@@ -21,7 +21,7 @@ from pathlib import Path
 
 import jax
 
-from repro.configs import ARCHS, ALIASES, SHAPES, get_config, skip_reason
+from repro.configs import ALIASES, SHAPES, get_config, skip_reason
 from repro.launch.mesh import make_production_mesh
 from repro.analysis.collectives import collective_bytes_from_hlo
 from repro.analysis.hloflops import dot_flops_from_hlo

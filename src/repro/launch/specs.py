@@ -9,7 +9,6 @@ the real init functions, so the dry-run lowers the exact production program.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Callable
 
 import jax

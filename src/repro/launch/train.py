@@ -16,11 +16,11 @@ import time
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
 
 from repro.configs import get_config
 from repro.data.pipeline import SyntheticLM
-from repro.dist.sharding import input_specs_for, param_specs
+from repro.dist.sharding import param_specs
 from repro.ft import CheckpointManager, PreemptionHandler, StragglerWatchdog
 from repro.launch.mesh import make_host_mesh
 from repro.models import init_params

@@ -16,7 +16,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from .config import ModelConfig, MOE_KINDS, WINDOWED_KINDS
+from .config import ModelConfig, WINDOWED_KINDS
 
 
 # ---------------------------------------------------------------------------

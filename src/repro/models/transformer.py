@@ -12,14 +12,12 @@ Design points (see DESIGN.md):
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from . import layers as L
-from .config import ATTN_KINDS, MOE_KINDS, WINDOWED_KINDS, ModelConfig
+from .config import MOE_KINDS, WINDOWED_KINDS, ModelConfig
 
 
 # ---------------------------------------------------------------------------

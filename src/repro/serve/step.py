@@ -6,9 +6,7 @@ seq_len-sized cache; ``prefill_*`` cells lower ``prefill_step``.
 
 from __future__ import annotations
 
-from typing import Any, Optional
 
-import jax
 import jax.numpy as jnp
 
 from repro.models import build_cross_cache, encode, forward, init_cache

@@ -6,8 +6,7 @@ shardings from ``repro.dist.sharding``.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -142,7 +141,6 @@ def blocked_lm_loss(params, cfg: ModelConfig, tokens, labels, mask, *,
     """
     from repro.models import transformer as T
     from repro.models import layers as L
-    import math as _m
 
     B, S = tokens.shape
     # forward to final hidden states (logits path bypassed)

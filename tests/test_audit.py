@@ -1,0 +1,154 @@
+"""The invariant auditor audits itself: every rule must FAIL on its
+seeded-violation fixture (with provenance pointing into the fixture) and
+pass on the real stack — a rule that cannot catch its own negative
+control is a rubber stamp, not a gate."""
+
+import jax.numpy as jnp
+
+from repro.analysis.audit import RULES, fixtures as fx
+from repro.analysis.audit.ast_rules import lint_module_source
+from repro.analysis.audit.hlo_utils import (
+    collective_bytes_from_hlo,
+    donated_input_indices,
+)
+from repro.analysis.audit.runner import run_audit
+
+RULE = {r.name: r for r in RULES}
+
+
+def _check(rule_name, ep):
+    rule = RULE[rule_name]
+    assert rule.applies(ep), (rule_name, ep.name)
+    return rule.check(ep, ep.build())
+
+
+# ---------------------------------------------------------------------------
+# negative controls: each rule catches its seeded violation
+# ---------------------------------------------------------------------------
+
+def test_one_touch_catches_dense_sketch():
+    vs = _check("one_touch", fx.dense_sketch_ep())
+    msgs = " ".join(v.message for v in vs)
+    assert "dense sketch materialized" in msgs
+    assert "exceeds the live-set budget" in msgs       # peak rule fires too
+    assert any("fixtures.py" in v.provenance for v in vs)
+
+
+def test_one_touch_catches_fp32_a_copy():
+    vs = _check("one_touch", fx.a_copy_ep())
+    assert len(vs) == 1
+    assert "(B, n, d) copy of A" in vs[0].message
+    assert "fixtures.py" in vs[0].provenance
+
+
+def test_collective_inventory_catches_double_psum():
+    vs = _check("collective_inventory", fx.double_psum_ep())
+    assert any("2 psums" in v.message for v in vs)
+
+
+def test_collective_inventory_catches_loop_collective():
+    vs = _check("collective_inventory", fx.loop_collective_ep())
+    assert any("inside the adaptive while_loop body" in v.message
+               for v in vs)
+    assert any("fixtures.py" in v.provenance for v in vs)
+
+
+def test_precision_boundary_catches_bf16_pipeline():
+    vs = _check("precision_boundary", fx.bf16_cholesky_ep())
+    msgs = " ".join(v.message for v in vs)
+    assert "cholesky" in msgs                          # bf16 factorization
+    assert "while_loop carries a bfloat16" in msgs     # bf16 loop state
+    assert "accumulates into bfloat16" in msgs         # bf16 contraction
+
+
+def test_key_hygiene_catches_reused_literals():
+    vs = lint_module_source(fx.REUSED_ROOT_KEY_SRC, "fx.roots", "fx.py")
+    assert len(vs) == 1 and "PRNGKey(42) constructed twice" in vs[0].message
+    vs = lint_module_source(fx.REUSED_FOLD_IN_SRC, "fx.folds", "fx.py")
+    assert len(vs) == 1 and "fold_in" in vs[0].message
+    assert vs[0].provenance.startswith("fx.py:")
+
+
+def test_status_lattice_catches_bare_literal_compare():
+    vs = lint_module_source(fx.BARE_STATUS_SRC, "fx.status", "fx.py")
+    assert len(vs) == 1 and vs[0].rule == "status_lattice"
+    assert not lint_module_source(fx.CLEAN_STATUS_SRC, "fx.ok", "fx.py")
+
+
+def test_retrace_sentinel_catches_leaky_static():
+    """A per-request value routed through a static argument recompiles on
+    every fresh request — the cache-size delta the sentinel keys on."""
+    leaky = fx.make_leaky_static_fn()
+    x = jnp.ones((4,))
+    leaky(x, nu=0.1)
+    before = leaky._cache_size()
+    leaky(x, nu=0.2)                  # same shapes, fresh VALUE
+    assert leaky._cache_size() == before + 1
+
+
+def test_donation_audit_catches_undonated_state():
+    undonated = fx.make_undonated_segment_fn()
+    st = {"x": jnp.ones((3,)), "r": jnp.zeros((3,))}
+    text = undonated.lower(jnp.float32(1.0), st).as_text()
+    assert donated_input_indices(text) == set()
+
+
+# ---------------------------------------------------------------------------
+# positive controls: the real stack passes, end to end through the runner
+# ---------------------------------------------------------------------------
+
+def test_runner_quick_jaxpr_rules_pass():
+    """The CI-quick provider surface is clean under every jaxpr rule (the
+    full matrix runs in the CI audit job; this keeps tier-1 honest)."""
+    report = run_audit(quick=True, run_exec=False,
+                       entry_filter="provider:gaussian")
+    assert report.results, "no entry points matched"
+    assert report.passed, report.human_report()
+
+
+def test_runner_source_lints_pass_on_src():
+    report = run_audit(quick=True, run_exec=False, rule_filter="hygiene")
+    assert any(r.rule == "key_hygiene" for r in report.results)
+    assert report.passed, report.human_report()
+
+
+def test_real_segment_state_is_fully_donated():
+    """The production segment executable donates all 20 PaddedState leaves
+    (the fix the auditor forced): re-dispatch reuses the state buffers."""
+    from repro.analysis.audit.retrace import check_state_donation
+
+    assert check_state_donation() == []
+
+
+def test_report_summary_shape():
+    """benchmarks/run.py embeds summary(); pin its schema."""
+    report = run_audit(quick=True, run_exec=False,
+                       entry_filter="provider:gaussian:fp32:unweighted")
+    s = report.summary()
+    assert set(s) == {"passed", "checks", "failed", "quick", "by_rule"}
+    assert s["checks"] == sum(c["checked"] for c in s["by_rule"].values())
+    d = report.as_dict()
+    assert {r["rule"] for r in d["results"]} == set(s["by_rule"])
+
+
+def test_collective_bytes_parser_on_synthetic_hlo():
+    hlo = """
+  %ar = f32[9,3,16,16]{3,2,1,0} all-reduce(f32[9,3,16,16]{3,2,1,0} %x)
+  %ag = bf16[4,8]{1,0} all-gather-start(bf16[4,8]{1,0} %y)
+  %agd = bf16[4,8]{1,0} all-gather-done(bf16[4,8]{1,0} %ag)
+"""
+    got = collective_bytes_from_hlo(hlo)
+    assert got["by_op"]["all-reduce"]["bytes"] == 9 * 3 * 16 * 16 * 4
+    assert got["by_op"]["all-gather"]["count"] == 1
+    assert got["total_bytes"] == 9 * 3 * 16 * 16 * 4 + 4 * 8 * 2
+
+
+def test_fixture_registry_all_fail():
+    """Every registered fixture is caught by at least one rule — nothing
+    in the negative-control set silently goes green."""
+    for mk in fx.ALL_FIXTURES:
+        ep = mk()
+        closed = ep.build()
+        total = sum(len(r.check(ep, closed)) for r in RULES
+                    if r.applies(ep))
+        assert total > 0, ep.name

@@ -35,7 +35,6 @@ def test_blocked_ce_matches_reference(arch, chunks):
 
 
 def test_blocked_ce_train_step_converges():
-    import dataclasses
     from repro.train import AdamWConfig, TrainConfig, init_opt_state
     from repro.train.step import make_train_step
 

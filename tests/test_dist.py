@@ -2,7 +2,6 @@
 XLA_FLAGS=--xla_force_host_platform_device_count=8 so the main pytest
 process keeps the real (1-)device view."""
 
-import json
 import subprocess
 import sys
 import textwrap
@@ -12,7 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.dist.compress import compress_decompress, init_ef, compress_tree
+from repro.dist.compress import init_ef, compress_tree
 
 
 def _run_subprocess(code: str) -> str:

@@ -5,7 +5,6 @@ Hypothesis property tests on sketch invariants live in test_properties.py
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import effective_dimension, make_sketch
 from repro.core.effective_dim import (

@@ -48,7 +48,7 @@ from repro.ft.faults import (
     inject_nan_row,
     rank_deficient_matrix,
 )
-from repro.serve.solver_service import ShapeClass, SolverService
+from repro.serve.solver_service import SolverService
 
 B, N, D, M_MAX = 4, 128, 16, 32
 NEIGHBOR_TOL = 1e-6

@@ -3,7 +3,6 @@ straggler detection, preemption handling, data pipeline determinism."""
 
 import os
 import signal
-import threading
 import time
 
 import jax

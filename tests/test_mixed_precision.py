@@ -27,7 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.analysis.memscan import max_intermediate_bytes
+from repro.analysis.audit import max_intermediate_bytes
 from repro.core.adaptive_padded import (
     doubling_ladder,
     padded_adaptive_solve_batched,

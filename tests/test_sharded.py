@@ -12,7 +12,6 @@ single-device satellites run in-process. CI additionally runs this module
 as its own forced-8-device job including the slow cases.
 """
 
-import json
 import subprocess
 import sys
 import textwrap
@@ -106,7 +105,7 @@ def test_shard_level_grams_match_replicated_reference():
     stack, and no global-row-count intermediate exists per shard."""
     out = _run_subprocess("""
         import jax, jax.numpy as jnp, numpy as np
-        from repro.analysis.memscan import has_intermediate_of_shape
+        from repro.analysis.audit import collect_eqns, has_intermediate_of_shape
         from repro.core.adaptive_padded import doubling_ladder
         from repro.core.distributed import shard_level_grams, shard_quadratic
         from repro.core.level_grams import (PADDED_SKETCHES,
@@ -124,22 +123,6 @@ def test_shard_level_grams_match_replicated_reference():
         q_sh = from_least_squares_batch(A[0], Y, 0.1)
         assert q_sh.shared_A and not q_per.shared_A
 
-        def psum_eqns(closed):
-            out, stack = [], [closed.jaxpr]
-            while stack:
-                jx = stack.pop()
-                for eqn in jx.eqns:
-                    if eqn.primitive.name == "psum":
-                        out.append(eqn)
-                    for v in eqn.params.values():
-                        vs = v if isinstance(v, (tuple, list)) else [v]
-                        for item in vs:
-                            if hasattr(item, "jaxpr"):
-                                stack.append(item.jaxpr)
-                            elif hasattr(item, "eqns"):
-                                stack.append(item)
-            return out
-
         for sketch in PADDED_SKETCHES:
             prov = get_provider(sketch)
             emu = BlockEmulationProvider(sketch, K)
@@ -155,7 +138,7 @@ def test_shard_level_grams_match_replicated_reference():
                 jx = jax.make_jaxpr(
                     lambda q, ks: shard_level_grams(prov, ks, q, ladder,
                                                     mesh))(q, keys)
-                ps = psum_eqns(jx)
+                ps = collect_eqns(jx, "psum")
                 assert len(ps) == 1, (sketch, len(ps))
                 L = len(ladder)
                 assert tuple(ps[0].outvars[0].aval.shape) == (L, B, d, d)

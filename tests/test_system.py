@@ -4,18 +4,12 @@ launcher integration."""
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 
 from repro.core import (
     AdaptiveConfig,
     adaptive_solve,
     cg_solve,
-    direct_solve,
-    factorize,
     from_least_squares,
-    make_sketch,
-    run_fixed,
 )
 
 
