@@ -1,0 +1,172 @@
+"""Regularization-path engine vs a per-λ loop (DESIGN.md §13).
+
+The path question: given B problems × a P-point λ grid, the ladder-level
+Grams are λ-free, so ONE one-touch sketch pass should serve the whole
+grid — per-λ cost collapses to the ν²Λ-shifted factorizations + a
+warm-started solve. This bench measures exactly that collapse:
+
+* ``single_pre_s``  — ONE single-λ precompute (sketch pass + ladder
+  factorizations), the unit the grid is budgeted against;
+* ``grid_pre_s``    — the ENTIRE grid's precompute in path mode: one
+  ``prepare_path_ladder`` pass + P per-λ shifted factorizations off the
+  shared ladder. The headline claim is ``grid_pre_s ≤ 2 × single_pre_s``;
+* ``path_s`` vs ``loop_s`` — full path solve (warm-started x + level)
+  vs a per-λ loop of independent engine calls, each paying its own
+  sketch pass (``speedup_vs_loop``, claimed ≥ 6× at CI shape);
+* sketch-pass counts (1 vs P) and the traced peak intermediate bytes of
+  both programs;
+* ``max_rel_err`` — per-λ path solutions vs the independent solves
+  (claimed ≤ 1e-5; both sides anchored at the m = d ladder level so the
+  comparison isn't polluted by the cold level-0 certificate corner).
+
+    PYTHONPATH=src python benchmarks/bench_path.py [--B 4] [--P 16]
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.bench_batched import heterogeneous_batch, time_best
+from benchmarks.common import emit
+from repro.core.adaptive_padded import (
+    doubling_ladder,
+    padded_adaptive_solve_batched,
+    padded_path_solve_batched,
+    prepare_padded_solve,
+    prepare_path_ladder,
+)
+from repro.core.precond import shifted_ladder_inverses
+from repro.core.quadratic import from_least_squares_batch
+
+
+def _peak_bytes(fn, *args) -> int:
+    from repro.analysis.audit import jaxpr_utils as ju
+
+    return ju.max_intermediate_bytes(jax.make_jaxpr(fn)(*args))[0]
+
+
+def run(B: int = 4, n: int = 16384, d: int = 32, m_max: int = 64,
+        P: int = 16, reps: int = 3, tol: float = 1e-12, nu_min: float = 0.05,
+        seed: int = 42, sketch: str = "gaussian") -> list[dict]:
+    """Emit + return one row for the path engine at this shape.
+
+    ``nu_min`` floors the grid at λmin(H) = ν²: the ≤1e-5 agreement claim
+    compares two independently-converged δ̃ ≈ 1e-12 solves, whose x-space
+    gap scales like √(δ̃/ν²) — an ill-conditioning amplification, not a
+    path-engine error."""
+    A, Y, _ = heterogeneous_batch(B, n, d)
+    nus = jnp.asarray(np.geomspace(1.0, nu_min, P), jnp.float32)
+    qb = from_least_squares_batch(A, Y, jnp.full((B,), 1.0, jnp.float32))
+    keys = jax.random.split(jax.random.PRNGKey(seed), B)
+    # anchor both sides at the m = d level: below it H_S ≈ ν²Λ and the
+    # cold δ̃(0) scale is inflated (the level-0 certificate corner)
+    ladder = doubling_ladder(m_max)
+    lvl0 = jnp.full((B,), ladder.index(min(d, m_max)), jnp.int32)
+
+    import dataclasses
+
+    def q_at(nu):
+        return dataclasses.replace(
+            qb, nu=jnp.full((B,), nu, qb.b.dtype))
+
+    path = lambda: padded_path_solve_batched(
+        qb, keys, nus, m_max=m_max, method="pcg", sketch=sketch,
+        max_iters=200, rho=0.5, tol=tol, init_level=lvl0)
+    loop_one = lambda nu: padded_adaptive_solve_batched(
+        q_at(nu), keys, m_max=m_max, method="pcg", sketch=sketch,
+        max_iters=200, rho=0.5, tol=tol, init_level=lvl0)
+    loop = lambda: [loop_one(float(nu))[0] for nu in nus]
+
+    # -- precompute budget: the WHOLE grid vs one single-λ precompute ------
+    single_pre = lambda: prepare_padded_solve(
+        q_at(1.0), keys, m_max=m_max, sketch=sketch)[0].pinvs
+
+    @jax.jit
+    def all_inverses(grams, nus, lam):
+        # all P shifted factorizations off the ONE shared ladder, in one
+        # dispatch — the per-λ cost path mode actually pays
+        return jax.vmap(lambda nu: shifted_ladder_inverses(
+            grams, jnp.full((B,), nu, grams.dtype), lam))(nus)
+
+    def grid_pre():
+        grams, _ = prepare_path_ladder(qb, keys, m_max=m_max, sketch=sketch)
+        return all_inverses(grams, nus, qb.lam_diag)
+
+    jax.block_until_ready(single_pre())                      # warm
+    jax.block_until_ready(grid_pre())
+    t_single_pre = time_best(single_pre, reps)
+    t_grid_pre = time_best(grid_pre, reps)
+
+    # -- full solves -------------------------------------------------------
+    xs_path, stats = path()                                  # warm + keep
+    xs_path = jax.block_until_ready(xs_path)
+    xs_loop = jax.block_until_ready(loop())
+    t_path = time_best(lambda: path()[0], reps)
+    t_loop = time_best(loop, reps)
+
+    rel = 0.0
+    for p in range(P):
+        num = jnp.linalg.norm(xs_path[p] - xs_loop[p], axis=-1)
+        den = jnp.linalg.norm(xs_loop[p], axis=-1)
+        rel = max(rel, float(jnp.max(num / den)))
+
+    peak_path = _peak_bytes(
+        lambda q, k, nu: padded_path_solve_batched(
+            q, k, nu, m_max=m_max, method="pcg", sketch=sketch,
+            max_iters=200, tol=tol)[0], qb, keys, nus)
+    peak_loop = _peak_bytes(
+        lambda q, k, nu: jnp.stack([
+            padded_adaptive_solve_batched(
+                dataclasses.replace(q, nu=nu[p]), k, m_max=m_max,
+                method="pcg", sketch=sketch, max_iters=200, tol=tol)[0]
+            for p in range(P)]),
+        qb, keys, jnp.broadcast_to(nus[:, None], (P, B)))
+
+    pre_ratio = t_grid_pre / t_single_pre
+    speedup = t_loop / t_path
+    row = {
+        "bench": "path", "method": "pcg", "sketch": sketch,
+        "B": B, "n": n, "d": d, "m_max": m_max, "P": P, "seed": seed,
+        "single_pre_s": round(t_single_pre, 4),
+        "grid_pre_s": round(t_grid_pre, 4),
+        "pre_ratio": round(pre_ratio, 2),
+        "path_s": round(t_path, 4),
+        "loop_s": round(t_loop, 4),
+        "speedup_vs_loop": round(speedup, 2),
+        "path_sketch_passes": int(stats["sketch_passes"]),
+        "loop_sketch_passes": P,
+        "path_peak_bytes": int(peak_path),
+        "loop_peak_bytes": int(peak_loop),
+        "max_rel_err": float(f"{rel:.2e}"),
+        "max_dtilde": float(
+            f"{float(np.max(np.asarray(stats['dtilde']))):.2e}"),
+        "pre_within_2x": bool(pre_ratio <= 2.0),
+        "speedup_ge_6x": bool(speedup >= 6.0),
+    }
+    emit(row)
+    return [row]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--B", type=int, default=4)
+    ap.add_argument("--n", type=int, default=16384)
+    ap.add_argument("--d", type=int, default=32)
+    ap.add_argument("--m-max", type=int, default=64)
+    ap.add_argument("--P", type=int, default=16)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--tol", type=float, default=1e-12)
+    ap.add_argument("--nu-min", type=float, default=0.05)
+    ap.add_argument("--sketch", default="gaussian")
+    args = ap.parse_args()
+    run(B=args.B, n=args.n, d=args.d, m_max=args.m_max, P=args.P,
+        reps=args.reps, tol=args.tol, nu_min=args.nu_min,
+        sketch=args.sketch)
+
+
+if __name__ == "__main__":
+    main()

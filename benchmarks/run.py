@@ -30,7 +30,7 @@ BENCH_JSON = "BENCH_solver.json"
 # agreement flags). Two rows with the same identity are the same benchmark
 # point — the newer one replaces the older on merge.
 _ID_FIELDS = ("bench", "method", "sketch", "family", "kind", "impl",
-              "dtype", "compute_dtype", "B", "n", "d", "m", "m_max",
+              "dtype", "compute_dtype", "B", "n", "d", "m", "m_max", "P",
               "devices", "K", "shards", "seed", "nu", "guards")
 
 
@@ -59,7 +59,7 @@ def main() -> None:
     ap.add_argument("--only", default="",
                     help="comma list: fig1,table1,table2,table3,fig4,"
                          "kernels,batched,sketch_gram,sharded,newton,guard,"
-                         "resume")
+                         "resume,path")
     ap.add_argument("--fast", action="store_true",
                     help="smaller grids (CI-scale)")
     ap.add_argument("--json", action="store_true",
@@ -67,10 +67,10 @@ def main() -> None:
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
-    from . import (bench_batched, bench_guard, bench_newton, bench_resume,
-                   bench_sharded, bench_sketch_gram, fig1_synthetic,
-                   fig4_realistic, kernels_bench, table1_mdelta,
-                   table2_complexity, table3_polyak)
+    from . import (bench_batched, bench_guard, bench_newton, bench_path,
+                   bench_resume, bench_sharded, bench_sketch_gram,
+                   fig1_synthetic, fig4_realistic, kernels_bench,
+                   table1_mdelta, table2_complexity, table3_polyak)
 
     jobs = {
         "fig1": lambda: fig1_synthetic.run(
@@ -111,6 +111,10 @@ def main() -> None:
             B=8 if args.fast else 32, n=256 if args.fast else 512,
             d=32 if args.fast else 64, m_max=64 if args.fast else 128,
             reps=5 if args.fast else 10,
+        ),
+        "path": lambda: bench_path.run(
+            B=4, n=8192 if args.fast else 16384, d=32, m_max=64, P=16,
+            reps=1 if args.fast else 3,
         ),
         "sharded": lambda: bench_sharded.run(
             B=2 if args.fast else 4, n=1024 if args.fast else 4096,

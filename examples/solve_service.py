@@ -27,6 +27,16 @@ kill → restart cycle:
     # ... SIGTERM mid-flush → "PREEMPTED at segment k", exit 75 ...
     PYTHONPATH=src python examples/solve_service.py --checkpoint-dir /tmp/ck \\
         --resume
+
+``--path N`` additionally submits N regularization-path requests
+(DESIGN.md §13): each is a λ grid answered by one ``PathSolution`` whose
+per-λ points carry full δ̃/m certificates, solved off ONE one-touch sketch
+pass with x and the sketch level warm-started point-to-point. The demo
+then re-submits one grid verbatim to show the fingerprint ladder cache
+serving repeated-A traffic without touching A (``cache_hit=True``,
+``sketch_passes=0``):
+
+    PYTHONPATH=src python examples/solve_service.py --requests 8 --path 4
 """
 
 import argparse
@@ -74,6 +84,10 @@ def main(argv=None):
                          "continues from the committed segment")
     ap.add_argument("--resume", action="store_true",
                     help="resume from --checkpoint-dir instead of wiping it")
+    ap.add_argument("--path", type=int, default=0,
+                    help="additionally submit this many regularization-path "
+                         "requests (8-point λ grids, one sketch pass each) "
+                         "and a repeated-A cache-hit round — DESIGN.md §13")
     args = ap.parse_args(argv)
 
     preempt = None
@@ -92,7 +106,7 @@ def main(argv=None):
                         fallback=not args.no_fallback,
                         segment_trips=args.segment_trips,
                         checkpoint_dir=args.checkpoint_dir or None,
-                        preempt=preempt)
+                        preempt=preempt, ladder_cache=bool(args.path))
     rng = np.random.default_rng(0)
     requests = {}
     for i in range(args.requests):
@@ -103,6 +117,16 @@ def main(argv=None):
         nu = float(rng.uniform(0.05, 0.5))
         rid = svc.submit(A, y, nu)
         requests[rid] = (A, y, nu)
+    path_requests = {}
+    for i in range(args.path):
+        n = int(rng.integers(64, 1500))
+        d = int(rng.integers(8, 100))
+        A = jax.random.normal(
+            jax.random.PRNGKey(50_000 + 2 * i), (n, d)) / np.sqrt(n)
+        y = jax.random.normal(jax.random.PRNGKey(50_001 + 2 * i), (n,))
+        nus = np.geomspace(1.0, 1e-2, 8)   # strong→weak: warm downhill
+        rid = svc.submit_path(A, y, nus)
+        path_requests[rid] = (A, y, nus)
 
     t0 = time.perf_counter()
     try:
@@ -117,17 +141,33 @@ def main(argv=None):
     counts: dict[str, int] = {}
     for s in sols.values():
         counts[s.status] = counts.get(s.status, 0) + 1
-    all_finite = all(bool(jnp.all(jnp.isfinite(s.x))) for s in sols.values())
+    path_sols = {rid: s for rid, s in sols.items() if rid in path_requests}
+    ridge_sols = {rid: s for rid, s in sols.items()
+                  if rid not in path_requests}
+    all_finite = all(
+        bool(jnp.all(jnp.isfinite(s.x))) for s in ridge_sols.values()
+    ) and all(bool(jnp.all(jnp.isfinite(p.x)))
+              for s in path_sols.values() for p in s.points)
 
-    ok = {rid: s for rid, s in sols.items() if s.converged}
+    ok = {rid: s for rid, s in ridge_sols.items() if s.converged}
     worst = 0.0
     for rid, s in ok.items():
         A, y, nu = requests[rid]
         x_star = direct_solve(from_least_squares(A, y, nu))
         rel = float(jnp.linalg.norm(s.x - x_star) / jnp.linalg.norm(x_star))
         worst = max(worst, rel)
+    # path audit: every λ point against its own dense direct solve
+    for rid, s in path_sols.items():
+        if not s.converged:
+            continue
+        A, y, nus = path_requests[rid]
+        for p in s.points:
+            x_star = direct_solve(from_least_squares(A, y, p.nu))
+            rel = float(jnp.linalg.norm(p.x - x_star)
+                        / jnp.linalg.norm(x_star))
+            worst = max(worst, rel)
 
-    print(f"{len(requests)} requests in {dt:.2f}s "
+    print(f"{len(requests) + len(path_requests)} requests in {dt:.2f}s "
           f"(incl. compile; {svc.stats['batches']} batches, "
           f"{svc.stats['padded_slots']} padded slots)")
     print("statuses: "
@@ -149,6 +189,26 @@ def main(argv=None):
               f"m_max={s.shape_class.m_max}) m_final={s.m_final:4d} "
               f"iters={s.iters:3d} doublings={s.doublings} "
               f"δ̃={s.delta_tilde:.2e}")
+    if path_sols:
+        s0 = next(iter(path_sols.values()))
+        print(f"path: {sum(s.converged for s in path_sols.values())}/"
+              f"{len(path_sols)} grids converged, "
+              f"{sum(s.sketch_passes for s in path_sols.values())} "
+              f"one-touch passes for "
+              f"{sum(len(s.points) for s in path_sols.values())} λ points; "
+              f"warm m trajectory (req {s0.req_id}): "
+              f"{tuple(p.m_final for p in s0.points)}")
+        # repeated-A: the fingerprint cache serves the λ-free ladder, the
+        # re-submitted grid never touches A
+        rid0 = min(path_requests)
+        A, y, nus = path_requests[rid0]
+        rid_warm = svc.submit_path(A, y, nus)
+        warm = svc.flush()[rid_warm]
+        match = all(bool(jnp.allclose(pw.x, pc.x)) for pw, pc in
+                    zip(warm.points, path_sols[rid0].points))
+        print(f"repeat-A path round: cache_hit={warm.cache_hit}, "
+              f"sketch_passes={warm.sketch_passes}, "
+              f"identical_solutions={int(match)}")
 
 
 if __name__ == "__main__":

@@ -25,8 +25,10 @@ from repro.core.adaptive_padded import (
     doubling_ladder,
     finalize_padded_solve,
     padded_adaptive_solve_batched,
+    padded_path_solve_batched,
     padded_solve_segment,
     prepare_padded_solve,
+    prepare_path_ladder,
 )
 from repro.core.level_grams import PADDED_SKETCHES, get_provider
 from repro.core.quadratic import Quadratic
@@ -199,6 +201,67 @@ def _newton_step_ep(family: str = "logistic") -> EntryPoint:
               "B": B, "n": N, "d": D})
 
 
+def _path_ladder_ep(family: str) -> EntryPoint:
+    """The λ-free path precompute (DESIGN.md §13): the one-touch ladder
+    pass + optional true-Gram precompute that one entire λ grid shares.
+    The same graph is the unit the serving ladder cache stores."""
+
+    def build():
+        q = _quadratic()
+        return jax.make_jaxpr(
+            lambda q, k: prepare_path_ladder(
+                q, k, m_max=M_MAX, sketch=family))(q, _keys())
+
+    return EntryPoint(
+        name=f"path:ladder:{family}", kind="path", build=build,
+        meta={"family": family, "compute_dtype": "fp32",
+              "B": B, "n": N, "d": D, "m_max": M_MAX})
+
+
+def _path_grid_ep(family: str, points: int = 3) -> EntryPoint:
+    """The FULL λ-grid path solve as ONE traced graph: the shared ladder
+    pass plus ``points`` warm-started per-λ solves. ``a_ref_build`` hands
+    the one-touch rule a single-point reference graph so it can verify
+    the grid adds ZERO extra consumers of A (self-calibrating — no
+    absolute count is asserted); the collective rule covers the per-point
+    while_loop bodies like any other engine graph."""
+
+    def graph(P):
+        q = _quadratic()
+
+        def fn(q, keys, nus):
+            return padded_path_solve_batched(
+                q, keys, nus, m_max=M_MAX, method="pcg", sketch=family)[0]
+
+        return jax.make_jaxpr(fn)(q, _keys(), _sds((P, B)))
+
+    return EntryPoint(
+        name=f"path:grid:{family}", kind="path",
+        build=lambda: graph(points),
+        meta={"family": family, "method": "pcg", "compute_dtype": "fp32",
+              "B": B, "n": N, "d": D, "m_max": M_MAX,
+              "grid_points": points, "a_ref_build": lambda: graph(1)})
+
+
+def _path_sharded_ep() -> EntryPoint:
+    """The sharded path precompute: the SAME per-shard one-touch pass +
+    ONE psum of the (L, B, d, d) level Grams serves the entire λ grid
+    (the grid itself adds no collectives — the level Grams are λ-free)."""
+
+    def build():
+        mesh = jax.make_mesh((1,), ("data",))
+        q = _quadratic()
+        return jax.make_jaxpr(
+            lambda q, k: prepare_path_ladder(
+                q, k, m_max=M_MAX, sketch="gaussian", mesh=mesh))(
+                    q, _keys())
+
+    return EntryPoint(
+        name="path:sharded:gaussian:fp32", kind="sharded", build=build,
+        meta={"family": "gaussian", "compute_dtype": "fp32",
+              "psum_budget": 1, "B": B, "n": N, "d": D, "m_max": M_MAX})
+
+
 def _service_pack_keys_ep() -> EntryPoint:
     """The pack path's slot-key derivation: ONE vmapped fold_in over the
     slot-id vector (real slots: req_id; padded slots: 2³²−1−slot)."""
@@ -259,7 +322,13 @@ def build_targets(quick: bool = False) -> list[EntryPoint]:
     for family in PADDED_SKETCHES:
         if quick and family != "gaussian":
             continue
+        eps.append(_path_ladder_ep(family))
+        eps.append(_path_grid_ep(family))
+    for family in PADDED_SKETCHES:
+        if quick and family != "gaussian":
+            continue
         eps.append(_sharded_ep(family))
+    eps.append(_path_sharded_ep())
     eps.append(_sharded_weighted_gram_ep())
     eps.append(_newton_inner_ep())
     eps.append(_newton_step_ep("logistic"))

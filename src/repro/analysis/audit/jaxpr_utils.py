@@ -154,6 +154,55 @@ def find_intermediates(closed_jaxpr,
     return out
 
 
+# Pure data movement: consuming A through these is a re-index of the same
+# touch, not a second pass over the data.
+_DATA_MOVEMENT_PRIMS = frozenset({
+    "convert_element_type", "reshape", "transpose", "broadcast_in_dim",
+    "slice", "dynamic_slice", "dynamic_update_slice", "squeeze", "pad",
+    "concatenate", "rev", "gather", "copy", "device_put", "stop_gradient",
+    "select_n",
+})
+
+
+def count_a_consumers(closed_jaxpr, n: int, d: int) -> int:
+    """Number of COMPUTE equations consuming an A-shaped operand — an
+    operand whose trailing dims are (≥n_rows, d) for any row count ≥ n
+    (covers both full A and row-sharded/padded variants; n-CHUNKED slices
+    of A are excluded on purpose: the chunks of one streaming pass are one
+    touch, and they enter through a `slice`, which is data movement).
+
+    Containers (pjit/while/scan/...) are not consumers themselves — their
+    bodies are walked instead, and walked PER OCCURRENCE (no sub-jaxpr
+    dedup: jit caching makes P identical solve dispatches share one body
+    object, and deduping them would hide P−1 passes over A). The count is
+    calibration-relative: the one-touch rule compares a composed λ-grid
+    graph against its single-point reference rather than asserting an
+    absolute number."""
+
+    def _is_a(aval) -> bool:
+        shp = tuple(getattr(aval, "shape", ()))
+        return len(shp) >= 2 and shp[-1] == d and shp[-2] >= n
+
+    def walk(jx) -> int:
+        c = 0
+        for eqn in jx.eqns:
+            subs = list(subjaxprs(eqn))
+            if subs:
+                for sub in subs:
+                    c += walk(sub)
+                continue
+            if eqn.primitive.name in _DATA_MOVEMENT_PRIMS:
+                continue
+            for v in eqn.invars:
+                aval = getattr(v, "aval", None)
+                if aval is not None and _is_a(aval):
+                    c += 1
+                    break
+        return c
+
+    return walk(closed_jaxpr.jaxpr)
+
+
 def eqn_provenance(eqn) -> str:
     """``file:line (primitive)`` for the user frame that created an
     equation — what makes a violation actionable."""

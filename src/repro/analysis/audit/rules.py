@@ -160,14 +160,35 @@ def _one_touch_check(ep, closed) -> list[Violation]:
 
     # (d) SJLT single-dispatch: the cap level folds the one dispatch's
     # tail rows, so exactly ONE scatter-add touches A (CPU lowering of the
-    # segment-sum; the provider graph is where the claim is crisp).
-    if fam == "sjlt" and ep.kind == "provider":
+    # segment-sum; the provider graph is where the claim is crisp). The
+    # path graphs inherit the claim wholesale: the entire λ grid rides
+    # that single dispatch.
+    if fam == "sjlt" and ep.kind in ("provider", "path"):
         n_scatter = ju.count_primitive(closed, ("scatter-add", "scatter_add"))
         if n_scatter != 1:
             out.append(Violation(
                 "one_touch", ep.name,
                 f"SJLT issued {n_scatter} scatter-add dispatches against A "
                 f"(expected exactly 1, cap level included)"))
+
+    # (e) λ-grid self-calibration (DESIGN.md §13): the FULL path graph —
+    # shared precompute + P warm-started per-λ solves — consumes A exactly
+    # as many times as its single-point reference. Equality means the grid
+    # added ZERO touches of A: every per-λ cost (shifted factorizations,
+    # solves) runs off the λ-free ladder. Self-calibrating by design; no
+    # absolute count is asserted, so a legitimate change to the shared
+    # pass cannot silently loosen the rule.
+    ref_build = m.get("a_ref_build")
+    if ref_build is not None:
+        got = ju.count_a_consumers(closed, n, d)
+        want = ju.count_a_consumers(ref_build(), n, d)
+        if got != want:
+            out.append(Violation(
+                "one_touch", ep.name,
+                f"{m.get('grid_points')}-point λ-grid graph consumes A "
+                f"{got} times vs {want} in the single-point reference — "
+                f"per-λ work re-touches A instead of riding the shared "
+                f"λ-free ladder"))
     return out
 
 

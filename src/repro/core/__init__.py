@@ -28,9 +28,11 @@ from .adaptive_padded import (
     finalize_padded_solve,
     padded_adaptive_solve,
     padded_adaptive_solve_batched,
+    padded_path_solve_batched,
     padded_solve_segment,
     padded_trip_cap,
     prepare_padded_solve,
+    prepare_path_ladder,
     reprecondition_padded,
 )
 from .effective_dim import (
@@ -49,7 +51,12 @@ from .newton import (
     newton_cg_reference,
 )
 from .objectives import GLM_FAMILIES, GLMObjective, get_objective
-from .precond import SketchedPrecond, factorize, factorize_shared
+from .precond import (
+    SketchedPrecond,
+    factorize,
+    factorize_shared,
+    shifted_ladder_inverses,
+)
 from .quadratic import (
     Quadratic,
     direct_solve,
@@ -62,6 +69,7 @@ from .quadratic import (
 from .robust import (
     PreemptedError,
     robust_padded_solve_batched,
+    robust_path_solve_batched,
     segmented_padded_solve_batched,
 )
 from .sketches import Sketch, fwht, make_sketch
@@ -82,6 +90,8 @@ __all__ = [
     "PaddedState",
     "PaddedPrecompute",
     "prepare_padded_solve",
+    "prepare_path_ladder",
+    "padded_path_solve_batched",
     "padded_solve_segment",
     "finalize_padded_solve",
     "reprecondition_padded",
@@ -97,6 +107,7 @@ __all__ = [
     "SketchedPrecond",
     "factorize",
     "factorize_shared",
+    "shifted_ladder_inverses",
     "Quadratic",
     "direct_solve",
     "from_least_squares",
@@ -118,6 +129,7 @@ __all__ = [
     "newton_solve",
     "run_fixed",
     "robust_padded_solve_batched",
+    "robust_path_solve_batched",
     "segmented_padded_solve_batched",
     "PreemptedError",
     "SolveStatus",

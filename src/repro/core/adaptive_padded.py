@@ -85,6 +85,7 @@ exactly what a checkpoint of a preempted solve persists
 
 from __future__ import annotations
 
+import dataclasses
 import math
 from functools import partial
 from typing import NamedTuple
@@ -95,6 +96,7 @@ import jax.numpy as jnp
 from repro.kernels.precision import canonical_compute_dtype
 
 from .level_grams import get_provider
+from .precond import shifted_ladder_inverses
 from .quadratic import Quadratic, weighted_gram
 from .solvers import c_alpha_rho, rho_to_rate
 from .status import SolveStatus
@@ -191,17 +193,12 @@ def _precompute_pinvs(grams: jnp.ndarray, q: Quadratic) -> jnp.ndarray:
     inside the while_loop. The extra work vs factorizing on demand is at
     most the ladder length × a d×d Cholesky, a rounding error next to the
     sketch pass; the forward error of an explicit inverse is the same
-    O(ε·κ) as triangular solves, which a *preconditioner* tolerates."""
-    L, B, d, _ = grams.shape
-    reg = (q.nu**2)[:, None] * q.lam_diag                    # (B, d)
-    HS = grams + jax.vmap(jnp.diag)(reg)[None, :, :, :]
-    HS = HS.reshape(L * B, d, d)
-    chol = jnp.linalg.cholesky(HS)
-    eye = jnp.broadcast_to(jnp.eye(d, dtype=HS.dtype), HS.shape)
-    y = jax.scipy.linalg.solve_triangular(chol, eye, lower=True)
-    pinv = jax.scipy.linalg.solve_triangular(
-        jnp.swapaxes(chol, -1, -2), y, lower=False)
-    return pinv.reshape(L, B, d, d)
+    O(ε·κ) as triangular solves, which a *preconditioner* tolerates.
+
+    The Grams themselves are λ-FREE — the ν²Λ shift enters only inside
+    ``precond.shifted_ladder_inverses`` — which is what lets a
+    regularization path reuse one ladder across every λ (DESIGN.md §13)."""
+    return shifted_ladder_inverses(grams, q.nu, q.lam_diag)
 
 
 def _gather_pinv(pinvs: jnp.ndarray, level: jnp.ndarray) -> jnp.ndarray:
@@ -320,28 +317,43 @@ def _hvp_fn(q: Quadratic, G_full):
 
 
 def _init_padded_state(q: Quadratic, pre: PaddedPrecompute,
-                       init_level, tol) -> PaddedState:
+                       init_level, tol, x0=None) -> PaddedState:
     B, d = q.batch, q.d
     fdtype = _field_dtype(q)
     top = pre.remap.shape[0] - 1
     grad_f = lambda x: _hvp_fn(q, pre.G_full)(x) - q.b
 
-    x0 = jnp.zeros((B, d), fdtype)
     if init_level is None:
         lvl0 = jnp.zeros((B,), jnp.int32)
     else:
         lvl0 = jnp.clip(init_level.astype(jnp.int32), 0, top)
     pinv0 = _gather_pinv(pre.pinvs, lvl0)
-    g0 = grad_f(x0)                                  # = −b
-    rt0 = _apply_pinv(pinv0, -g0)
-    dt0 = 0.5 * _pdot(-g0, rt0)
-    conv0 = dt0 <= tol * dt0                         # trivially-solved (b=0)
+    if x0 is None:
+        x0 = jnp.zeros((B, d), fdtype)
+        g0 = grad_f(x0)                              # = −b
+        rt0 = _apply_pinv(pinv0, -g0)
+        dtw = 0.5 * _pdot(-g0, rt0)
+        dt0 = dtw
+        conv0 = dt0 <= tol * dt0                     # trivially-solved (b=0)
+    else:
+        # Warm start (path mode, DESIGN.md §13): anchor the state at x0,
+        # but keep the convergence scale dtilde0 at the COLD b-based δ̃(0)
+        # so tol stays relative to the problem, not to how good the warm
+        # start already is — the same anchor ``do_refactor`` re-derives
+        # after a doubling. A warm start good enough to clear tol·δ̃(0)
+        # converges before the loop runs a single trip.
+        x0 = x0.astype(fdtype)
+        g0 = grad_f(x0)
+        rt0 = _apply_pinv(pinv0, -g0)
+        dtw = 0.5 * _pdot(-g0, rt0)
+        dt0 = 0.5 * _pdot(q.b, _apply_pinv(pinv0, q.b))
+        conv0 = dtw <= tol * dt0
 
     return PaddedState(
         x=x0, x_prev=x0, r=-g0, rt=rt0, p=rt0, grad=g0,
         level=lvl0, t_rel=jnp.zeros((B,), jnp.int32),
-        dtilde_I=dt0, dtilde=dt0, dtilde0=dt0,
-        x_best=x0, dt_best=dt0, pinv=pinv0,
+        dtilde_I=dtw, dtilde=dtw, dtilde0=dt0,
+        x_best=x0, dt_best=dtw, pinv=pinv0,
         iters=jnp.zeros((B,), jnp.int32),
         doublings=jnp.zeros((B,), jnp.int32),
         done=conv0 | ~pre.any_valid,     # no valid level ⇒ frozen at x₀
@@ -543,15 +555,19 @@ def prepare_padded_solve(
     compute_dtype: str = "fp32",
     tol: float = 1e-10,
     grams: jnp.ndarray | None = None,
+    gram_full: jnp.ndarray | None = None,
+    x0: jnp.ndarray | None = None,
 ):
     """Everything before the loop, as one jitted dispatch: the one-touch
     ladder pass (or ``grams=`` to supply precomputed/recombined level Grams
     — the elastic-recovery path feeds a ``distributed.ShardLadderCache``
-    total here), the batched factorizations + guard tables, the optional
-    true-Gram precompute and the initial state. Returns
-    ``(PaddedPrecompute, PaddedState)`` — both plain-array pytrees; the
-    state is what checkpoints persist, the precompute is deterministic
-    given (q, keys) and is recomputed on resume."""
+    total here, and the path engine the shared λ-free ladder of
+    ``prepare_path_ladder``), the batched factorizations + guard tables,
+    the optional true-Gram precompute (or ``gram_full=`` to supply it) and
+    the initial state — at the origin, or at a warm-start iterate ``x0=``
+    (B, d). Returns ``(PaddedPrecompute, PaddedState)`` — both plain-array
+    pytrees; the state is what checkpoints persist, the precompute is
+    deterministic given (q, keys) and is recomputed on resume."""
     if not q.batched:
         raise ValueError("prepare_padded_solve expects a batched Quadratic")
     B = q.batch
@@ -563,11 +579,13 @@ def prepare_padded_solve(
                                       mesh=mesh, compute_dtype=compute_dtype)
     pinvs, remap, any_valid, gram_poisoned, invalid_levels = _ladder_tables(
         q, grams, guards=guards)
+    if gram_full is None:
+        gram_full = _gram_precompute(q, gram_hvp, mesh)
     pre = PaddedPrecompute(
         pinvs=pinvs, remap=remap, any_valid=any_valid,
         gram_poisoned=gram_poisoned, invalid_levels=invalid_levels,
-        G_full=_gram_precompute(q, gram_hvp, mesh))
-    return pre, _init_padded_state(q, pre, init_level, tol)
+        G_full=gram_full)
+    return pre, _init_padded_state(q, pre, init_level, tol, x0=x0)
 
 
 @partial(jax.jit, static_argnames=("method", "max_iters", "rho", "guards"),
@@ -689,6 +707,9 @@ def padded_adaptive_solve_batched(
     init_level: jax.Array | None = None,
     guards: bool = True,
     compute_dtype: str = "fp32",
+    grams: jnp.ndarray | None = None,
+    gram_full: jnp.ndarray | None = None,
+    x0: jnp.ndarray | None = None,
 ):
     """One-executable adaptive solve of a batch of B problems.
 
@@ -754,6 +775,14 @@ def padded_adaptive_solve_batched(
     itself is collective-free; matrix-free mode keeps one psum(B·d) per
     hvp, inserted by GSPMD.
 
+    ``grams`` / ``gram_full`` / ``x0`` (traced, path mode — DESIGN.md §13):
+    supply a precomputed λ-free ladder of level Grams (L, B, d, d), the
+    precomputed true Gram, and/or a warm-start iterate (B, d). With
+    ``grams=`` the one-touch sketch pass is SKIPPED — the λ sweep of
+    ``padded_path_solve_batched`` pays it once via ``prepare_path_ladder``
+    and re-solves every λ point off the shared ladder, with only the
+    ν²Λ-shifted factorizations repeated per point.
+
     This function is ``prepare_padded_solve`` → ``padded_solve_segment``
     (with the trip limit pinned at the trip cap) → ``finalize_padded_solve``
     composed in one jit — bit-identical to dispatching the segments
@@ -768,19 +797,134 @@ def padded_adaptive_solve_batched(
     if _is_single_key(keys):
         keys = jax.random.split(keys, B)
     compute_dtype = canonical_compute_dtype(compute_dtype)
-    grams = _compute_ladder_grams(q, keys, m_max=m_max, sketch=sketch,
-                                  mesh=mesh, compute_dtype=compute_dtype)
+    if grams is None:
+        grams = _compute_ladder_grams(q, keys, m_max=m_max, sketch=sketch,
+                                      mesh=mesh, compute_dtype=compute_dtype)
     pinvs, remap, any_valid, gram_poisoned, invalid_levels = _ladder_tables(
         q, grams, guards=guards)
+    if gram_full is None:
+        gram_full = _gram_precompute(q, gram_hvp, mesh)
     pre = PaddedPrecompute(
         pinvs=pinvs, remap=remap, any_valid=any_valid,
         gram_poisoned=gram_poisoned, invalid_levels=invalid_levels,
-        G_full=_gram_precompute(q, gram_hvp, mesh))
-    init = _init_padded_state(q, pre, init_level, tol)
+        G_full=gram_full)
+    init = _init_padded_state(q, pre, init_level, tol, x0=x0)
     st = _run_segment(q, pre, init, padded_trip_cap(m_max, max_iters),
                       method=method, max_iters=max_iters, rho=rho, tol=tol,
                       guards=guards)
     return _finalize(pre, st, m_max=m_max)
+
+
+@partial(jax.jit,
+         static_argnames=("m_max", "sketch", "gram_hvp", "mesh",
+                          "compute_dtype"))
+def prepare_path_ladder(
+    q: Quadratic,
+    keys: jax.Array,
+    *,
+    m_max: int,
+    sketch: str = "gaussian",
+    gram_hvp: bool | None = None,
+    mesh=None,
+    compute_dtype: str = "fp32",
+):
+    """The λ-FREE precompute shared by an entire regularization path: the
+    one-touch ladder pass (under ``mesh``, the same per-shard pass + ONE
+    psum of the (L, B, d, d) level Grams) plus the optional true-Gram
+    precompute. Neither output reads q.nu / q.lam_diag — the ν²Λ shift
+    enters only at factorization (``precond.shifted_ladder_inverses``) —
+    so the returned ``(grams, gram_full)`` pair serves EVERY λ point of a
+    grid: feed it to ``prepare_padded_solve`` / the batched solver via
+    ``grams=`` / ``gram_full=`` (DESIGN.md §13). This is also the unit the
+    serving ladder cache stores per (A, Λ, family, dtype) fingerprint.
+
+    ``gram_full`` is None when the hvp stays matrix-free (``gram_hvp``
+    auto-off for large d) — pass the pair through unchanged either way."""
+    if not q.batched:
+        raise ValueError("prepare_path_ladder expects a batched Quadratic")
+    if _is_single_key(keys):
+        keys = jax.random.split(keys, q.batch)
+    compute_dtype = canonical_compute_dtype(compute_dtype)
+    grams = _compute_ladder_grams(q, keys, m_max=m_max, sketch=sketch,
+                                  mesh=mesh, compute_dtype=compute_dtype)
+    return grams, _gram_precompute(q, gram_hvp, mesh)
+
+
+def padded_path_solve_batched(
+    q: Quadratic,
+    keys: jax.Array,
+    nus: jnp.ndarray,
+    *,
+    m_max: int,
+    method: str = "ihs",
+    sketch: str = "gaussian",
+    max_iters: int = 100,
+    rho: float = 0.5,
+    tol: float = 1e-10,
+    gram_hvp: bool | None = None,
+    mesh=None,
+    init_level: jax.Array | None = None,
+    guards: bool = True,
+    compute_dtype: str = "fp32",
+    warm_start: bool = True,
+):
+    """Regularization-path solve: the full λ grid off ONE sketch pass.
+
+    ``q`` is a batched Quadratic (B problems; its own ``q.nu`` is ignored)
+    and ``nus`` is the λ grid — (P,) shared across the batch, or (P, B)
+    per-problem. Because the ladder-level Grams are λ-free, the one-touch
+    sketch pass (and the optional true-Gram precompute) runs ONCE via
+    ``prepare_path_ladder``; each grid point then pays only the ν²Λ-shifted
+    factorizations (``precond.shifted_ladder_inverses``) and its solve —
+    a P-point path costs ~1 sketch pass instead of P (DESIGN.md §13).
+
+    ``warm_start`` (default on) carries both the iterate x AND the
+    per-problem sketch level from the previous grid point: point p+1
+    starts at x_p with ``init_level`` = the final ladder level of point p
+    (the traced warm-start hook), so a grid walked from strong to weak
+    regularization never re-climbs the ladder — level trajectories are
+    monotone along the path. The convergence scale stays each point's
+    cold δ̃(0), so certificates mean the same thing warm or cold.
+    ``init_level`` seeds the FIRST point (e.g. from a previous path).
+
+    Each point is solved by ``padded_adaptive_solve_batched`` with
+    ``grams=`` / ``gram_full=`` supplied, so per-point numbers are
+    bit-identical to a single-λ solve handed the same shared ladder,
+    warm start and init level; ``guards`` semantics are per point.
+
+    Returns ``(xs, stats)``: xs (P, B, d) and stats with the per-point
+    engine vectors stacked to (P, B) (``trips`` to (P,)), plus
+    ``sketch_passes`` = 1 — the whole grid touched A once."""
+    if not q.batched:
+        raise ValueError("padded_path_solve_batched expects a batched "
+                         "Quadratic")
+    fdtype = _field_dtype(q)
+    nus = jnp.asarray(nus, fdtype)
+    if nus.ndim == 1:
+        nus = jnp.broadcast_to(nus[:, None], (nus.shape[0], q.batch))
+    P = nus.shape[0]
+    if _is_single_key(keys):
+        keys = jax.random.split(keys, q.batch)
+    grams, gram_full = prepare_path_ladder(
+        q, keys, m_max=m_max, sketch=sketch, gram_hvp=gram_hvp, mesh=mesh,
+        compute_dtype=compute_dtype)
+    xs, per_point = [], []
+    x_prev, lvl = None, init_level
+    for p in range(P):
+        q_p = dataclasses.replace(q, nu=nus[p])
+        x, stats = padded_adaptive_solve_batched(
+            q_p, keys, m_max=m_max, method=method, sketch=sketch,
+            max_iters=max_iters, rho=rho, tol=tol, gram_hvp=gram_hvp,
+            mesh=mesh, init_level=lvl, guards=guards,
+            compute_dtype=compute_dtype, grams=grams, gram_full=gram_full,
+            x0=x_prev)
+        xs.append(x)
+        per_point.append(stats)
+        if warm_start:
+            x_prev, lvl = x, stats["level"]
+    out = {k: jnp.stack([s[k] for s in per_point]) for k in per_point[0]}
+    out["sketch_passes"] = 1
+    return jnp.stack(xs), out
 
 
 def padded_adaptive_solve(

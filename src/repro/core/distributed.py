@@ -36,6 +36,13 @@ Two execution paths, same math:
 2. **shard_map path** (explicit collectives): manual control of the
    reduction placement for the sketch+Gram hot path — ``shard_level_grams``
    is what the engine's precompute calls under ``mesh=``.
+
+The sharded level Grams are λ-free like their single-device counterparts
+(``level_grams``), so a sharded regularization path pays the SAME one
+psum of the (L, B, d, d) stack for the entire λ grid
+(``adaptive_padded.prepare_path_ladder(..., mesh=)`` — DESIGN.md §13);
+per-λ shifted factorizations happen on the replicated Grams with no
+further collectives.
 """
 
 from __future__ import annotations

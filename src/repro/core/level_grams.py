@@ -12,6 +12,12 @@ level — behind one protocol (DESIGN.md §6):
 * ``level_grams(data, q, ladder)`` → (L, B, d, d) Grams, touching A
   exactly ONCE (the paper's O(sketch) + Σ O(factorize) accounting).
 
+The level Grams are λ-FREE: no provider reads ``q.nu`` / ``q.lam_diag``
+— the ν²Λ shift enters only at factorization
+(``precond.shifted_ladder_inverses``). That is what lets one ladder
+stack serve an entire regularization path and the serving ladder cache
+key on (A, Λ, family, dtype) alone (DESIGN.md §13).
+
 Families:
 
 * ``gaussian`` — *streamed*: rows are generated on the fly from a

@@ -13,6 +13,13 @@ and ``factorize_shared`` covers the shared-sketch λ-batch, where one SA is
 factorized against B different (ν, Λ) regularizers with the Gram matrix
 (SAᵀSA, resp. SAΛ⁻¹SAᵀ) formed once.
 
+``shifted_ladder_inverses`` generalizes the same shift-at-factorization
+idea to the adaptive engine's doubling ladder (DESIGN.md §13): the
+(L, B, d, d) level Grams (SA)ᵀ(SA) are λ-free — ν²Λ enters only here, as a
+diagonal shift added immediately before the flattened batched Cholesky —
+so ONE one-touch sketch pass serves every λ point of a regularization
+path; only this O(L·B·d³) factorization is repeated per λ.
+
 The factorization object is a pytree so it can be closed over / donated in
 jitted solver loops.
 """
@@ -187,6 +194,37 @@ def factorize_shared(
     chol = jnp.linalg.cholesky(W_S)
     return SketchedPrecond(mode="dual", chol=chol, SA=SA, nu2=nu2,
                            lam_diag=lam_diag, batched=True)
+
+
+def shifted_ladder_inverses(
+    grams: jnp.ndarray,
+    nu: jnp.ndarray,
+    lam_diag: jnp.ndarray,
+) -> jnp.ndarray:
+    """Per-λ shifted factorization of a λ-FREE ladder of level Grams.
+
+    ``grams`` is the (L, B, d, d) stack of unshifted sketched Grams
+    (SA)ᵀ(SA) at every doubling-ladder level — the output of one one-touch
+    sketch pass, independent of the regularizer. The ν²Λ shift is applied
+    HERE, so a regularization path factorizes the same ladder once per λ
+    point (O(L·B·d³) each) while paying the O(B·m_max·n·d) sketch pass
+    exactly once for the whole grid (DESIGN.md §13).
+
+    Returns the (L, B, d, d) explicit inverses (G_l + ν²Λ)⁻¹ via one
+    flattened batched Cholesky + two triangular solves — with the inverses
+    precomputed, a doubling inside the solve loop is a pure gather and the
+    per-iteration preconditioner application one fused batched matvec.
+    The forward error of an explicit inverse is the same O(ε·κ) as
+    triangular solves, which a *preconditioner* tolerates."""
+    L, B, d, _ = grams.shape
+    reg = (nu**2)[:, None] * lam_diag                        # (B, d)
+    HS = grams + jax.vmap(jnp.diag)(reg)[None, :, :, :]
+    HS = HS.reshape(L * B, d, d)
+    chol = jnp.linalg.cholesky(HS)
+    eye = jnp.broadcast_to(jnp.eye(d, dtype=HS.dtype), HS.shape)
+    y = solve_triangular(chol, eye, lower=True)
+    pinv = solve_triangular(jnp.swapaxes(chol, -1, -2), y, lower=False)
+    return pinv.reshape(L, B, d, d)
 
 
 def factorization_cost_flops(m: int, n: int, d: int) -> float:

@@ -70,6 +70,7 @@ finite, and the status tells the truth about where it came from.**
 
 from __future__ import annotations
 
+import dataclasses
 import os
 import time
 
@@ -79,6 +80,7 @@ import numpy as np
 
 from .adaptive_padded import (
     PaddedState,
+    _field_dtype,
     _is_single_key,
     doubling_ladder,
     finalize_padded_solve,
@@ -86,6 +88,7 @@ from .adaptive_padded import (
     padded_solve_segment,
     padded_trip_cap,
     prepare_padded_solve,
+    prepare_path_ladder,
     reprecondition_padded,
 )
 from .quadratic import Quadratic, direct_solve
@@ -172,6 +175,8 @@ def segmented_padded_solve_batched(
     preempt=None,
     on_segment=None,
     grams: jnp.ndarray | None = None,
+    gram_full: jnp.ndarray | None = None,
+    x0: jnp.ndarray | None = None,
 ):
     """The segmented host driver (DESIGN.md §11): ``prepare`` once, then
     re-dispatch ONE compiled segment executable ``segment_trips`` loop
@@ -203,7 +208,10 @@ def segmented_padded_solve_batched(
       ``reprecondition_padded`` (elastic shard recovery) with trip-budget
       headroom for the re-climb.
     * ``grams``        — precomputed ladder level Grams for ``prepare``
-      (e.g. ``ShardLadderCache.total()``), skipping the sketch pass.
+      (e.g. ``ShardLadderCache.total()`` or the path engine's shared
+      λ-free ladder), skipping the sketch pass.
+    * ``gram_full`` / ``x0`` — precomputed true Gram and warm-start
+      iterate, forwarded to ``prepare`` (path mode, DESIGN.md §13).
 
     Extra stats keys: ``segments`` (dispatches this invocation),
     ``resumed`` (bool), ``deadline_hit`` (bool).
@@ -220,7 +228,7 @@ def segmented_padded_solve_batched(
     pre, st = prepare_padded_solve(
         q, keys, m_max=m_max, sketch=sketch, gram_hvp=gram_hvp, mesh=mesh,
         init_level=init_level, guards=guards, compute_dtype=compute_dtype,
-        tol=tol, grams=grams)
+        tol=tol, grams=grams, gram_full=gram_full, x0=x0)
 
     trip_budget = padded_trip_cap(m_max, max_iters)
     ladder_len = len(doubling_ladder(m_max))
@@ -318,6 +326,9 @@ def robust_padded_solve_batched(
     resume: bool = True,
     preempt=None,
     on_segment=None,
+    grams: jnp.ndarray | None = None,
+    gram_full: jnp.ndarray | None = None,
+    x0: jnp.ndarray | None = None,
 ):
     """Solve a batch with engine guards + sketch-redraw retries + fallback.
 
@@ -352,6 +363,12 @@ def robust_padded_solve_batched(
     retried (only engine failures are), and never overwritten by a retry
     that itself ran out of time. With none of those knobs set the path —
     and the numbers — are the single-dispatch monolithic ones.
+
+    ``grams`` / ``gram_full`` / ``x0`` (path mode, DESIGN.md §13) apply to
+    the FIRST attempt only: a precomputed λ-free ladder skips its sketch
+    pass, but a retry is by definition a REDRAWN sketch — it recomputes
+    fresh level Grams from its folded keys on the gathered sub-batch, so
+    retry semantics are unchanged by the shared ladder.
     """
     B = q.batch
     if _is_single_key(keys):
@@ -369,18 +386,22 @@ def robust_padded_solve_batched(
                 else deadline_s - (time.perf_counter() - t0))
 
     def solve(qq, kk, lvl, *, budget, first=False):
+        # the shared ladder / warm start bind to the first attempt only —
+        # a retry redraws its sketch on the gathered sub-batch
+        pk = (dict(grams=grams, gram_full=gram_full, x0=x0) if first
+              else {})
         if not segmented:
             return padded_adaptive_solve_batched(
                 qq, kk, m_max=m_max, method=method, sketch=sketch,
                 max_iters=max_iters, rho=rho, tol=tol, gram_hvp=gram_hvp,
                 mesh=mesh, init_level=lvl, guards=True,
-                compute_dtype=compute_dtype)
+                compute_dtype=compute_dtype, **pk)
         return segmented_padded_solve_batched(
             qq, kk, m_max=m_max, method=method, sketch=sketch,
             max_iters=max_iters, rho=rho, tol=tol, gram_hvp=gram_hvp,
             mesh=mesh, init_level=lvl, guards=True,
             compute_dtype=compute_dtype, segment_trips=seg_trips,
-            deadline_s=budget,
+            deadline_s=budget, **pk,
             # checkpoint/preempt bind to the first attempt only: a retry is
             # a different (redrawn) solve and must not clobber — or resume
             # from — the first attempt's checkpoint
@@ -490,3 +511,85 @@ def robust_padded_solve_batched(
         "deadline_hit": deadline_hit,
     }
     return jnp.asarray(x), stats
+
+
+def robust_path_solve_batched(
+    q: Quadratic,
+    keys: jax.Array,
+    nus: jnp.ndarray,
+    *,
+    m_max: int,
+    method: str = "pcg",
+    sketch: str = "gaussian",
+    max_iters: int = 100,
+    rho: float = 0.5,
+    tol: float = 1e-10,
+    gram_hvp: bool | None = None,
+    mesh=None,
+    init_level: jax.Array | None = None,
+    max_retries: int = 2,
+    fallback: bool = True,
+    compute_dtype: str = "fp32",
+    warm_start: bool = True,
+    grams: jnp.ndarray | None = None,
+    gram_full: jnp.ndarray | None = None,
+):
+    """Regularization path with the full recovery policy per λ point.
+
+    The robust counterpart of
+    ``adaptive_padded.padded_path_solve_batched``: the λ-free ladder (and
+    the true-Gram precompute) is paid ONCE via ``prepare_path_ladder`` —
+    or supplied via ``grams=`` / ``gram_full=``, e.g. by the serving
+    ladder cache — and every grid point runs
+    ``robust_padded_solve_batched`` off it, warm-starting x and the
+    per-problem ladder level from the previous point. Retry / fallback /
+    ``guards`` semantics hold PER PATH POINT: a bad draw at one λ retries
+    with a redrawn sketch on that point's failed slots only (each retry is
+    an extra sketch pass on the gathered sub-batch, counted in
+    ``sketch_passes``); fallen-back slots carry ``FELL_BACK`` with NaN δ̃
+    at that point and still warm-start the next one (their x is finite).
+
+    ``nus`` is (P,) shared or (P, B) per-problem; ``q.nu`` is ignored.
+    Returns ``(xs, stats)``: xs (P, B, d); per-problem stats vectors
+    stacked to (P, B); ``trips`` / ``segments`` summed over the path; and
+    ``sketch_passes`` — 1 for a clean path, +1 per retry attempt."""
+    if not q.batched:
+        raise ValueError("robust_path_solve_batched expects a batched "
+                         "Quadratic")
+    B = q.batch
+    if _is_single_key(keys):
+        keys = jax.random.split(keys, B)
+    nus = jnp.asarray(nus, _field_dtype(q))
+    if nus.ndim == 1:
+        nus = jnp.broadcast_to(nus[:, None], (nus.shape[0], B))
+    P = nus.shape[0]
+    if grams is None:
+        grams, gram_full = prepare_path_ladder(
+            q, keys, m_max=m_max, sketch=sketch, gram_hvp=gram_hvp,
+            mesh=mesh, compute_dtype=compute_dtype)
+    xs, per_point = [], []
+    x_prev, lvl = None, init_level
+    sketch_passes = 1
+    for p in range(P):
+        q_p = dataclasses.replace(q, nu=nus[p])
+        x, stats = robust_padded_solve_batched(
+            q_p, keys, m_max=m_max, method=method, sketch=sketch,
+            max_iters=max_iters, rho=rho, tol=tol, gram_hvp=gram_hvp,
+            mesh=mesh, init_level=lvl, max_retries=max_retries,
+            fallback=fallback, compute_dtype=compute_dtype,
+            grams=grams, gram_full=gram_full, x0=x_prev)
+        # each executed retry attempt redrew a sketch on the sub-batch
+        sketch_passes += int(np.max(np.asarray(stats["retries"])))
+        xs.append(x)
+        per_point.append(stats)
+        if warm_start:
+            x_prev = x
+            lvl = jnp.asarray(stats["level"], jnp.int32)
+    stacked = ("status", "retries", "fell_back", "converged", "stalled",
+               "dtilde", "m_final", "iters", "doublings", "level",
+               "invalid_levels")
+    out = {k: jnp.stack([s[k] for s in per_point]) for k in stacked}
+    out["trips"] = sum(int(s["trips"]) for s in per_point)
+    out["segments"] = sum(int(s["segments"]) for s in per_point)
+    out["sketch_passes"] = sketch_passes
+    return jnp.stack(xs), out

@@ -20,7 +20,10 @@ with Newton-level certificates — DESIGN.md §8; ``--dtype bf16``/``int8``
 runs the one-touch sketch pass at reduced stream precision with fp32
 certificates — DESIGN.md §10; ``--deadline-s T`` bounds the flush —
 expired requests return DEADLINE_EXCEEDED with their best finite iterate
-— DESIGN.md §11.)
+— DESIGN.md §11; ``--path N`` adds N regularization-path requests, each a
+``--path-points``-long λ grid solved off ONE one-touch sketch pass with
+warm-started per-λ solves, plus a repeated-A round served entirely from
+the fingerprint ladder cache — DESIGN.md §13.)
 
 ``--preempt-after N`` drives the preemption chaos cycle instead (DESIGN.md
 §11): launch ``examples/solve_service.py`` as a checkpointing subprocess,
@@ -63,11 +66,12 @@ def serve_ridge(args):
                 f"{jax.device_count()} exist; on CPU set XLA_FLAGS="
                 f"--xla_force_host_platform_device_count={args.mesh}")
         mesh = jax.make_mesh((args.mesh,), ("data",))
-    from repro.serve.solver_service import GLMSolution
+    from repro.serve.solver_service import GLMSolution, PathSolution
 
     svc = SolverService(batch_size=args.ridge_batch, method="pcg",
                         sketch=args.sketch, compute_dtype=args.dtype,
-                        mesh=mesh, strict=not args.faulty)
+                        mesh=mesh, strict=not args.faulty,
+                        ladder_cache=bool(args.path))
     rng = np.random.default_rng(0)
     truth = {}
     for i in range(args.requests):
@@ -91,15 +95,30 @@ def serve_ridge(args):
                                           n, d)
         svc.submit_glm(A, y, nu=float(rng.uniform(0.1, 0.5)),
                        family="logistic")
+    path_truth = {}
+    for i in range(args.path):
+        # regularization-path traffic (DESIGN.md §13): each request is a λ
+        # GRID solved off ONE one-touch sketch pass, strong→weak so warm
+        # starts move downhill
+        n = int(rng.integers(64, 1800))
+        d = int(rng.integers(8, 120))
+        A = jax.random.normal(
+            jax.random.PRNGKey(20_000 + 2 * i), (n, d)) / np.sqrt(n)
+        y = jax.random.normal(jax.random.PRNGKey(20_001 + 2 * i), (n,))
+        nus = np.geomspace(1.0, 1e-2, args.path_points)
+        rid = svc.submit_path(A, y, nus)
+        path_truth[rid] = (A, y, nus)
     t0 = time.perf_counter()
     sols = svc.flush(deadline_s=args.deadline_s)
     dt = time.perf_counter() - t0
     if not sols:
         print("ridge service: no requests")
         return
-    ridge_sols = [s for s in sols.values() if not isinstance(s, GLMSolution)]
+    ridge_sols = [s for s in sols.values()
+                  if not isinstance(s, (GLMSolution, PathSolution))]
     glm_sols = [s for s in sols.values() if isinstance(s, GLMSolution)]
-    n_req = args.requests + args.glm
+    path_sols = [s for s in sols.values() if isinstance(s, PathSolution)]
+    n_req = args.requests + args.glm + args.path
     mesh_note = f", {args.mesh}-way data mesh" if mesh is not None else ""
     print(f"solver service: {n_req} requests in {dt:.2f}s "
           f"({n_req / dt:.1f} req/s incl. compile) — "
@@ -138,6 +157,27 @@ def serve_ridge(args):
               f"{max(s.decrement for s in glm_sols):.2e}, "
               f"m trajectory (req {glm_sols[0].req_id}): "
               f"{glm_sols[0].m_trajectory}")
+    if path_sols:
+        pts = [p for s in path_sols for p in s.points]
+        passes = sum(s.sketch_passes for s in path_sols)
+        s0 = path_sols[0]
+        print(f"path certificates: {sum(s.converged for s in path_sols)}/"
+              f"{len(path_sols)} grids converged "
+              f"({args.path_points} λ points each), "
+              f"{passes} one-touch passes total, "
+              f"max δ̃ = {max(p.delta_tilde for p in pts):.2e}, "
+              f"warm m trajectory (req {s0.req_id}): "
+              f"{tuple(p.m_final for p in s0.points)}")
+        # repeated-A round: the λ-free ladder is keyed by content
+        # fingerprint, so the re-submitted grid never touches A again
+        rid0 = min(path_truth)
+        A, y, nus = path_truth[rid0]
+        rid_warm = svc.submit_path(A, y, nus)
+        warm = svc.flush()[rid_warm]
+        print(f"repeat-A path round: cache_hit={warm.cache_hit}, "
+              f"sketch_passes={warm.sketch_passes} "
+              f"(ladder served from the fingerprint cache; "
+              f"{svc.stats['sketch_passes_saved']} passes saved)")
 
 
 def serve_preempt(args):
@@ -213,6 +253,16 @@ def build_parser() -> argparse.ArgumentParser:
                          "requests through the sketched-Newton path "
                          "(--ridge; certificates include outer iterations, "
                          "Newton decrement and the m trajectory)")
+    ap.add_argument("--path", type=int, default=0,
+                    help="additionally serve this many regularization-path "
+                         "requests (--ridge): each is a λ grid solved off "
+                         "ONE one-touch sketch pass with warm-started "
+                         "per-λ solves; also runs a repeated-A round "
+                         "served from the fingerprint ladder cache "
+                         "(DESIGN.md §13)")
+    ap.add_argument("--path-points", type=int, default=8,
+                    help="λ points per path request (--path), geomspace "
+                         "1.0 → 1e-2 strong→weak")
     ap.add_argument("--ridge-batch", type=int, default=16,
                     help="packed batch size per shape class (--ridge); "
                          "its own flag so the LM --batch default of 4 "

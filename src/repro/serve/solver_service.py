@@ -30,6 +30,23 @@ the padded engine with per-problem warm-started sketch ladders. Solutions
 carry Newton-level certificates: outer iterations, the final Newton
 decrement λ̃²/2, and the per-step m trajectory.
 
+Path traffic (DESIGN.md §13): ``submit_path`` takes (A, y, a λ GRID) and
+returns one ``PathSolution`` whose per-λ ``PathPoint``s each carry the
+full δ̃/m/status certificate. A packed path chunk runs
+``core.robust.robust_path_solve_batched``: ONE one-touch sketch pass
+serves the whole grid (the ladder-level Grams are λ-free; the ν²Λ shift
+enters at factorization), with x and the per-problem sketch level
+warm-started point-to-point.
+
+Ladder cache (opt-in ``ladder_cache=True``): the λ-free ladder is ALSO
+reusable across *requests* that share (A, Λ, sketch family,
+compute_dtype). The service fingerprints that identity, keys each slot's
+sketch off the fingerprint instead of the request id (identical data ⇒
+identical sketch ⇒ the cached per-slot ladder slice is exactly what the
+pass would recompute), and serves warm repeated-A traffic — per-tenant
+heads, λ re-sweeps — without touching A at all. Solutions record
+``cache_hit``; the first slice of the continuous-batching roadmap item.
+
 CPU-scale demo wiring lives in ``launch/serve.py --ridge`` (plus ``--glm``)
 and ``examples/solve_service.py``; the batched-vs-looped engine comparison
 is ``benchmarks/bench_batched.py``. See DESIGN.md §6/§8.
@@ -40,16 +57,21 @@ from __future__ import annotations
 import dataclasses
 import math
 import time
+from collections import OrderedDict
 from typing import Iterable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.adaptive_padded import doubling_ladder, prepare_path_ladder
 from repro.core.distributed import n_data_shards, shard_quadratic
 from repro.core.newton import adaptive_newton_solve_batched
 from repro.core.objectives import get_objective
 from repro.core.quadratic import Quadratic
-from repro.core.robust import robust_padded_solve_batched
+from repro.core.robust import (
+    robust_padded_solve_batched,
+    robust_path_solve_batched,
+)
 from repro.core.status import SolveStatus, status_name
 
 
@@ -98,6 +120,17 @@ class RidgeRequest:
     A: jnp.ndarray           # (n, d) features
     y: jnp.ndarray           # (n,) targets
     nu: float                # regularization ν
+    lam_diag: jnp.ndarray | None = None
+    deadline: float | None = None   # absolute time.perf_counter() stamp
+
+
+@dataclasses.dataclass(frozen=True)
+class PathRequest:
+    req_id: int
+    A: jnp.ndarray           # (n, d) features
+    y: jnp.ndarray           # (n,) targets
+    nus: tuple               # λ grid (ν values), walked in order — sort
+                             # strong→weak so warm starts move downhill
     lam_diag: jnp.ndarray | None = None
     deadline: float | None = None   # absolute time.perf_counter() stamp
 
@@ -160,6 +193,41 @@ class RidgeSolution:
                              # from convergence without re-deriving it from δ̃
     retries: int = 0         # sketch redraws consumed before this answer
     fell_back: bool = False  # answer from direct_solve, no δ̃ certificate
+    cache_hit: bool = False  # the λ-free ladder came from the fingerprint
+                             # cache — this answer skipped the sketch pass
+
+
+@dataclasses.dataclass(frozen=True)
+class PathPoint:
+    """One λ point of a ``PathSolution`` — the same certificate surface a
+    single ``RidgeSolution`` carries, per grid point."""
+    nu: float
+    x: jnp.ndarray           # (d,) solution in the request's coordinates
+    delta_tilde: float       # certificate: final δ̃ (eq. 2.3) at this λ
+    m_final: int             # certificate: adapted sketch size at this λ
+    iters: int
+    doublings: int
+    status: str = "OK"
+    converged: bool = True
+    retries: int = 0
+    fell_back: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class PathSolution:
+    req_id: int
+    points: tuple            # P PathPoints, in the request's grid order
+    shape_class: ShapeClass
+    batch_index: int
+    sketch: str = "gaussian"
+    compute_dtype: str = "fp32"
+    status: str = "OK"       # OK iff every point converged, else the first
+                             # non-converged point's status
+    converged: bool = True   # every point cleared the service tolerance
+    cache_hit: bool = False  # the ladder came from the fingerprint cache
+    sketch_passes: int = 1   # one-touch passes this request's chunk paid
+                             # for the WHOLE grid (0 on a cache hit;
+                             # +1 per sketch-redraw retry)
 
 
 class SolverService:
@@ -208,6 +276,8 @@ class SolverService:
         segment_trips: int = 32,
         checkpoint_dir=None,
         preempt=None,
+        ladder_cache: bool = False,
+        ladder_cache_size: int = 64,
     ):
         if shape_classes is None:
             # the pod-scale n=65536 tail only exists where the batch is
@@ -237,6 +307,19 @@ class SolverService:
         # GLM traffic buckets by (shape class, family): one Newton-driver
         # batch per family so the objective stays a static jit argument
         self._glm_queues: dict[tuple[ShapeClass, str], list[GLMRequest]] = {}
+        # path traffic buckets by (shape class, grid length): requests in a
+        # packed path chunk must agree on P (the per-problem grids pack to
+        # one (P, B) array); the grids themselves may differ per slot
+        self._path_queues: dict[tuple[ShapeClass, int],
+                                list[PathRequest]] = {}
+        # opt-in λ-free-ladder cache (DESIGN.md §13): fingerprint →
+        # (per-slot (L, d, d) level-Gram slice, (d, d) true-Gram slice),
+        # LRU-bounded. When on, each slot's sketch keys off the FINGERPRINT
+        # (content identity) instead of the request id, so identical
+        # repeated data reuses the identical sketch — the cache invariant.
+        self.ladder_cache = bool(ladder_cache)
+        self.ladder_cache_size = int(ladder_cache_size)
+        self._ladder_store: OrderedDict[str, tuple] = OrderedDict()
         self._next_id = 0
         self.newton_iters = 30
         self.newton_tol = 1e-9
@@ -262,7 +345,9 @@ class SolverService:
         self.stats = {"requests": 0, "batches": 0, "padded_slots": 0,
                       "solve_seconds": 0.0, "retries": 0, "fallbacks": 0,
                       "rejected": 0, "deadline_exceeded": 0,
-                      "segments": 0, "resumed_chunks": 0}
+                      "segments": 0, "resumed_chunks": 0,
+                      "path_requests": 0, "ladder_cache_hits": 0,
+                      "ladder_cache_misses": 0, "sketch_passes_saved": 0}
 
     def slot_utilization(self) -> float:
         """Fraction of solved batch slots that held a real request."""
@@ -415,8 +500,69 @@ class SolverService:
         self._glm_queues.setdefault((cls, family), []).append(req)
         return rid
 
+    def submit_path(self, A, y, nus, lam_diag=None, *,
+                    deadline_s: float | None = None) -> int:
+        """Enqueue one ridge problem against a λ GRID; returns its request
+        id. The flush returns a ``PathSolution`` whose per-λ ``PathPoint``s
+        each carry the full δ̃/m/status certificate.
+
+        ``nus`` is the grid of ν values, walked in the given order with x
+        and the sketch level warm-started point-to-point — sort it
+        strong→weak regularization so warm starts move downhill. The whole
+        grid is solved off ONE one-touch sketch pass (the ladder-level
+        Grams are λ-free — DESIGN.md §13); requests with equal grid
+        lengths pack into one chunk even when their grids differ.
+
+        Admission validates what ``submit`` validates, for EVERY grid
+        point's ν (each λ point pads the problem to the class shape, so a
+        single ν = 0 in the grid would NaN-poison that point)."""
+        import numpy as np
+
+        A = jnp.asarray(A)
+        y = jnp.asarray(y)
+        cls = self.bucket_for(*A.shape)     # shape errors always raise
+        nus = tuple(float(v) for v in np.ravel(np.asarray(nus)))
+        if not nus:
+            raise ValueError("submit_path needs a non-empty λ grid")
+        reason = None
+        try:
+            for v in nus:
+                self._check_nu(v)
+        except ValueError as e:
+            reason = str(e)
+            if self.strict:
+                raise ValueError(
+                    f"request {self._next_id} rejected: {reason}") from e
+        if reason is None:
+            _, reason = self._validate(A, y, nus[0], lam_diag)
+        rid = self._next_id
+        self._next_id += 1
+        self.stats["requests"] += 1
+        self.stats["path_requests"] += 1
+        sketch = cls.sketch or self.sketch
+        cd = cls.compute_dtype or self.compute_dtype
+        if reason is not None:
+            zero = jnp.zeros((A.shape[1],), A.dtype)
+            pts = tuple(PathPoint(
+                nu=v, x=zero, delta_tilde=float("nan"), m_final=0, iters=0,
+                doublings=0, status=SolveStatus.REJECTED.name,
+                converged=False) for v in nus)
+            self._reject(rid, reason, PathSolution(
+                req_id=rid, points=pts, shape_class=cls, batch_index=-1,
+                sketch=sketch, compute_dtype=cd,
+                status=SolveStatus.REJECTED.name, converged=False,
+                sketch_passes=0))
+            return rid
+        deadline = (None if deadline_s is None
+                    else time.perf_counter() + float(deadline_s))
+        self._path_queues.setdefault((cls, len(nus)), []).append(PathRequest(
+            req_id=rid, A=A, y=y, nus=nus, lam_diag=lam_diag,
+            deadline=deadline))
+        return rid
+
     # -- packing -----------------------------------------------------------
-    def _pack(self, cls: ShapeClass, reqs: list[RidgeRequest]):
+    def _pack(self, cls: ShapeClass, reqs: list[RidgeRequest],
+              slot_ids: list[int] | None = None):
         """Pad each request to the class shape and stack; pad the batch to
         ``batch_size`` with trivial (b = 0) problems.
 
@@ -426,7 +572,11 @@ class SolverService:
         ``fold_in`` over the slot-id vector (real slots: req_id; padded
         slots: the reserved top-of-range id 2³²−1−slot, so padding never
         aliases a real request's sketch) — no per-request host↔device
-        round trips."""
+        round trips.
+
+        ``slot_ids`` overrides the real slots' key ids (the ladder cache
+        keys slots by content fingerprint instead of request id, so
+        identical data draws the identical sketch)."""
         import numpy as np
 
         B = self.batch_size
@@ -442,9 +592,11 @@ class SolverService:
             nu[i] = r.nu
             if r.lam_diag is not None:
                 lam[i, :di] = np.asarray(r.lam_diag, dtype)
+        real_ids = ([r.req_id for r in reqs] if slot_ids is None
+                    else list(slot_ids))
         slot_ids = jnp.asarray(
-            [r.req_id for r in reqs]
-            + [0xFFFFFFFF - s for s in range(len(reqs), B)], jnp.uint32)
+            real_ids + [0xFFFFFFFF - s for s in range(len(reqs), B)],
+            jnp.uint32)
         keys = jax.vmap(
             lambda i: jax.random.fold_in(self._base_key, i))(slot_ids)
         q = Quadratic(A=jnp.asarray(A), b=jnp.asarray(b), nu=jnp.asarray(nu),
@@ -543,6 +695,17 @@ class SolverService:
                 chunks.append((min(dl) if dl else None, seq, cls, family,
                                chunk))
                 seq += 1
+        # path chunks carry kind=("path", P); budgets bind whole-chunk
+        # (expire-before-dispatch), not mid-solve
+        for (cls, P), queue in list(self._path_queues.items()):
+            self._path_queues[(cls, P)] = []
+            queue = edf(queue)
+            for i in range(0, len(queue), self.batch_size):
+                chunk = queue[i: i + self.batch_size]
+                dl = [r.deadline for r in chunk if r.deadline is not None]
+                chunks.append((min(dl) if dl else None, seq, cls,
+                               ("path", P), chunk))
+                seq += 1
         chunks.sort(key=lambda c: (c[0] is None, c[0] or 0.0, c[1]))
 
         for chunk_deadline, _, cls, family, chunk in chunks:
@@ -557,6 +720,8 @@ class SolverService:
                 out.update(self._expire_chunk(cls, chunk, family=family))
             elif family is None:
                 out.update(self._solve_chunk(cls, chunk, budget_s=budget))
+            elif isinstance(family, tuple):
+                out.update(self._solve_path_chunk(cls, chunk))
             else:
                 out.update(self._solve_glm_chunk(cls, family, chunk,
                                                  budget_s=budget))
@@ -594,6 +759,15 @@ class SolverService:
                     m_final=0, iters=0, doublings=0, shape_class=cls,
                     batch_index=-1, sketch=sketch, compute_dtype=cd,
                     status=name, converged=False)
+            elif isinstance(family, tuple):
+                pts = tuple(PathPoint(
+                    nu=v, x=zero, delta_tilde=float("nan"), m_final=0,
+                    iters=0, doublings=0, status=name, converged=False)
+                    for v in r.nus)
+                out[r.req_id] = PathSolution(
+                    req_id=r.req_id, points=pts, shape_class=cls,
+                    batch_index=-1, sketch=sketch, compute_dtype=cd,
+                    status=name, converged=False, sketch_passes=0)
             else:
                 out[r.req_id] = GLMSolution(
                     req_id=r.req_id, x=zero, family=family,
@@ -602,6 +776,147 @@ class SolverService:
                     shape_class=cls, batch_index=-1, sketch=sketch,
                     compute_dtype=cd, status=name)
             self.stats["deadline_exceeded"] += 1
+        return out
+
+    # -- λ-free ladder cache (DESIGN.md §13) -------------------------------
+    def _ladder_fingerprint(self, A, lam_diag, cls: ShapeClass,
+                            sketch: str, cd: str) -> str:
+        """Content identity of a slot's λ-free ladder: the data, the
+        regularizer GEOMETRY (Λ — not ν: the level Grams are λ-free), the
+        class shape/budget, the sketch family and the sketch-pass
+        precision. Everything that determines the (L, d, d) gram slice
+        given the fingerprint-derived slot key."""
+        import hashlib
+
+        import numpy as np
+
+        h = hashlib.sha1()
+        h.update(f"{cls.n}x{cls.d}x{cls.m_max}:{sketch}:{cd}:".encode())
+        h.update(np.ascontiguousarray(np.asarray(A)).tobytes())
+        h.update(b"|lam:")
+        if lam_diag is not None:
+            h.update(np.ascontiguousarray(np.asarray(lam_diag)).tobytes())
+        return h.hexdigest()
+
+    @staticmethod
+    def _fp_slot_id(fp: str) -> int:
+        """Sketch-key id for a fingerprinted slot (the cache invariant:
+        identical content ⇒ identical sketch). Bit 31 is cleared so the
+        id stream stays disjoint from the padded slots' reserved
+        top-of-range ids."""
+        return int(fp[:8], 16) & 0x7FFFFFFF
+
+    def _ladder_assets(self, cls: ShapeClass, fps: list[str], q, keys,
+                       sketch: str, cd: str):
+        """Serve a chunk's λ-free ladder through the fingerprint cache.
+
+        All real slots cached ⇒ assemble the (L, B, d, d) ladder and the
+        (B, d, d) true Gram from the stored per-slot slices — the chunk
+        SKIPS its sketch pass entirely (padded slots have A = 0 ⇒ zero
+        Grams). Any miss ⇒ run the one-touch pass ONCE for the whole
+        chunk (``prepare_path_ladder``) and cache the new slices.
+        Returns ``(grams, gram_full, skipped)``."""
+        import numpy as np
+
+        B = self.batch_size
+        L = len(doubling_ladder(cls.m_max))
+        hits = [fp in self._ladder_store for fp in fps]
+        if all(hits):
+            dt = np.dtype(np.asarray(q.b).dtype)
+            grams = np.zeros((L, B, cls.d, cls.d), dt)
+            gfull = np.zeros((B, cls.d, cls.d), dt)
+            for i, fp in enumerate(fps):
+                g, f = self._ladder_store[fp]
+                self._ladder_store.move_to_end(fp)
+                grams[:, i] = g
+                gfull[i] = f
+            self.stats["ladder_cache_hits"] += len(fps)
+            self.stats["sketch_passes_saved"] += 1
+            return jnp.asarray(grams), jnp.asarray(gfull), True
+        grams, gfull = prepare_path_ladder(
+            q, keys, m_max=cls.m_max, sketch=sketch, gram_hvp=True,
+            mesh=self.mesh, compute_dtype=cd)
+        gn, fn = np.asarray(grams), np.asarray(gfull)
+        for i, (fp, hit) in enumerate(zip(fps, hits)):
+            if hit:
+                self.stats["ladder_cache_hits"] += 1
+                self._ladder_store.move_to_end(fp)
+            else:
+                self.stats["ladder_cache_misses"] += 1
+                self._ladder_store[fp] = (gn[:, i].copy(), fn[i].copy())
+        while len(self._ladder_store) > self.ladder_cache_size:
+            self._ladder_store.popitem(last=False)
+        return grams, gfull, False
+
+    def _solve_path_chunk(self, cls: ShapeClass, reqs: list[PathRequest]):
+        """One packed λ-grid chunk: ONE shared λ-free ladder (from the
+        cache or one one-touch pass) + per-point warm-started robust
+        solves (``core.robust.robust_path_solve_batched``)."""
+        import numpy as np
+
+        P = len(reqs[0].nus)
+        sketch = cls.sketch or self.sketch
+        cd = cls.compute_dtype or self.compute_dtype
+        # ride the ridge packer: the packed ν is a placeholder (the path
+        # engine reads the (P, B) grid, never q.nu)
+        proxies = [RidgeRequest(req_id=r.req_id, A=r.A, y=r.y, nu=1.0,
+                                lam_diag=r.lam_diag, deadline=r.deadline)
+                   for r in reqs]
+        fps = None
+        if self.ladder_cache:
+            fps = [self._ladder_fingerprint(r.A, r.lam_diag, cls, sketch, cd)
+                   for r in reqs]
+            q, keys = self._pack(cls, proxies,
+                                 slot_ids=[self._fp_slot_id(f) for f in fps])
+        else:
+            q, keys = self._pack(cls, proxies)
+        nus = np.ones((P, self.batch_size),
+                      np.dtype(np.asarray(q.b).dtype))
+        for i, r in enumerate(reqs):
+            nus[:, i] = r.nus
+        grams = gfull = None
+        skipped = False
+        if self.ladder_cache:
+            grams, gfull, skipped = self._ladder_assets(
+                cls, fps, q, keys, sketch, cd)
+        t0 = time.perf_counter()
+        xs, stats = robust_path_solve_batched(
+            q, keys, jnp.asarray(nus), m_max=cls.m_max, method=self.method,
+            sketch=sketch, max_iters=self.max_iters, rho=self.rho,
+            tol=self.tol, mesh=self.mesh, max_retries=self.max_retries,
+            fallback=self.fallback, compute_dtype=cd,
+            grams=grams, gram_full=gfull)
+        xs = jax.block_until_ready(xs)
+        self.stats["solve_seconds"] += time.perf_counter() - t0
+        self.stats["batches"] += 1
+        self.stats["padded_slots"] += self.batch_size - len(reqs)
+        passes = int(stats["sketch_passes"]) - (1 if skipped else 0)
+        out = {}
+        for i, r in enumerate(reqs):
+            di = r.A.shape[1]
+            pts = []
+            for p in range(P):
+                self.stats["retries"] += int(stats["retries"][p, i])
+                self.stats["fallbacks"] += int(stats["fell_back"][p, i])
+                pts.append(PathPoint(
+                    nu=r.nus[p],
+                    x=xs[p, i, :di],
+                    delta_tilde=float(stats["dtilde"][p, i]),
+                    m_final=int(stats["m_final"][p, i]),
+                    iters=int(stats["iters"][p, i]),
+                    doublings=int(stats["doublings"][p, i]),
+                    status=status_name(stats["status"][p, i]),
+                    converged=bool(stats["converged"][p, i]),
+                    retries=int(stats["retries"][p, i]),
+                    fell_back=bool(stats["fell_back"][p, i]),
+                ))
+            bad = [pt for pt in pts if not pt.converged]
+            out[r.req_id] = PathSolution(
+                req_id=r.req_id, points=tuple(pts), shape_class=cls,
+                batch_index=i, sketch=sketch, compute_dtype=cd,
+                status=bad[0].status if bad else "OK",
+                converged=not bad, cache_hit=skipped,
+                sketch_passes=passes)
         return out
 
     def _solve_glm_chunk(self, cls: ShapeClass, family: str,
@@ -650,9 +965,19 @@ class SolverService:
 
     def _solve_chunk(self, cls: ShapeClass, reqs: list[RidgeRequest],
                      budget_s: float | None = None):
-        q, keys = self._pack(cls, reqs)
         sketch = cls.sketch or self.sketch
         cd = cls.compute_dtype or self.compute_dtype
+        grams = gfull = None
+        skipped = False
+        if self.ladder_cache:
+            fps = [self._ladder_fingerprint(r.A, r.lam_diag, cls, sketch, cd)
+                   for r in reqs]
+            q, keys = self._pack(cls, reqs,
+                                 slot_ids=[self._fp_slot_id(f) for f in fps])
+            grams, gfull, skipped = self._ladder_assets(
+                cls, fps, q, keys, sketch, cd)
+        else:
+            q, keys = self._pack(cls, reqs)
         t0 = time.perf_counter()
         # the robust driver = guarded engine + per-problem sketch-redraw
         # retries + direct_solve degradation; a quarantine-evading fault
@@ -674,7 +999,8 @@ class SolverService:
             q, keys, m_max=cls.m_max, method=self.method, sketch=sketch,
             max_iters=self.max_iters, rho=self.rho, tol=self.tol,
             mesh=self.mesh, max_retries=self.max_retries,
-            fallback=self.fallback, compute_dtype=cd, **seg_kwargs)
+            fallback=self.fallback, compute_dtype=cd,
+            grams=grams, gram_full=gfull, **seg_kwargs)
         x = jax.block_until_ready(x)
         self.stats["solve_seconds"] += time.perf_counter() - t0
         self.stats["batches"] += 1
@@ -704,6 +1030,7 @@ class SolverService:
                 stalled=bool(stats["stalled"][i]),
                 retries=int(stats["retries"][i]),
                 fell_back=bool(stats["fell_back"][i]),
+                cache_hit=skipped,
             )
         return out
 

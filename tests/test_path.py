@@ -1,0 +1,317 @@
+"""Regularization-path engine (DESIGN.md §13): the whole λ grid off ONE
+one-touch sketch pass.
+
+Covers the acceptance surface of the path mode end to end:
+
+* per-λ path solutions match INDEPENDENT single-λ engine solves to ≤1e-5
+  with valid δ̃ certificates, across all four sketch families — including
+  the SJLT non-power-of-two ladder cap (m_max=48);
+* fp32 path mode is BITWISE-compatible with a loop of single-λ solves at
+  a fixed init level (warm start off), both against the shared ladder
+  handed in via ``grams=`` and against fully-inline solves that recompute
+  it (same keys ⇒ same sketch ⇒ same ladder);
+* warm-started level trajectories are monotone along a strong→weak grid;
+* the robust wrapper keeps per-point statuses truthful on clean traffic
+  and still pays exactly one sketch pass;
+* the serving surface: ``submit_path`` certificates, the fingerprint
+  ladder cache (cache_hit / sketch_passes=0 / bitwise-identical repeat
+  answers, shared between ridge and path traffic), grid validation;
+* a forced-8-device SUBPROCESS case (the test_sharded.py pattern):
+  sharded path vs replicated path vs direct solves.
+"""
+
+import dataclasses
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.adaptive_padded import (
+    padded_adaptive_solve_batched,
+    padded_path_solve_batched,
+    prepare_path_ladder,
+)
+from repro.core.quadratic import direct_solve, from_least_squares_batch
+from repro.core.robust import robust_path_solve_batched
+from repro.core.status import SolveStatus
+from repro.serve.solver_service import PathSolution, SolverService
+
+
+def _problem(B, n, d, seed=0):
+    A = jax.random.normal(jax.random.PRNGKey(seed), (B, n, d)) / np.sqrt(n)
+    Y = jax.random.normal(jax.random.PRNGKey(seed + 1), (B, n))
+    q = from_least_squares_batch(A, Y, jnp.full((B,), 1.0, jnp.float32))
+    keys = jax.random.split(jax.random.PRNGKey(42), B)
+    return q, keys
+
+
+def _rel(a, b):
+    return float(jnp.max(jnp.linalg.norm(a - b, axis=-1)
+                         / (jnp.linalg.norm(b, axis=-1) + 1e-30)))
+
+
+def _q_at(q, nu):
+    return dataclasses.replace(q, nu=jnp.full((q.batch,), nu, q.b.dtype))
+
+
+def _run_subprocess(code: str) -> str:
+    import os
+    from pathlib import Path
+
+    root = Path(__file__).resolve().parents[1]
+    env = {**os.environ,
+           "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+           "PYTHONPATH": str(root / "src")}
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, env=env,
+                       cwd=str(root), timeout=600)
+    assert r.returncode == 0, f"stderr:\n{r.stderr[-3000:]}"
+    return r.stdout
+
+
+# ---------------------------------------------------------------------------
+# engine: path vs independent single-λ solves, every family
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family,m_max", [
+    ("gaussian", 64),
+    ("gaussian_dense", 64),
+    ("sjlt", 64),
+    ("srht", 64),
+    ("sjlt", 48),        # non-power-of-two ladder cap: [... 32, 48]
+])
+def test_path_matches_independent_single_lambda(family, m_max):
+    """Each λ point of the path matches an INDEPENDENT single-λ engine
+    solve of the same problem to ≤1e-5, with finite converged δ̃
+    certificates — and the whole grid paid exactly one sketch pass.
+    Both sides anchor at the m=d ladder level (init_level=4 ⇒ m=16) so
+    the comparison is two deeply-converged solves, not the cold level-0
+    certificate corner."""
+    B, n, d, P = 3, 1024, 16, 8
+    q, keys = _problem(B, n, d)
+    nus = jnp.asarray(np.geomspace(1.0, 1e-2, P), jnp.float32)
+    lvl = jnp.full((B,), 4, jnp.int32)
+    kw = dict(m_max=m_max, method="pcg", sketch=family, max_iters=200,
+              tol=1e-12)
+
+    xs, stats = padded_path_solve_batched(q, keys, nus, init_level=lvl, **kw)
+    assert stats["sketch_passes"] == 1
+    dt = np.asarray(stats["dtilde"])
+    assert np.all(np.isfinite(dt)) and dt.max() <= 1e-9, dt.max()
+
+    for p in range(P):
+        q_p = _q_at(q, float(nus[p]))
+        x_ref, _ = padded_adaptive_solve_batched(q_p, keys, init_level=lvl,
+                                                 **kw)
+        assert _rel(xs[p], x_ref) <= 1e-5, (p, _rel(xs[p], x_ref))
+        # absolute anchor (loose at weak λ: x-gap scales like √(δ̃/ν²))
+        assert _rel(xs[p], direct_solve(q_p)) <= 1e-3, p
+
+
+def test_warm_start_level_trajectories_monotone():
+    """Warm-starting the per-problem sketch level means a grid walked
+    strong→weak never re-climbs the ladder: level trajectories are
+    monotone non-decreasing along the path."""
+    B, n, d, m_max, P = 3, 1024, 16, 64, 8
+    q, keys = _problem(B, n, d)
+    nus = jnp.asarray(np.geomspace(1.0, 1e-2, P), jnp.float32)
+    _, stats = padded_path_solve_batched(
+        q, keys, nus, m_max=m_max, method="pcg", max_iters=200, tol=1e-12)
+    lv = np.asarray(stats["level"])
+    assert lv.shape == (P, B)
+    assert np.all(np.diff(lv, axis=0) >= 0), lv
+
+
+def test_path_bitwise_matches_looped_single_lambda_fp32():
+    """fp32 path mode with warm start OFF is bit-identical to a per-λ
+    loop of single-λ solves at the same fixed init level — both when the
+    loop is handed the shared λ-free ladder (``grams=``) and when each
+    loop point recomputes it inline (same keys ⇒ same sketch ⇒ the same
+    ladder, bit for bit)."""
+    B, n, d, m_max, P = 3, 512, 16, 32, 5
+    q, _ = _problem(B, n, d, seed=10)
+    keys = jax.random.split(jax.random.PRNGKey(3), B)
+    nus = jnp.asarray(np.geomspace(1.0, 1e-2, P), jnp.float32)
+    lvl = jnp.full((B,), 3, jnp.int32)
+    kw = dict(m_max=m_max, method="pcg", sketch="gaussian", max_iters=200,
+              tol=1e-12)
+
+    xs, _ = padded_path_solve_batched(q, keys, nus, init_level=lvl,
+                                      warm_start=False, **kw)
+    grams, gfull = prepare_path_ladder(q, keys, m_max=m_max,
+                                       sketch="gaussian")
+    for p in range(P):
+        q_p = _q_at(q, float(nus[p]))
+        x_shared, _ = padded_adaptive_solve_batched(
+            q_p, keys, init_level=lvl, grams=grams, gram_full=gfull, **kw)
+        x_inline, _ = padded_adaptive_solve_batched(
+            q_p, keys, init_level=lvl, **kw)
+        assert np.array_equal(np.asarray(xs[p]), np.asarray(x_shared)), p
+        assert np.array_equal(np.asarray(xs[p]), np.asarray(x_inline)), p
+
+
+def test_robust_path_clean_traffic():
+    """The robust wrapper on clean data: every point OK/converged, zero
+    retries, zero fallbacks — and still exactly one sketch pass for the
+    whole grid."""
+    B, n, d, m_max, P = 3, 512, 16, 32, 4
+    q, keys = _problem(B, n, d, seed=5)
+    nus = jnp.asarray(np.geomspace(1.0, 0.05, P), jnp.float32)
+    xs, stats = robust_path_solve_batched(
+        q, keys, nus, m_max=m_max, method="pcg", max_iters=200, tol=1e-10)
+    assert int(stats["sketch_passes"]) == 1
+    assert xs.shape == (P, B, d)
+    assert np.all(np.asarray(stats["status"]) == SolveStatus.OK.value)
+    assert np.all(np.asarray(stats["converged"]))
+    assert np.all(np.asarray(stats["retries"]) == 0)
+    assert not np.any(np.asarray(stats["fell_back"]))
+
+
+# ---------------------------------------------------------------------------
+# service: submit_path certificates, the fingerprint ladder cache
+# ---------------------------------------------------------------------------
+
+def _ridge_data(n, d, seed):
+    A = np.asarray(jax.random.normal(jax.random.PRNGKey(seed),
+                                     (n, d))) / np.sqrt(n)
+    y = np.asarray(jax.random.normal(jax.random.PRNGKey(seed + 1), (n,)))
+    return A, y
+
+
+def test_service_path_certificates():
+    """submit_path → flush returns per-λ PathPoints carrying the full
+    certificate surface, solutions agree with direct solves, and one
+    packed chunk pays one sketch pass for every grid in it."""
+    svc = SolverService(batch_size=4, tol=1e-10)
+    nus = tuple(np.geomspace(1.0, 0.05, 6))
+    rids = []
+    for i in range(3):
+        A, y = _ridge_data(256, 32, seed=100 + 2 * i)
+        rids.append(svc.submit_path(A, y, nus))
+    sols = svc.flush()
+    assert svc.stats["path_requests"] == 3
+    for i, rid in enumerate(rids):
+        sol = sols[rid]
+        assert isinstance(sol, PathSolution)
+        assert sol.status == "OK" and sol.converged
+        assert sol.sketch_passes == 1 and not sol.cache_hit
+        assert len(sol.points) == 6
+        A, y = _ridge_data(256, 32, seed=100 + 2 * i)
+        for pt in sol.points:
+            assert pt.converged and np.isfinite(pt.delta_tilde)
+            x_ref = np.linalg.solve(
+                A.T @ A + pt.nu ** 2 * np.eye(32), A.T @ y)
+            rel = (np.linalg.norm(np.asarray(pt.x) - x_ref)
+                   / np.linalg.norm(x_ref))
+            assert rel <= 1e-4, (rid, pt.nu, rel)
+
+
+def test_service_ladder_cache_repeat_path():
+    """Repeat-identical path traffic under ``ladder_cache=True``: the
+    second submit of the same (A, y, grid) is served off the cached
+    λ-free ladder — cache_hit=True, sketch_passes=0, and (because slot
+    sketch keys derive from the content fingerprint) the answers are
+    BITWISE identical to the first round."""
+    svc = SolverService(batch_size=4, tol=1e-10, ladder_cache=True)
+    A, y = _ridge_data(256, 32, seed=7)
+    nus = tuple(np.geomspace(1.0, 0.05, 5))
+
+    rid1 = svc.submit_path(A, y, nus)
+    cold = svc.flush()[rid1]
+    assert not cold.cache_hit and cold.sketch_passes == 1
+
+    rid2 = svc.submit_path(A, y, nus)
+    warm = svc.flush()[rid2]
+    assert warm.cache_hit and warm.sketch_passes == 0
+    assert warm.converged
+    assert svc.stats["sketch_passes_saved"] >= 1
+    for p_cold, p_warm in zip(cold.points, warm.points):
+        assert np.array_equal(np.asarray(p_cold.x), np.asarray(p_warm.x))
+        assert p_cold.delta_tilde == p_warm.delta_tilde
+
+
+def test_service_ladder_cache_shared_with_ridge():
+    """The fingerprint is λ-FREE, so ridge traffic on data a path request
+    already sketched hits the same cache entry: the single-λ solve skips
+    its sketch pass and records cache_hit on its RidgeSolution."""
+    svc = SolverService(batch_size=4, tol=1e-10, ladder_cache=True)
+    A, y = _ridge_data(256, 32, seed=11)
+    svc.flush()  # no-op on empty queues
+    rid_path = svc.submit_path(A, y, tuple(np.geomspace(1.0, 0.1, 4)))
+    assert svc.flush()[rid_path].sketch_passes == 1
+
+    rid_ridge = svc.submit(A, y, nu=0.3)
+    sol = svc.flush()[rid_ridge]
+    assert sol.cache_hit and sol.converged
+    x_ref = np.linalg.solve(A.T @ A + 0.3 ** 2 * np.eye(32), A.T @ y)
+    rel = np.linalg.norm(np.asarray(sol.x) - x_ref) / np.linalg.norm(x_ref)
+    assert rel <= 1e-4, rel
+
+
+def test_service_path_grid_validation():
+    """Admission validates EVERY grid point's ν: strict mode raises on a
+    ν=0 anywhere in the grid, lenient mode quarantines the request and
+    returns a REJECTED PathSolution (sketch_passes=0) at flush; an empty
+    grid always raises."""
+    A, y = _ridge_data(256, 32, seed=13)
+    strict = SolverService(batch_size=4)
+    with pytest.raises(ValueError):
+        strict.submit_path(A, y, (1.0, 0.0, 0.1))
+    with pytest.raises(ValueError):
+        strict.submit_path(A, y, ())
+
+    lenient = SolverService(batch_size=4, strict=False)
+    rid = lenient.submit_path(A, y, (1.0, 0.0, 0.1))
+    sol = lenient.flush()[rid]
+    assert sol.status == SolveStatus.REJECTED.name
+    assert not sol.converged and sol.sketch_passes == 0
+    assert all(p.status == SolveStatus.REJECTED.name for p in sol.points)
+
+
+# ---------------------------------------------------------------------------
+# sharded path (forced 8 devices, subprocess)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_sharded_path_matches_replicated():
+    """The path engine on a K=8 mesh: the same per-shard one-touch pass +
+    ONE psum serves the entire grid (sketch_passes=1), and every λ point
+    agrees with the replicated path (different sketch law, same optimum)
+    to ≤1e-5 and with direct solves to ≤1e-4."""
+    out = _run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np, dataclasses
+        from repro.core.adaptive_padded import padded_path_solve_batched
+        from repro.core.quadratic import direct_solve, \\
+            from_least_squares_batch
+
+        mesh = jax.make_mesh((8,), ("data",))
+        B, n, d, m_max, P = 3, 1024, 16, 64, 4
+        A = jax.random.normal(jax.random.PRNGKey(0), (B, n, d)) / np.sqrt(n)
+        Y = jax.random.normal(jax.random.PRNGKey(1), (B, n))
+        q = from_least_squares_batch(A, Y, jnp.full((B,), 1.0, jnp.float32))
+        keys = jax.random.split(jax.random.PRNGKey(42), B)
+        nus = jnp.asarray(np.geomspace(1.0, 0.1, P), jnp.float32)
+        kw = dict(m_max=m_max, method="pcg", sketch="gaussian",
+                  max_iters=200, tol=1e-12)
+
+        xs_sh, st_sh = padded_path_solve_batched(q, keys, nus, mesh=mesh,
+                                                 **kw)
+        xs_1, _ = padded_path_solve_batched(q, keys, nus, **kw)
+        assert st_sh["sketch_passes"] == 1
+        dt = np.asarray(st_sh["dtilde"])
+        assert np.all(np.isfinite(dt)) and dt.max() <= 1e-9, dt.max()
+        rel = lambda a, b: float(jnp.max(
+            jnp.linalg.norm(a - b, axis=-1)
+            / (jnp.linalg.norm(b, axis=-1) + 1e-30)))
+        for p in range(P):
+            q_p = dataclasses.replace(
+                q, nu=jnp.full((B,), float(nus[p]), jnp.float32))
+            assert rel(xs_sh[p], xs_1[p]) <= 1e-5, p
+            assert rel(xs_sh[p], direct_solve(q_p)) <= 1e-4, p
+        print("PATH_SHARDED_OK")
+    """)
+    assert "PATH_SHARDED_OK" in out
